@@ -1,0 +1,85 @@
+"""Shared benchmark utilities: metrics, a compact trainer, timing."""
+from __future__ import annotations
+
+import time
+
+import numpy as np
+
+import jax
+import jax.numpy as jnp
+
+from repro import optim
+from repro.core.fields import uniform_layout
+from repro.data.synthetic_ctr import SyntheticCTR
+from repro.models.recsys import fwfm
+
+
+def auc(labels: np.ndarray, scores: np.ndarray) -> float:
+    """Rank-based AUC (ties handled by average rank)."""
+    labels = np.asarray(labels)
+    order = np.argsort(scores, kind="mergesort")
+    ranks = np.empty_like(order, dtype=np.float64)
+    ranks[order] = np.arange(1, len(scores) + 1)
+    # average ranks for ties
+    s_sorted = np.asarray(scores)[order]
+    i = 0
+    while i < len(s_sorted):
+        j = i
+        while j + 1 < len(s_sorted) and s_sorted[j + 1] == s_sorted[i]:
+            j += 1
+        if j > i:
+            ranks[order[i:j + 1]] = ranks[order[i:j + 1]].mean()
+        i = j + 1
+    n_pos = labels.sum()
+    n_neg = len(labels) - n_pos
+    if n_pos == 0 or n_neg == 0:
+        return 0.5
+    return float((ranks[labels > 0].sum() - n_pos * (n_pos + 1) / 2)
+                 / (n_pos * n_neg))
+
+
+def logloss(labels: np.ndarray, logits: np.ndarray) -> float:
+    z = np.asarray(logits, np.float64)
+    y = np.asarray(labels, np.float64)
+    return float(np.mean(np.maximum(z, 0) - z * y + np.log1p(np.exp(-np.abs(z)))))
+
+
+def train_fwfm_variant(cfg, data: SyntheticCTR, steps: int = 400,
+                       batch: int = 1024, lr: float = 0.1, seed: int = 0):
+    """Train one FwFM-family variant on the synthetic stream; returns params."""
+    params = fwfm.init(jax.random.PRNGKey(seed), cfg)
+    opt = optim.adagrad()
+    state = opt.init(params)
+
+    @jax.jit
+    def step_fn(params, state, b):
+        loss, g = jax.value_and_grad(fwfm.loss)(params, cfg, b)
+        params, state = opt.update(g, state, params, lr)
+        return params, state, loss
+
+    for s in range(steps):
+        b = {k: jnp.asarray(v) for k, v in data.batch(batch, s).items()}
+        params, state, _ = step_fn(params, state, b)
+    return params
+
+
+def evaluate_fwfm(params, cfg, data: SyntheticCTR, pruned_mask=None,
+                  n: int = 20000, seed: int = 10**6):
+    b = data.batch(n, seed)
+    logits = np.asarray(fwfm.apply(
+        params, cfg, {k: jnp.asarray(v) for k, v in b.items()},
+        pruned_mask=pruned_mask))
+    return auc(b["label"], logits), logloss(b["label"], logits)
+
+
+def time_fn(fn, *args, repeats: int = 30, warmup: int = 3) -> tuple[float, float]:
+    """(mean_us, p95_us) per call, blocking on results."""
+    for _ in range(warmup):
+        jax.block_until_ready(fn(*args))
+    ts = []
+    for _ in range(repeats):
+        t0 = time.perf_counter()
+        jax.block_until_ready(fn(*args))
+        ts.append((time.perf_counter() - t0) * 1e6)
+    ts = np.asarray(ts)
+    return float(ts.mean()), float(np.percentile(ts, 95))

@@ -1,0 +1,85 @@
+"""Figure 1 reproduction: synthetic per-auction scoring latency for DPLR
+ranks vs equivalently-pruned FwFM vs full FwFM, across auction sizes and
+context-field counts (40 fields, Criteo-style, per the paper).
+
+The paper's measurement is CPU (Cython); here each scorer is the jitted
+JAX serving path with cached context — the claim under test is the
+ORDERING (DPLR < pruned < full FwFM per item) and the context-field
+invariance of DPLR's per-item cost.  The Pallas kernels provide the
+TPU-targeted implementations (timed in interpret mode only, so reported
+separately — interpret timings are not hardware-representative).
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+
+import numpy as np
+
+import jax
+import jax.numpy as jnp
+
+from benchmarks._common import time_fn
+from repro.core.fields import uniform_layout
+from repro.core.pruning import prune_matched
+from repro.data.synthetic_ctr import SyntheticCTR
+from repro.models.recsys import fwfm
+
+
+def run(quick: bool = False):
+    m = 40
+    k = 16
+    auction_sizes = [128, 1024] if quick else [128, 512, 2048, 8192]
+    ctx_counts = [20, 30] if quick else [10, 20, 30]
+    ranks = [1, 3]
+    repeats = 10 if quick else 30
+
+    rows = []
+    for n_ctx in ctx_counts:
+        layout = uniform_layout(n_ctx, m - n_ctx, 1000)
+        data = SyntheticCTR(layout, embed_dim=k, seed=0)
+        for n_items in auction_sizes:
+            q = {kk: jnp.asarray(v) for kk, v in
+                 data.ranking_query(n_items, seed=1).items()}
+
+            # full FwFM
+            cfg_f = fwfm.FwFMConfig(layout=layout, embed_dim=k,
+                                    interaction="fwfm")
+            pf = fwfm.init(jax.random.PRNGKey(0), cfg_f)
+            fn_full = jax.jit(lambda p, q: fwfm.rank_items(p, cfg_f, q))
+            t_full, _ = time_fn(fn_full, pf, q, repeats=repeats)
+            rows.append(dict(model="fwfm", rank=0, n_ctx=n_ctx,
+                             n_items=n_items, us=t_full))
+
+            R = fwfm.field_matrix(pf, cfg_f)
+            for rank in ranks:
+                cfg_d = dataclasses.replace(cfg_f, interaction="dplr",
+                                            rank=rank)
+                pd = fwfm.init(jax.random.PRNGKey(1), cfg_d)
+                fn_d = jax.jit(lambda p, q: fwfm.rank_items(p, cfg_d, q))
+                t_d, _ = time_fn(fn_d, pd, q, repeats=repeats)
+                rows.append(dict(model="dplr", rank=rank, n_ctx=n_ctx,
+                                 n_items=n_items, us=t_d))
+
+                pruned = prune_matched(R, m, rank)
+
+                def fn_p(p, q, pruned=pruned):
+                    return fwfm.rank_items(p, cfg_f, q, pruned=pruned)
+
+                t_p, _ = time_fn(jax.jit(fn_p), pf, q, repeats=repeats)
+                rows.append(dict(model="pruned", rank=rank, n_ctx=n_ctx,
+                                 n_items=n_items, us=t_p))
+    return rows
+
+
+def main(quick: bool = False):
+    rows = run(quick=quick)
+    print("fig1: model | rank | n_ctx | auction | us_per_auction")
+    for r in rows:
+        print(f"fig1: {r['model']:6s} | {r['rank']} | {r['n_ctx']:2d} | "
+              f"{r['n_items']:5d} | {r['us']:10.1f}")
+    return rows
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,51 @@
+"""Benchmark driver: one module per paper table/figure + the roofline
+report.  ``python -m benchmarks.run [--quick]`` prints one CSV-ish line per
+measurement (prefix identifies the table).
+"""
+from __future__ import annotations
+
+import argparse
+import time
+import traceback
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--quick", action="store_true",
+                    help="reduced sizes/steps (CI mode)")
+    ap.add_argument("--only", default=None,
+                    help="run a single benchmark module by name")
+    args = ap.parse_args()
+
+    from benchmarks import (fig1_latency, fig2_posthoc, roofline,
+                            table1_accuracy, table2_proprietary,
+                            table3_serving)
+
+    modules = {
+        "table1": table1_accuracy,
+        "table2": table2_proprietary,
+        "table3": table3_serving,
+        "fig1": fig1_latency,
+        "fig2": fig2_posthoc,
+        "roofline": roofline,
+    }
+    if args.only:
+        modules = {args.only: modules[args.only]}
+
+    failures = 0
+    for name, mod in modules.items():
+        t0 = time.time()
+        print(f"== {name} ==", flush=True)
+        try:
+            mod.main(quick=args.quick)
+            print(f"== {name} done in {time.time() - t0:.1f}s ==", flush=True)
+        except Exception:
+            failures += 1
+            print(f"== {name} FAILED ==")
+            traceback.print_exc()
+    if failures:
+        raise SystemExit(1)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,55 @@
+"""PNA minibatch training with the real neighbor sampler (GraphSAGE-style
+fanout sampling) on a synthetic power-law graph.
+
+    PYTHONPATH=src python examples/gnn_train.py [--steps 100]
+"""
+import argparse
+
+import numpy as np
+
+import jax
+import jax.numpy as jnp
+
+from repro import optim
+from repro.models.gnn import pna, sampler
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--steps", type=int, default=100)
+    ap.add_argument("--nodes", type=int, default=20000)
+    ap.add_argument("--batch-nodes", type=int, default=128)
+    args = ap.parse_args()
+
+    rng = np.random.default_rng(0)
+    g = sampler.random_graph(rng, args.nodes, avg_degree=10, d_feat=32,
+                             n_classes=8)
+    # plant signal: label = argmax of a linear map of features
+    W = rng.standard_normal((32, 8)).astype(np.float32)
+    g.labels = (g.node_feat @ W).argmax(1).astype(np.int32)
+
+    cfg = pna.PNAConfig(d_feat=32, d_hidden=48, n_layers=2, n_classes=8)
+    params = pna.init(jax.random.PRNGKey(0), cfg)
+    opt = optim.adamw()
+    state = opt.init(params)
+
+    @jax.jit
+    def step_fn(params, state, batch):
+        loss, grads = jax.value_and_grad(pna.loss)(params, cfg, batch)
+        params, state = opt.update(grads, state, params, 1e-3)
+        return params, state, loss
+
+    for s in range(args.steps):
+        seeds = rng.integers(0, args.nodes, args.batch_nodes)
+        sub = sampler.sample_subgraph(g, seeds, (10, 5), rng)
+        batch = {k: jnp.asarray(v) for k, v in sub.items()}
+        params, state, loss = step_fn(params, state, batch)
+        if (s + 1) % 20 == 0:
+            logits = pna.forward(params, cfg, batch)
+            acc = float((logits.argmax(-1) == batch["labels"])[
+                batch["label_mask"] > 0].mean())
+            print(f"step {s+1:4d}  loss {float(loss):.4f}  seed-acc {acc:.3f}")
+
+
+if __name__ == "__main__":
+    main()

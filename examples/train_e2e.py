@@ -1,0 +1,93 @@
+"""End-to-end driver: train a ~100M-parameter DPLR-FwFM for a few hundred
+steps on the synthetic CTR stream, with the full production substrate —
+prefetching pipeline, Adagrad, async fault-tolerant checkpointing, eval.
+
+~100M params: 5.9M-row embedding arena x (16-dim embedding + 1 first-order
+weight) ~= 100M, the paper's CTR geometry (82 fields, 44 context / 38 item).
+
+    PYTHONPATH=src python examples/train_e2e.py [--steps 300]
+"""
+import argparse
+import time
+
+import numpy as np
+
+import jax
+import jax.numpy as jnp
+
+from repro import optim
+from repro.checkpoint import CheckpointManager
+from repro.core.fields import uniform_layout
+from repro.data.pipeline import ShardedPipeline
+from repro.data.synthetic_ctr import SyntheticCTR
+from repro.models.recsys import fwfm
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--steps", type=int, default=300)
+    ap.add_argument("--batch", type=int, default=2048)
+    ap.add_argument("--ckpt-dir", default="/tmp/repro_e2e_ckpt")
+    ap.add_argument("--resume", action="store_true")
+    args = ap.parse_args()
+
+    # 82 fields; big id fields push the arena to ~5.9M rows -> ~100M params
+    vocabs = [2_000_000, 1_000_000] + [500_000] * 4 + [50_000] * 8 + \
+             [1_000] * 34 + [100] * 34
+    layout = uniform_layout(44, 38, vocabs)
+    cfg = fwfm.FwFMConfig(layout=layout, embed_dim=16, interaction="dplr",
+                          rank=3)
+    params = fwfm.init(jax.random.PRNGKey(0), cfg)
+    n_params = sum(int(np.prod(p.shape)) for p in jax.tree.leaves(params))
+    print(f"model: {n_params/1e6:.1f}M parameters "
+          f"({layout.total_vocab/1e6:.1f}M arena rows, 82 fields)")
+
+    data = SyntheticCTR(layout, embed_dim=4, teacher_rank=3, noise_scale=0.3,
+                        zipf_alpha=1.3, seed=0)
+    opt = optim.adagrad()
+    state = opt.init(params)
+    mgr = CheckpointManager(args.ckpt_dir, keep=2)
+    start = 0
+    if args.resume:
+        restored, step0 = mgr.restore({"params": params, "opt": state})
+        if restored:
+            params, state, start = restored["params"], restored["opt"], step0
+            print(f"resumed from step {step0}")
+
+    @jax.jit
+    def step_fn(params, state, b):
+        loss, g = jax.value_and_grad(fwfm.loss)(params, cfg, b)
+        params, state = opt.update(g, state, params, 0.05)
+        return params, state, loss
+
+    pipe = ShardedPipeline(lambda s: data.batch(args.batch, s),
+                           prefetch=2).start(from_step=start)
+    t0 = time.time()
+    try:
+        for s in range(start, args.steps):
+            _, b = pipe.get()
+            params, state, loss = step_fn(
+                params, state, {k: jnp.asarray(v) for k, v in b.items()})
+            if (s + 1) % 50 == 0:
+                rate = args.batch * (s + 1 - start) / (time.time() - t0)
+                print(f"step {s+1:4d}  loss {float(loss):.4f}  "
+                      f"{rate/1e3:.1f}k rows/s")
+                mgr.save({"params": params, "opt": state}, s + 1)
+    finally:
+        pipe.stop()
+        mgr.wait()
+
+    # eval
+    ev = data.batch(20000, 10**6)
+    logits = np.asarray(fwfm.apply(params, cfg,
+                                   {k: jnp.asarray(v) for k, v in ev.items()}))
+    order = np.argsort(logits)
+    ranks = np.empty(len(logits)); ranks[order] = np.arange(1, len(logits) + 1)
+    pos = ev["label"] > 0
+    auc = ((ranks[pos].sum() - pos.sum() * (pos.sum() + 1) / 2)
+           / (pos.sum() * (~pos).sum()))
+    print(f"eval AUC: {auc:.4f}")
+
+
+if __name__ == "__main__":
+    main()

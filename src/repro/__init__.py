@@ -1,0 +1,17 @@
+"""repro: production-grade JAX framework reproducing DPLR-FwFM (Shtoff et al. 2024).
+
+Layout:
+  repro.core       - the paper's contribution (DPLR decomposition, interactions,
+                     context-cached ranking)
+  repro.embedding  - embedding-bag substrate (JAX has no native EmbeddingBag)
+  repro.models     - assigned architectures (recsys / transformer / gnn)
+  repro.data       - synthetic data pipelines
+  repro.optim      - optimizers, schedules, grad compression
+  repro.checkpoint - fault-tolerant checkpointing
+  repro.sharding   - mesh + sharding rules
+  repro.kernels    - Pallas TPU kernels (ops.py wrappers, ref.py oracles)
+  repro.configs    - one module per assigned architecture
+  repro.launch     - mesh / dryrun / train / serve entry points
+"""
+
+__version__ = "1.0.0"

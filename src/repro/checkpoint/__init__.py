@@ -1,0 +1,3 @@
+from repro.checkpoint.manager import (  # noqa: F401
+    CheckpointManager, save_pytree, restore_pytree,
+)

@@ -1,0 +1,20 @@
+"""Architecture registry: one module per assigned arch (+ the paper's own).
+
+Importing this package populates ``REGISTRY``; use ``get(name)``.
+"""
+from repro.configs.registry import REGISTRY, get, ArchSpec, ShapeSpec  # noqa: F401
+
+# one module per assigned architecture — import order is registration order
+from repro.configs import (  # noqa: F401,E402
+    starcoder2_7b,
+    yi_9b,
+    gemma3_1b,
+    granite_moe_1b_a400m,
+    mixtral_8x7b,
+    pna,
+    mind,
+    autoint,
+    bst,
+    wide_deep,
+    dplr_fwfm,
+)

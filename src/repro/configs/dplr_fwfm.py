@@ -1,0 +1,47 @@
+"""dplr-fwfm — the PAPER'S OWN architecture (extra, beyond the 10 assigned):
+FwFM-family CTR model with the DPLR field-interaction decomposition.
+
+Sized from the paper's proprietary deployment (Section 5.3): 82 fields
+(44 context / 38 item — the latency experiment reports 38 item fields),
+embed_dim k=16, rank rho=3 (the deployed rank).  Arena ~3.3e7 rows.
+
+Every shape cell runs the paper's serving algorithm: ``rank`` cells use
+Algorithm 1 (context cached once, O(rho |I| k) per item).
+"""
+import dataclasses
+
+from repro.configs._recsys_common import smoke_layout, tiered_layout
+from repro.configs.registry import RECSYS_SHAPES, ArchSpec, register
+from repro.models.recsys.fwfm import FwFMConfig
+
+
+def make_layout():
+    return tiered_layout(
+        context_tiers=[(1, 10_000_000), (5, 1_000_000), (15, 100_000),
+                       (23, 1_000)],   # 44 context fields
+        item_tiers=[(1, 10_000_000), (5, 1_000_000), (15, 100_000),
+                    (17, 1_000)],      # 38 item fields
+    )
+
+
+def make_config() -> FwFMConfig:
+    return FwFMConfig(layout=make_layout(), embed_dim=16, interaction="dplr",
+                      rank=3)
+
+
+def make_smoke() -> FwFMConfig:
+    return FwFMConfig(layout=smoke_layout(7, 5), embed_dim=8,
+                      interaction="dplr", rank=2)
+
+
+def make_fwfm_baseline() -> FwFMConfig:
+    """Full-FwFM baseline (the O(m^2 k) model the paper starts from)."""
+    return dataclasses.replace(make_config(), interaction="fwfm")
+
+
+ARCH = register(ArchSpec(
+    name="dplr-fwfm", family="recsys",
+    make_config=make_config, make_smoke=make_smoke,
+    shapes=RECSYS_SHAPES,
+    notes="the paper's own model; 'fwfm'/'fm' interactions are the baselines",
+))

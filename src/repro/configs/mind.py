@@ -1,0 +1,43 @@
+"""mind [arXiv:1904.08030]: embed_dim=64, n_interests=4, capsule_iters=3,
+multi-interest dynamic-routing retrieval.
+
+Layout: 4 small context fields + 1 item field (5e7 ids, Tmall-scale);
+history length 50.  retrieval_cand (1 query x 1e6 candidates) is MIND's
+native serving shape: interests extracted once, candidates scored by
+max-over-interests dot products.
+"""
+from repro.configs.registry import RECSYS_SHAPES, ArchSpec, register
+from repro.core.fields import CONTEXT, ITEM, FieldSpec, FeatureLayout
+from repro.models.recsys.mind import MINDConfig
+
+
+def make_layout():
+    ctx = [
+        FieldSpec("age", 10, CONTEXT),
+        FieldSpec("gender", 3, CONTEXT),
+        FieldSpec("city", 1_000, CONTEXT),
+        FieldSpec("device", 100, CONTEXT),
+    ]
+    item = [FieldSpec("item_id", 50_000_000, ITEM)]
+    return FeatureLayout(tuple(ctx + item))
+
+
+def make_config() -> MINDConfig:
+    return MINDConfig(layout=make_layout(), embed_dim=64, n_interests=4,
+                      capsule_iters=3, seq_len=50)
+
+
+def make_smoke() -> MINDConfig:
+    fields = tuple(
+        [FieldSpec(f"c{i}", 16, CONTEXT) for i in range(2)]
+        + [FieldSpec("item", 256, ITEM)]
+    )
+    return MINDConfig(layout=FeatureLayout(fields), embed_dim=16,
+                      n_interests=3, capsule_iters=3, seq_len=8, n_neg=4)
+
+
+ARCH = register(ArchSpec(
+    name="mind", family="recsys",
+    make_config=make_config, make_smoke=make_smoke,
+    shapes=RECSYS_SHAPES,
+))

@@ -1,0 +1,66 @@
+"""Arch/shape registry used by smoke tests, the dry-run, and benchmarks."""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable
+
+
+@dataclasses.dataclass(frozen=True)
+class ShapeSpec:
+    """One (input-shape) cell for an architecture.
+
+    kind:
+      lm:     train | prefill | decode
+      recsys: train | rank | pointwise
+      gnn:    graph (always a train step)
+    """
+
+    name: str
+    kind: str
+    dims: dict
+    skip: str | None = None      # reason when the cell is N/A for this arch
+
+
+@dataclasses.dataclass(frozen=True)
+class ArchSpec:
+    name: str
+    family: str                   # lm | recsys | gnn
+    make_config: Callable[[], Any]
+    make_smoke: Callable[[], Any]
+    shapes: tuple[ShapeSpec, ...]
+    notes: str = ""
+
+
+REGISTRY: dict[str, ArchSpec] = {}
+
+
+def register(spec: ArchSpec) -> ArchSpec:
+    assert spec.name not in REGISTRY, spec.name
+    REGISTRY[spec.name] = spec
+    return spec
+
+
+def get(name: str) -> ArchSpec:
+    return REGISTRY[name]
+
+
+# ---------------------------------------------------------------------------
+# Shared per-family shape sets (dims merged with per-arch skips).
+# ---------------------------------------------------------------------------
+
+def lm_shapes(long_ctx_skip: str | None) -> tuple[ShapeSpec, ...]:
+    return (
+        ShapeSpec("train_4k", "train", {"seq": 4096, "batch": 256}),
+        ShapeSpec("prefill_32k", "prefill", {"seq": 32768, "batch": 32}),
+        ShapeSpec("decode_32k", "decode", {"seq": 32768, "batch": 128}),
+        ShapeSpec("long_500k", "decode", {"seq": 524288, "batch": 1},
+                  skip=long_ctx_skip),
+    )
+
+
+RECSYS_SHAPES = (
+    ShapeSpec("train_batch", "train", {"batch": 65536}),
+    ShapeSpec("serve_p99", "rank", {"n_queries": 1, "n_items": 512}),
+    ShapeSpec("serve_bulk", "pointwise", {"batch": 262144}),
+    ShapeSpec("retrieval_cand", "rank", {"n_queries": 1, "n_items": 1_000_000}),
+)

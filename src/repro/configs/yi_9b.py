@@ -1,0 +1,33 @@
+"""yi-9b [arXiv:2403.04652]: llama-arch dense, 48L, d_model=4096, 32H
+(GQA kv=4), d_ff=11008 (SwiGLU), vocab=64000.  Full attention ->
+long_500k skipped."""
+from repro.configs.registry import ArchSpec, lm_shapes, register
+from repro.models.transformer.model import TransformerConfig
+
+
+def make_config() -> TransformerConfig:
+    return TransformerConfig(
+        name="yi-9b",
+        n_layers=48, d_model=4096, n_heads=32, n_kv_heads=4,
+        d_ff=11008, vocab=64000, head_dim=128,
+        mlp_type="swiglu", rope_theta=1e4,
+        layer_pattern=(None,), remat=True, q_chunk=512,
+        micro_batches=8, fsdp=True,
+    )
+
+
+def make_smoke() -> TransformerConfig:
+    return TransformerConfig(
+        name="yi-9b-smoke",
+        n_layers=2, d_model=64, n_heads=4, n_kv_heads=2,
+        d_ff=128, vocab=128, head_dim=16,
+        mlp_type="swiglu", layer_pattern=(None,), remat=False, q_chunk=8,
+    )
+
+
+ARCH = register(ArchSpec(
+    name="yi-9b", family="lm",
+    make_config=make_config, make_smoke=make_smoke,
+    shapes=lm_shapes(long_ctx_skip="pure full-attention arch — skip per "
+                                   "assignment note"),
+))

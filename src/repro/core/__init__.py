@@ -1,0 +1,12 @@
+"""The paper's primary contribution: DPLR-FwFM interactions + cached ranking."""
+from repro.core.fields import FieldSpec, FeatureLayout, uniform_layout, CONTEXT, ITEM  # noqa: F401
+from repro.core.dplr import (  # noqa: F401
+    DPLRParams, init_dplr, dplr_diagonal, materialize_R,
+    posthoc_dplr, posthoc_error_spectrum,
+)
+from repro.core.interactions import (  # noqa: F401
+    fm_pairwise, fwfm_pairwise, pruned_pairwise_dense, pruned_pairwise_sparse,
+    dplr_pairwise, dplr_pairwise_explicit_d,
+)
+from repro.core.pruning import PrunedR, prune_topk, prune_matched, matched_param_count, kept_fraction  # noqa: F401
+from repro.core import ranking  # noqa: F401

@@ -1,0 +1,84 @@
+"""Pairwise-interaction modules: FM, FwFM, pruned FwFM, DPLR-FwFM.
+
+All functions consume the field-embedding matrix V with shape
+``(..., m, k)`` (rows v_1..v_m, Eq. 4) and return the pairwise interaction
+scalar per batch element, i.e. ``sum_{i<j} <v_i, v_j> * weight_ij``.
+
+Complexities per example (m fields, k dim, rank rho, t kept entries):
+    fm_pairwise        O(m k)          (Rendle's identity, Eq. 1)
+    fwfm_pairwise      O(m^2 k)        (the paper's Eq. 3 bottleneck)
+    pruned_pairwise    O(t k)          (sparse path; dense-masked on TPU)
+    dplr_pairwise      O(rho m k)      (Proposition 1)
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.dplr import DPLRParams, dplr_diagonal
+
+
+def fm_pairwise(V: jax.Array) -> jax.Array:
+    """Plain FM: 0.5 * (||sum_i v_i||^2 - sum_i ||v_i||^2)."""
+    s = V.sum(axis=-2)
+    return 0.5 * ((s * s).sum(axis=-1) - (V * V).sum(axis=(-1, -2)))
+
+
+def fwfm_pairwise(V: jax.Array, R: jax.Array) -> jax.Array:
+    """Full FwFM, Eq. (3)/(5): 0.5 * sum_ij <v_i,v_j> R_ij.
+
+    R must be symmetric with zero diagonal.  O(m^2 k): this is the cost the
+    paper eliminates.
+    """
+    G = jnp.einsum("...ik,...jk->...ij", V, V)
+    return 0.5 * jnp.einsum("...ij,ij->...", G, R)
+
+
+def pruned_pairwise_dense(V: jax.Array, R: jax.Array, mask: jax.Array) -> jax.Array:
+    """Pruned FwFM as a dense masked contraction (the TPU-honest form).
+
+    Scatter/gather over a handful of (i, j) pairs starves the MXU; on TPU the
+    fastest "pruned" implementation is the full Gram contraction with a
+    zero-masked R — i.e. pruning saves parameters but NOT compute on TPU.
+    This asymmetry (vs. CPU, where pruning does save time) is exactly why the
+    DPLR reformulation matters on accelerators: it cuts *structural* cost.
+    """
+    return fwfm_pairwise(V, R * mask)
+
+
+def pruned_pairwise_sparse(
+    V: jax.Array,            # (..., m, k)
+    entries_i: jax.Array,    # (t,) int32 upper-triangular row index
+    entries_j: jax.Array,    # (t,) int32 col index
+    entries_r: jax.Array,    # (t,) f32 surviving R values
+) -> jax.Array:
+    """Pruned FwFM as a true sparse sum over surviving entries.  O(t k).
+
+    This is the CPU production implementation the paper benchmarks against
+    (Fig. 1); kept for the latency benchmark and as a second oracle.
+    """
+    Vi = jnp.take(V, entries_i, axis=-2)
+    Vj = jnp.take(V, entries_j, axis=-2)
+    pair = (Vi * Vj).sum(axis=-1)            # (..., t)
+    return pair @ entries_r
+
+
+def dplr_pairwise(V: jax.Array, p: DPLRParams) -> jax.Array:
+    """DPLR-FwFM, Proposition 1: 0.5*(sum_i d_i ||v_i||^2 + sum_r e_r ||P_r||^2).
+
+    P = U V is O(rho m k); the rest is O((rho + m) k).  R is never formed.
+    """
+    d = dplr_diagonal(p)
+    P = jnp.einsum("rm,...mk->...rk", p.U, V)
+    term_d = jnp.einsum("...mk,m->...", V * V, d)
+    term_e = jnp.einsum("...rk,r->...", P * P, p.e)
+    return 0.5 * (term_d + term_e)
+
+
+def dplr_pairwise_explicit_d(V: jax.Array, U: jax.Array, e: jax.Array,
+                             d: jax.Array) -> jax.Array:
+    """Proposition 1 with an explicit diagonal (post-hoc factorizations)."""
+    P = jnp.einsum("rm,...mk->...rk", U, V)
+    term_d = jnp.einsum("...mk,m->...", V * V, d)
+    term_e = jnp.einsum("...rk,r->...", P * P, e)
+    return 0.5 * (term_d + term_e)

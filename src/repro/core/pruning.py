@@ -1,0 +1,59 @@
+"""Magnitude pruning of the FwFM field-interaction matrix (the baseline
+heuristic the paper replaces — Section 3.3, Section 5.1).
+
+Parameter-matching convention (Section 5.1): a rank-rho DPLR model has
+``rho * (m + 1)`` interaction parameters, so the "equivalent" pruned model
+keeps the ``rho * (m + 1)`` largest-|R_ij| upper-triangular entries, i.e.
+``100 * 2 rho (m+1) / (m (m-1))`` percent of the interactions.
+"""
+from __future__ import annotations
+
+from typing import NamedTuple
+
+import numpy as np
+
+import jax
+import jax.numpy as jnp
+
+
+class PrunedR(NamedTuple):
+    """Static sparse representation of a pruned field matrix."""
+
+    mask: jax.Array        # (m, m) f32 symmetric 0/1, zero diagonal
+    entries_i: jax.Array   # (t,) upper-triangular rows
+    entries_j: jax.Array   # (t,) cols (j > i)
+    entries_r: jax.Array   # (t,) surviving values
+
+
+def matched_param_count(m: int, rank: int) -> int:
+    """# of kept upper-tri entries matching a rank-``rank`` DPLR model."""
+    return min(rank * (m + 1), m * (m - 1) // 2)
+
+
+def kept_fraction(m: int, rank: int) -> float:
+    """'Pruned sparsity' column of Table 1."""
+    return 2.0 * matched_param_count(m, rank) / (m * (m - 1))
+
+
+def prune_topk(R: jax.Array | np.ndarray, n_keep: int) -> PrunedR:
+    """Keep the n_keep largest-magnitude upper-triangular entries of R."""
+    R = np.asarray(R, dtype=np.float32)
+    m = R.shape[0]
+    iu, ju = np.triu_indices(m, k=1)
+    vals = R[iu, ju]
+    order = np.argsort(-np.abs(vals))[:n_keep]
+    ei, ej, er = iu[order], ju[order], vals[order]
+    mask = np.zeros((m, m), np.float32)
+    mask[ei, ej] = 1.0
+    mask[ej, ei] = 1.0
+    return PrunedR(
+        mask=jnp.asarray(mask),
+        entries_i=jnp.asarray(ei.astype(np.int32)),
+        entries_j=jnp.asarray(ej.astype(np.int32)),
+        entries_r=jnp.asarray(er),
+    )
+
+
+def prune_matched(R, m: int, rank: int) -> PrunedR:
+    """Prune R to the DPLR-rank-matched parameter count (Table 1 protocol)."""
+    return prune_topk(R, matched_param_count(m, rank))

@@ -1,0 +1,174 @@
+"""Context-cached item ranking (the paper's Algorithm 1 + baselines).
+
+Setting: one query carries the context field embeddings
+``V_C (..., m_C, k)``; ``n`` candidate items carry item field embeddings
+``V_I (..., n, m_I, k)``.  Everything derivable from the context alone is
+computed once per query; the per-item cost is what matters under latency.
+
+Per-item pairwise-term cost (k = embed dim):
+    FM            O(m_I k)            (Eq. 2d)
+    DPLR-FwFM     O(rho m_I k)        (Algorithm 1 — the paper's result)
+    full FwFM     O(m_I^2 k + m_I k)  (context-item term cacheable, item-item not)
+    pruned FwFM   O(t_I k)            (surviving item-touching entries)
+
+Field-index conventions: the full field list is context fields first, then
+item fields (matching ``FeatureLayout``); U/R/d are indexed in that order.
+"""
+from __future__ import annotations
+
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.dplr import DPLRParams, dplr_diagonal
+
+
+# ---------------------------------------------------------------------------
+# DPLR-FwFM — Algorithm 1
+# ---------------------------------------------------------------------------
+
+class DPLRContextCache(NamedTuple):
+    P_C: jax.Array   # (..., rho, k)   U_C @ V_C
+    s_C: jax.Array   # (...,)          sum_{i in C} d_i ||v_i||^2
+
+
+def dplr_context_cache(p: DPLRParams, V_C: jax.Array, n_context: int) -> DPLRContextCache:
+    """Step (1) of Algorithm 1 — once per query.  O(rho m_C k)."""
+    d = dplr_diagonal(p)
+    U_C = p.U[:, :n_context]
+    d_C = d[:n_context]
+    P_C = jnp.einsum("rm,...mk->...rk", U_C, V_C)
+    s_C = jnp.einsum("...mk,m->...", V_C * V_C, d_C)
+    return DPLRContextCache(P_C=P_C, s_C=s_C)
+
+
+def dplr_score_items(
+    p: DPLRParams,
+    cache: DPLRContextCache,
+    V_I: jax.Array,          # (..., n, m_I, k)
+    n_context: int,
+) -> jax.Array:
+    """Steps (2)-(3) of Algorithm 1 — per item O(rho m_I k).
+
+    Returns the pairwise interaction term per item, shape (..., n).
+    """
+    d = dplr_diagonal(p)
+    U_I = p.U[:, n_context:]
+    d_I = d[n_context:]
+    P = cache.P_C[..., None, :, :] + jnp.einsum("rm,...nmk->...nrk", U_I, V_I)
+    term_e = jnp.einsum("...nrk,r->...n", P * P, p.e)
+    term_d = jnp.einsum("...nmk,m->...n", V_I * V_I, d_I)
+    return 0.5 * (cache.s_C[..., None] + term_d + term_e)
+
+
+# ---------------------------------------------------------------------------
+# Plain FM — Eq. (2d) baseline
+# ---------------------------------------------------------------------------
+
+class FMContextCache(NamedTuple):
+    sum_C: jax.Array   # (..., k)  sum of context vectors
+    sqn_C: jax.Array   # (...,)    sum of squared norms
+
+
+def fm_context_cache(V_C: jax.Array) -> FMContextCache:
+    return FMContextCache(
+        sum_C=V_C.sum(axis=-2), sqn_C=(V_C * V_C).sum(axis=(-1, -2))
+    )
+
+
+def fm_score_items(cache: FMContextCache, V_I: jax.Array) -> jax.Array:
+    s = cache.sum_C[..., None, :] + V_I.sum(axis=-2)       # (..., n, k)
+    sqn = cache.sqn_C[..., None] + (V_I * V_I).sum(axis=(-1, -2))
+    return 0.5 * ((s * s).sum(axis=-1) - sqn)
+
+
+# ---------------------------------------------------------------------------
+# Full FwFM with the best possible caching — the honest strong baseline.
+# score = CC (cached) + sum_{i in I} <v_i, W_i> + II term
+#   where W = R[I, C] @ V_C is cached per query.
+# ---------------------------------------------------------------------------
+
+class FwFMContextCache(NamedTuple):
+    cc: jax.Array    # (...,)          context-context interactions
+    W_I: jax.Array   # (..., m_I, k)   per item-field context aggregate
+
+
+def fwfm_context_cache(R: jax.Array, V_C: jax.Array, n_context: int) -> FwFMContextCache:
+    R_CC = R[:n_context, :n_context]
+    R_IC = R[n_context:, :n_context]
+    G = jnp.einsum("...ik,...jk->...ij", V_C, V_C)
+    cc = 0.5 * jnp.einsum("...ij,ij->...", G, R_CC)
+    W_I = jnp.einsum("im,...mk->...ik", R_IC, V_C)
+    return FwFMContextCache(cc=cc, W_I=W_I)
+
+
+def fwfm_score_items(
+    R: jax.Array, cache: FwFMContextCache, V_I: jax.Array, n_context: int
+) -> jax.Array:
+    R_II = R[n_context:, n_context:]
+    ci = jnp.einsum("...nik,...ik->...n", V_I, cache.W_I)
+    G = jnp.einsum("...nik,...njk->...nij", V_I, V_I)     # O(m_I^2 k) per item
+    ii = 0.5 * jnp.einsum("...nij,ij->...n", G, R_II)
+    return cache.cc[..., None] + ci + ii
+
+
+# ---------------------------------------------------------------------------
+# Pruned FwFM with caching (sparse path) — entries split by which side of the
+# context/item boundary they touch.
+# ---------------------------------------------------------------------------
+
+def split_pruned_entries(entries_i, entries_j, entries_r, n_context: int):
+    """Static (numpy) split of surviving entries into CC / CI / II groups.
+
+    Returns dict of (i, j, r) triples; CI entries are normalized so that i
+    is the item-side field (local item index) and j the context field.
+    """
+    import numpy as np
+
+    ei = np.asarray(entries_i)
+    ej = np.asarray(entries_j)
+    er = np.asarray(entries_r)
+    is_ctx_i = ei < n_context
+    is_ctx_j = ej < n_context
+    cc = is_ctx_i & is_ctx_j
+    ii = (~is_ctx_i) & (~is_ctx_j)
+    ci = ~(cc | ii)
+    # orient CI pairs as (item_field, context_field)
+    ci_item = np.where(is_ctx_i[ci], ej[ci], ei[ci]) - n_context
+    ci_ctx = np.where(is_ctx_i[ci], ei[ci], ej[ci])
+    return {
+        "cc": (ei[cc], ej[cc], er[cc]),
+        "ci": (ci_item, ci_ctx, er[ci]),
+        "ii": (ei[ii] - n_context, ej[ii] - n_context, er[ii]),
+    }
+
+
+class PrunedContextCache(NamedTuple):
+    cc: jax.Array    # (...,)
+    W_I: jax.Array   # (..., m_I, k) context aggregates for surviving CI pairs
+
+
+def pruned_context_cache(groups: dict, V_C: jax.Array, m_item: int) -> PrunedContextCache:
+    cc_i, cc_j, cc_r = groups["cc"]
+    Vi = jnp.take(V_C, jnp.asarray(cc_i), axis=-2)
+    Vj = jnp.take(V_C, jnp.asarray(cc_j), axis=-2)
+    cc = ((Vi * Vj).sum(axis=-1) @ jnp.asarray(cc_r)) if len(cc_r) else jnp.zeros(V_C.shape[:-2])
+    ci_item, ci_ctx, ci_r = groups["ci"]
+    W_I = jnp.zeros((*V_C.shape[:-2], m_item, V_C.shape[-1]), V_C.dtype)
+    if len(ci_r):
+        contrib = jnp.take(V_C, jnp.asarray(ci_ctx), axis=-2) * jnp.asarray(ci_r)[:, None]
+        W_I = W_I.at[..., jnp.asarray(ci_item), :].add(contrib)
+    return PrunedContextCache(cc=cc, W_I=W_I)
+
+
+def pruned_score_items(groups: dict, cache: PrunedContextCache, V_I: jax.Array) -> jax.Array:
+    ci = jnp.einsum("...nik,...ik->...n", V_I, cache.W_I)
+    ii_i, ii_j, ii_r = groups["ii"]
+    if len(ii_r):
+        Vi = jnp.take(V_I, jnp.asarray(ii_i), axis=-2)
+        Vj = jnp.take(V_I, jnp.asarray(ii_j), axis=-2)
+        ii = (Vi * Vj).sum(axis=-1) @ jnp.asarray(ii_r)
+    else:
+        ii = jnp.zeros(V_I.shape[:-2])
+    return cache.cc[..., None] + ci + ii

@@ -1,0 +1,2 @@
+from repro.data.synthetic_ctr import SyntheticCTR  # noqa: F401
+from repro.data.pipeline import ShardedPipeline  # noqa: F401

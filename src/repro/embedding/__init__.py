@@ -1,0 +1,6 @@
+from repro.embedding.bag import (  # noqa: F401
+    init_embedding_table,
+    embedding_bag,
+    lookup_field_embeddings,
+)
+from repro.embedding.sharded import sharded_lookup_field_embeddings  # noqa: F401

@@ -1,0 +1,112 @@
+"""EmbeddingBag substrate.
+
+JAX has no native ``nn.EmbeddingBag`` and no CSR sparse gather, so the
+production embedding path is built from first principles:
+
+  * gather  : ``jnp.take`` over a single arena table (all fields share one
+              table with per-field row offsets — the standard production
+              layout, one allocation, one gather)
+  * reduce  : scatter-add of per-slot embeddings into per-field bags via
+              ``x.at[:, slot_to_field].add(...)`` (multi-hot fields average
+              their value embeddings per the paper, Section 3.2)
+
+This module is the single-device reference path; ``repro.embedding.sharded``
+implements the model-parallel (row-sharded) version used on the production
+mesh, and ``repro.kernels.embedding_bag`` is the Pallas TPU kernel for the
+gather+reduce hot loop.
+"""
+from __future__ import annotations
+
+import numpy as np
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.fields import FeatureLayout
+
+
+def init_embedding_table(
+    rng: jax.Array,
+    n_rows: int,
+    dim: int,
+    *,
+    scale: float | None = None,
+    dtype=jnp.float32,
+) -> jax.Array:
+    """Initialize an embedding arena. Default scale 1/sqrt(dim) (FM-standard)."""
+    if scale is None:
+        scale = 1.0 / np.sqrt(dim)
+    return (jax.random.normal(rng, (n_rows, dim)) * scale).astype(dtype)
+
+
+def embedding_bag(
+    table: jax.Array,          # (n_rows, k)
+    ids: jax.Array,            # (..., n_slots) int32, arena-global rows
+    weights: jax.Array,        # (..., n_slots) f32
+    segment_ids: np.ndarray,   # (n_slots,) static slot -> bag mapping
+    n_bags: int,
+    take_fn=None,              # pluggable gather (model-parallel lookup)
+) -> jax.Array:
+    """Weighted gather-reduce: out[..., b, :] = sum_{s: seg[s]=b} w_s * table[id_s].
+
+    The torch equivalent is ``nn.EmbeddingBag(mode='sum')`` with per-sample
+    weights, generalized to many bags per example.  ``take_fn(table, ids)``
+    overrides the row gather — the distributed step passes the shard_map'd
+    masked-take+psum lookup so sharded arenas never move.
+    """
+    take = take_fn or (lambda t, i: jnp.take(t, i, axis=0))
+    flat = take(table, ids)                               # (..., n_slots, k)
+    weighted = flat * weights[..., None].astype(flat.dtype)
+    out_shape = (*ids.shape[:-1], n_bags, table.shape[-1])
+    out = jnp.zeros(out_shape, dtype=flat.dtype)
+    # scatter-add over the slot axis into bags; segment_ids is static.
+    return out.at[..., segment_ids, :].add(weighted)
+
+
+def lookup_field_embeddings(
+    table: jax.Array,
+    layout: FeatureLayout,
+    ids: jax.Array,       # (batch..., n_slots) *local* per-field ids
+    weights: jax.Array,   # (batch..., n_slots)
+    take_fn=None,
+) -> jax.Array:
+    """(batch..., n_fields, k) field embedding matrix V (rows of Eq. 4)."""
+    arena_ids = ids + jnp.asarray(layout.slot_offsets)
+    return embedding_bag(
+        table, arena_ids, weights, layout.slot_to_field, layout.n_fields,
+        take_fn=take_fn,
+    )
+
+
+def lookup_linear_terms(
+    table: jax.Array,     # (n_rows, 1) first-order weights
+    layout: FeatureLayout,
+    ids: jax.Array,
+    weights: jax.Array,
+    take_fn=None,
+) -> jax.Array:
+    """(batch...,) first-order term <b, x> of the FM/FwFM model."""
+    tab = table.reshape(-1, 1)
+    take = take_fn or (lambda t, i: jnp.take(t, i, axis=0))
+    arena_ids = ids + jnp.asarray(layout.slot_offsets)
+    vals = take(tab, arena_ids)[..., 0] * weights.astype(tab.dtype)
+    return vals.sum(axis=-1)
+
+
+def padded_rows(n_rows: int, multiple: int = 2048) -> int:
+    """Arena rows padded so row-sharding divides any mesh axis we use."""
+    return ((n_rows + multiple - 1) // multiple) * multiple
+
+
+def spread_ids(ids: jax.Array, vocab_sizes: jax.Array, prime: int = 2654435761) -> jax.Array:
+    """Load-balancing bijection id -> (id * prime) % vocab (prime > any vocab).
+
+    Block-sharded tables put popular (low) ids on shard 0; Zipfian traffic
+    then hot-spots that shard.  Multiplying by a fixed prime coprime to the
+    vocab size permutes rows, spreading hot ids across shards.  Bijective
+    iff gcd(prime, vocab) == 1, guaranteed when vocab < prime (prime is
+    Knuth's 2^32 golden-ratio constant, larger than any per-field vocab).
+    """
+    return ((ids.astype(jnp.int64) * prime) % vocab_sizes.astype(jnp.int64)).astype(
+        jnp.int32
+    )

@@ -1,0 +1,119 @@
+"""Model-parallel embedding lookup over a row-sharded arena table.
+
+The arena is block-sharded over the ``model`` mesh axis with
+``PartitionSpec("model", None)``: shard ``s`` owns the contiguous row range
+``[s * rows_per_shard, (s+1) * rows_per_shard)``.  Inside ``shard_map`` each
+shard gathers the rows it owns (out-of-shard rows are masked to zero) and the
+partial field-embedding bags are summed with ``psum`` over the model axis.
+
+Collective cost per lookup: one all-reduce of the *output* bags
+(batch_per_dp x n_fields x k floats), NOT of the table — the table never
+moves.  This is the classic sharded-embedding pattern (Megatron's
+VocabParallelEmbedding), built here from JAX primitives because JAX has no
+native equivalent.
+"""
+from __future__ import annotations
+
+from functools import partial
+
+import numpy as np
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+
+from repro.core.fields import FeatureLayout
+
+
+def _local_masked_bag(
+    table_shard: jax.Array,   # (rows_per_shard, k) local block
+    arena_ids: jax.Array,     # (..., n_slots) global rows
+    weights: jax.Array,       # (..., n_slots)
+    segment_ids: np.ndarray,
+    n_bags: int,
+    axis_name: str,
+) -> jax.Array:
+    rows_per_shard = table_shard.shape[0]
+    shard = jax.lax.axis_index(axis_name)
+    owner = arena_ids // rows_per_shard
+    local = arena_ids - owner * rows_per_shard
+    mine = (owner == shard)
+    # clip so the gather is always in-bounds; masked rows contribute 0.
+    local = jnp.where(mine, local, 0)
+    flat = jnp.take(table_shard, local, axis=0)
+    w = jnp.where(mine, weights, 0.0).astype(flat.dtype)
+    weighted = flat * w[..., None]
+    out = jnp.zeros((*arena_ids.shape[:-1], n_bags, table_shard.shape[-1]),
+                    dtype=flat.dtype)
+    out = out.at[..., segment_ids, :].add(weighted)
+    return jax.lax.psum(out, axis_name)
+
+
+def _local_masked_take(
+    table_shard: jax.Array,   # (rows_per_shard, k)
+    ids: jax.Array,           # (...,) global rows
+    axis_name: str,
+) -> jax.Array:
+    rows_per_shard = table_shard.shape[0]
+    shard = jax.lax.axis_index(axis_name)
+    owner = ids // rows_per_shard
+    local = ids - owner * rows_per_shard
+    mine = (owner == shard)
+    rows = jnp.take(table_shard, jnp.where(mine, local, 0), axis=0)
+    rows = jnp.where(mine[..., None], rows, 0)
+    return jax.lax.psum(rows, axis_name)
+
+
+def make_sharded_take(mesh: jax.sharding.Mesh, spec_by_rank: dict[int, P],
+                      model_axis: str = "model"):
+    """Build a ``take_fn(table, ids)`` for model-parallel arenas.
+
+    ``spec_by_rank`` maps ids.ndim -> PartitionSpec of the ids array (how the
+    batch dims are sharded); the table must be P(model_axis, None)-sharded
+    and row-count divisible by the model axis (see ``padded_rows``).
+    Each device gathers the rows it owns; a psum over the model axis
+    assembles full rows.  The table itself never moves.
+    """
+
+    def take_fn(table, ids):
+        ispec = spec_by_rank[ids.ndim]
+        out_spec = P(*(tuple(ispec) + (None,)))
+        fn = partial(_local_masked_take, axis_name=model_axis)
+        return jax.shard_map(
+            fn, mesh=mesh,
+            in_specs=(P(model_axis, None), ispec),
+            out_specs=out_spec,
+        )(table, ids)
+
+    return take_fn
+
+
+def sharded_lookup_field_embeddings(
+    table: jax.Array,
+    layout: FeatureLayout,
+    ids: jax.Array,
+    weights: jax.Array,
+    *,
+    mesh: jax.sharding.Mesh,
+    model_axis: str = "model",
+    data_axes: tuple[str, ...] = ("data",),
+) -> jax.Array:
+    """shard_map'd field-embedding lookup.
+
+    ``table`` must be sharded ``P(model_axis, None)``; the batch dims of
+    ``ids``/``weights`` sharded over ``data_axes``; output follows the batch.
+    """
+    arena_ids = ids + jnp.asarray(layout.slot_offsets)
+    batch_spec = P(data_axes)
+    fn = partial(
+        _local_masked_bag,
+        segment_ids=layout.slot_to_field,
+        n_bags=layout.n_fields,
+        axis_name=model_axis,
+    )
+    return jax.shard_map(
+        fn,
+        mesh=mesh,
+        in_specs=(P(model_axis, None), batch_spec, batch_spec),
+        out_specs=batch_spec,
+    )(table, arena_ids, weights)

@@ -1,0 +1,14 @@
+"""Pallas TPU kernels for the compute hot-spots of DPLR-FwFM serving.
+
+Each kernel ships three files:
+    <name>.py  - pl.pallas_call + explicit BlockSpec VMEM tiling
+    ops.py     - jit'd public wrappers (block-size selection, interpret
+                 fallback on CPU)
+    ref.py     - pure-jnp oracles the tests sweep against
+
+Kernels:
+    dplr_score        - Algorithm 1 item scoring (the paper's hot op)
+    fwfm_interaction  - full O(m^2 k) FwFM pairwise term (the baseline)
+    embedding_bag     - scalar-prefetch gather + weighted bag reduce
+    flash_attention   - blocked causal/windowed GQA attention (LM serving)
+"""

@@ -1,0 +1,144 @@
+"""Pallas TPU flash attention (fwd): blocked causal/sliding-window GQA.
+
+Classic FlashAttention-2 streaming-softmax structure adapted to TPU:
+grid = (B, KV_heads, q_blocks); the kv loop is the innermost GRID dim
+(Mosaic pipelines the k/v block DMAs), with running (max, sum, acc)
+carried in VMEM scratch across kv steps.  Block shapes keep the MXU busy:
+q block (block_q, hd) x k block (block_k, hd)^T is a (block_q, block_k)
+MXU tile; block_q = block_k = 128 aligns both operands to the 128-lane
+systolic array.
+
+Causality and the sliding window are handled two ways:
+  * block-level: kv blocks entirely outside [q_lo - W, q_hi] are skipped
+    via @pl.when (no DMA waste is possible — the block is already resident
+    — but the MXU work is skipped; FLOP savings show up on real hardware)
+  * element-level: the boundary blocks apply the (q_pos >= k_pos) /
+    window mask inside the block.
+
+This is the serving-path kernel for the LM architectures; the pure-JAX
+chunked attention in models/transformer/attention.py remains the
+dry-run/compile path (Pallas cannot lower to the CPU backend), and the
+tests assert the two agree in interpret mode.
+"""
+from __future__ import annotations
+
+import functools
+
+import numpy as np
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+NEG_INF = -1e30
+
+
+def _kernel(q_ref, k_ref, v_ref, o_ref, m_ref, l_ref, acc_ref, *,
+            block_q: int, block_k: int, n_kv_blocks: int, group: int,
+            window, softmax_scale: float):
+    qi = pl.program_id(2)
+    ki = pl.program_id(3)
+
+    @pl.when(ki == 0)
+    def _init():
+        m_ref[...] = jnp.full_like(m_ref, NEG_INF)
+        l_ref[...] = jnp.zeros_like(l_ref)
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    q_lo = qi * block_q
+    k_lo = ki * block_k
+    # skip kv blocks with no causal/window overlap with this q block
+    in_causal = k_lo <= q_lo + block_q - 1
+    in_window = True
+    if window is not None:
+        in_window = (k_lo + block_k - 1) > (q_lo - window)
+
+    @pl.when(in_causal & in_window)
+    def _compute():
+        q = q_ref[0, 0, ...]                 # (block_q*G, hd) flattened q
+        k = k_ref[0, 0, ...]                 # (block_k, hd)
+        v = v_ref[0, 0, ...]
+        s = jax.lax.dot_general(
+            q, k, (((1,), (1,)), ((), ())),
+            preferred_element_type=jnp.float32) * softmax_scale
+        q_pos = q_lo + jax.lax.broadcasted_iota(
+            jnp.int32, (block_q * group, block_k), 0) // group
+        k_pos = k_lo + jax.lax.broadcasted_iota(
+            jnp.int32, (block_q * group, block_k), 1)
+        mask = k_pos <= q_pos
+        if window is not None:
+            mask &= k_pos > q_pos - window
+        s = jnp.where(mask, s, NEG_INF)
+
+        m_prev = m_ref[...]
+        m_cur = jnp.maximum(m_prev, s.max(axis=-1, keepdims=True))
+        alpha = jnp.exp(m_prev - m_cur)
+        p = jnp.exp(s - m_cur)
+        l_ref[...] = l_ref[...] * alpha + p.sum(axis=-1, keepdims=True)
+        acc_ref[...] = acc_ref[...] * alpha + jax.lax.dot_general(
+            p.astype(v.dtype), v, (((1,), (0,)), ((), ())),
+            preferred_element_type=jnp.float32)
+        m_ref[...] = m_cur
+
+    @pl.when(ki == n_kv_blocks - 1)
+    def _finish():
+        o_ref[0, 0, ...] = (acc_ref[...] /
+                         jnp.maximum(l_ref[...], 1e-30)).astype(o_ref.dtype)
+
+
+@functools.partial(
+    jax.jit,
+    static_argnames=("window", "block_q", "block_k", "interpret"))
+def flash_attention(
+    q: jax.Array,            # (B, S, H, hd)
+    k: jax.Array,            # (B, S, KV, hd)
+    v: jax.Array,            # (B, S, KV, hd)
+    *,
+    window: int | None = None,
+    block_q: int = 128,
+    block_k: int = 128,
+    interpret: bool = False,
+) -> jax.Array:
+    B, S, H, hd = q.shape
+    KV = k.shape[2]
+    G = H // KV
+    assert S % block_q == 0 and S % block_k == 0, (S, block_q, block_k)
+    scale = 1.0 / np.sqrt(hd)
+
+    # layout: fold the GQA group into the q-row dim so one kv-head's q rows
+    # form a contiguous (block_q * G, hd) MXU operand.
+    qg = q.reshape(B, S, KV, G, hd).transpose(0, 2, 1, 3, 4)
+    qg = qg.reshape(B, KV, S * G, hd)
+    kg = k.transpose(0, 2, 1, 3)             # (B, KV, S, hd)
+    vg = v.transpose(0, 2, 1, 3)
+
+    n_q = S // block_q
+    n_k = S // block_k
+    kernel = functools.partial(
+        _kernel, block_q=block_q, block_k=block_k, n_kv_blocks=n_k,
+        group=G, window=window, softmax_scale=scale)
+
+    out = pl.pallas_call(
+        kernel,
+        grid=(B, KV, n_q, n_k),
+        in_specs=[
+            pl.BlockSpec((1, 1, block_q * G, hd),
+                         lambda b, h, qi, ki: (b, h, qi, 0)),
+            pl.BlockSpec((1, 1, block_k, hd),
+                         lambda b, h, qi, ki: (b, h, ki, 0)),
+            pl.BlockSpec((1, 1, block_k, hd),
+                         lambda b, h, qi, ki: (b, h, ki, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, 1, block_q * G, hd),
+                               lambda b, h, qi, ki: (b, h, qi, 0)),
+        out_shape=jax.ShapeDtypeStruct((B, KV, S * G, hd), q.dtype),
+        scratch_shapes=[
+            pltpu.VMEM((block_q * G, 1), jnp.float32),    # running max
+            pltpu.VMEM((block_q * G, 1), jnp.float32),    # running sum
+            pltpu.VMEM((block_q * G, hd), jnp.float32),   # output accum
+        ],
+        interpret=interpret,
+    )(qg, kg, vg)
+    out = out.reshape(B, KV, S, G, hd).transpose(0, 2, 1, 3, 4)
+    return out.reshape(B, S, H, hd)

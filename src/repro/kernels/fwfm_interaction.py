@@ -1,0 +1,58 @@
+"""Pallas TPU kernel for the FULL FwFM pairwise term (the baseline the
+paper accelerates): for each example, 0.5 * <V V^T, R> with symmetric
+zero-diagonal R.
+
+Tiling: a block of ``block_b`` examples' field matrices (block_b, m, k)
+lives in VMEM; the Gram contraction runs as one batched dot_general on the
+MXU (m <= ~128 so a whole m x m Gram tile fits one MXU pass); R stays
+VMEM-resident across all blocks.  O(m^2 k) per example — the cost whose
+removal is the paper's contribution; this kernel exists so the baseline is
+as fast as it can be on TPU (the comparison in benchmarks/fig1 is fair).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _kernel(v_ref, r_ref, out_ref):
+    v = v_ref[...]                       # (bb, m, k)
+    r = r_ref[...]                       # (m, m)
+    g = jax.lax.dot_general(
+        v, v,
+        dimension_numbers=(((2,), (2,)), ((0,), (0,))),
+        preferred_element_type=jnp.float32,
+    )                                    # (bb, m, m)
+    out_ref[...] = 0.5 * jnp.einsum("bij,ij->b", g, r)
+
+
+@functools.partial(jax.jit, static_argnames=("block_b", "interpret"))
+def fwfm_pairwise(
+    V: jax.Array,      # (B, m, k)
+    R: jax.Array,      # (m, m) symmetric, zero diagonal
+    *,
+    block_b: int = 512,
+    interpret: bool = False,
+) -> jax.Array:
+    B, m, k = V.shape
+    block_b = min(block_b, B)
+    if B % block_b != 0:
+        pad = block_b - B % block_b
+        V = jnp.pad(V, ((0, pad), (0, 0), (0, 0)))
+    B_pad = V.shape[0]
+
+    out = pl.pallas_call(
+        _kernel,
+        grid=(B_pad // block_b,),
+        in_specs=[
+            pl.BlockSpec((block_b, m, k), lambda i: (i, 0, 0)),
+            pl.BlockSpec((m, m), lambda i: (0, 0)),
+        ],
+        out_specs=pl.BlockSpec((block_b,), lambda i: (i,)),
+        out_shape=jax.ShapeDtypeStruct((B_pad,), jnp.float32),
+        interpret=interpret,
+    )(V, R)
+    return out[:B]

@@ -1,0 +1,47 @@
+"""Public jit'd wrappers around the Pallas kernels.
+
+On this CPU container the kernels execute in interpret mode (Pallas has no
+CPU lowering); on TPU ``interpret=False`` compiles through Mosaic.  The
+wrappers pick that automatically and expose the same signatures as the
+pure-jnp references, so the serving stack can swap implementations with a
+flag (cfg.use_pallas_kernels).
+"""
+from __future__ import annotations
+
+import jax
+
+from repro.kernels import dplr_score as _dplr
+from repro.kernels import embedding_bag as _bag
+from repro.kernels import flash_attention as _flash
+from repro.kernels import fwfm_interaction as _fwfm
+
+
+def _on_tpu() -> bool:
+    return jax.default_backend() == "tpu"
+
+
+def dplr_score_items(V_I, U_I, e, d_I, P_C, s_C, *, block_n: int = 1024,
+                     interpret: bool | None = None):
+    interp = (not _on_tpu()) if interpret is None else interpret
+    return _dplr.dplr_score_items(V_I, U_I, e, d_I, P_C, s_C,
+                                  block_n=block_n, interpret=interp)
+
+
+def fwfm_pairwise(V, R, *, block_b: int = 512, interpret: bool | None = None):
+    interp = (not _on_tpu()) if interpret is None else interpret
+    return _fwfm.fwfm_pairwise(V, R, block_b=block_b, interpret=interp)
+
+
+def embedding_bag(table, ids, weights, *, segment_ids, n_bags,
+                  interpret: bool | None = None):
+    interp = (not _on_tpu()) if interpret is None else interpret
+    return _bag.embedding_bag(table, ids, weights,
+                              segment_ids=tuple(int(s) for s in segment_ids),
+                              n_bags=n_bags, interpret=interp)
+
+
+def flash_attention(q, k, v, *, window=None, block_q=128, block_k=128,
+                    interpret: bool | None = None):
+    interp = (not _on_tpu()) if interpret is None else interpret
+    return _flash.flash_attention(q, k, v, window=window, block_q=block_q,
+                                  block_k=block_k, interpret=interp)

@@ -1,0 +1,48 @@
+"""Pure-jnp oracles for every Pallas kernel (the tests sweep shapes/dtypes
+and assert_allclose kernel-vs-ref)."""
+from __future__ import annotations
+
+import numpy as np
+
+import jax
+import jax.numpy as jnp
+
+
+def dplr_score_items_ref(V_I, U_I, e, d_I, P_C, s_C):
+    P = P_C[None] + jnp.einsum("rm,nmk->nrk", U_I, V_I)
+    term_e = jnp.einsum("nrk,r->n", P * P, e)
+    term_d = jnp.einsum("nmk,m->n", V_I * V_I, d_I)
+    return 0.5 * (s_C + term_d + term_e)
+
+
+def fwfm_pairwise_ref(V, R):
+    G = jnp.einsum("bik,bjk->bij", V, V)
+    return 0.5 * jnp.einsum("bij,ij->b", G, R)
+
+
+def embedding_bag_ref(table, ids, weights, segment_ids, n_bags):
+    flat = jnp.take(table, ids, axis=0)
+    weighted = flat * weights[..., None].astype(flat.dtype)
+    out = jnp.zeros((ids.shape[0], n_bags, table.shape[-1]), flat.dtype)
+    return out.at[:, np.asarray(segment_ids), :].add(weighted)
+
+
+def flash_attention_ref(q, k, v, *, causal=True, window=None):
+    """(B, S, H, hd) x (B, S, KV, hd) GQA reference in f32."""
+    B, Sq, H, hd = q.shape
+    KV = k.shape[2]
+    G = H // KV
+    qg = q.reshape(B, Sq, KV, G, hd).astype(jnp.float32)
+    logits = jnp.einsum("bqkgh,bskh->bkgqs", qg, k.astype(jnp.float32))
+    logits = logits / np.sqrt(hd)
+    q_pos = jnp.arange(Sq)[:, None]
+    k_pos = jnp.arange(k.shape[1])[None, :]
+    mask = jnp.ones((Sq, k.shape[1]), bool)
+    if causal:
+        mask &= k_pos <= q_pos
+    if window is not None:
+        mask &= k_pos > q_pos - window
+    logits = jnp.where(mask, logits, -1e30)
+    p = jax.nn.softmax(logits, axis=-1)
+    out = jnp.einsum("bkgqs,bskh->bqkgh", p, v.astype(jnp.float32))
+    return out.reshape(B, Sq, H, hd)

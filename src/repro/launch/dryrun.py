@@ -1,0 +1,195 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+
+"""Multi-pod dry-run: lower + compile EVERY (architecture x input-shape) cell
+on the production meshes and record memory / cost / collective analysis.
+
+    PYTHONPATH=src python -m repro.launch.dryrun                # all cells, both meshes
+    PYTHONPATH=src python -m repro.launch.dryrun --arch mixtral-8x7b --shape train_4k
+    PYTHONPATH=src python -m repro.launch.dryrun --mesh single   # 16x16 only
+
+Results are cached to results/dryrun/<arch>__<shape>__<mesh>.json (one file
+per cell, so a crashed run resumes where it left off; --force recompiles).
+The roofline harness (benchmarks/roofline.py) consumes these files.
+
+NOTE the first two lines of this file: jax locks the device count at first
+backend init, so the 512-device override MUST precede every other import.
+"""
+import argparse
+import json
+import re
+import time
+import traceback
+
+RESULTS_DIR = os.path.join(os.path.dirname(__file__), "..", "..", "..",
+                           "results", "dryrun")
+
+_COLLECTIVES = ("all-gather", "all-reduce", "reduce-scatter", "all-to-all",
+                "collective-permute")
+
+_SHAPE_RE = re.compile(r"(\w+)\[([\d,]*)\]")
+
+_DTYPE_BYTES = {
+    "f64": 8, "f32": 4, "f16": 2, "bf16": 2, "s64": 8, "u64": 8,
+    "s32": 4, "u32": 4, "s16": 2, "u16": 2, "s8": 1, "u8": 1, "pred": 1,
+    "c64": 8, "c128": 16,
+}
+
+
+def _tensor_bytes(type_str: str) -> int:
+    """bytes of one HLO tensor type like 'bf16[16,128,2048]{...}'."""
+    total = 0
+    for m in _SHAPE_RE.finditer(type_str):
+        dt, dims = m.group(1), m.group(2)
+        if dt not in _DTYPE_BYTES:
+            continue
+        n = 1
+        for d in dims.split(","):
+            if d:
+                n *= int(d)
+        total += n * _DTYPE_BYTES[dt]
+    return total
+
+
+def collective_bytes(hlo_text: str) -> dict:
+    """Sum output-operand sizes of every collective op in (post-SPMD) HLO.
+
+    Bytes are PER-SHARD (the HLO is the per-device program), i.e. directly
+    comparable to per-chip link bandwidth.  Keyed by collective kind.
+    """
+    out: dict[str, float] = {k: 0.0 for k in _COLLECTIVES}
+    out["count"] = 0
+    for line in hlo_text.splitlines():
+        s = line.strip()
+        # match '%name = TYPE op-name(...)' style lines
+        m = re.match(r"%?[\w.\-]+\s*=\s*(\(?[^=]*?\)?)\s*(all-gather|all-reduce|"
+                     r"reduce-scatter|all-to-all|collective-permute)", s)
+        if not m:
+            continue
+        kind = m.group(2)
+        if "-start" in s.split("(")[0] and kind not in s.split("(")[0]:
+            pass
+        out[kind] += _tensor_bytes(m.group(1))
+        out["count"] += 1
+    return out
+
+
+def run_cell(arch: str, shape: str, mesh_name: str, force: bool = False,
+             opts: dict | None = None, tag: str = "") -> dict:
+    import jax
+    from repro.launch import steps
+    from repro.launch.mesh import make_production_mesh
+
+    os.makedirs(RESULTS_DIR, exist_ok=True)
+    key = f"{arch}__{shape}{tag}__{mesh_name}".replace("/", "_")
+    path = os.path.join(RESULTS_DIR, key + ".json")
+    if os.path.exists(path) and not force:
+        with open(path) as f:
+            return json.load(f)
+
+    mesh = make_production_mesh(multi_pod=(mesh_name == "multi"))
+    t0 = time.time()
+    rec = {"arch": arch, "shape": shape, "mesh": mesh_name,
+           "n_devices": mesh.devices.size}
+    try:
+        cell = steps.build(arch, shape, mesh, opts=opts)
+        lowered = cell.lower()
+        t_lower = time.time()
+        compiled = lowered.compile()
+        t_compile = time.time()
+
+        mem = compiled.memory_analysis()
+        cost = compiled.cost_analysis()
+        hlo = compiled.as_text()
+        # keep the per-device HLO for §Perf iteration (re-analyzable without
+        # recompiling)
+        try:
+            import zstandard
+            hlo_dir = os.path.join(RESULTS_DIR, "hlo")
+            os.makedirs(hlo_dir, exist_ok=True)
+            with open(os.path.join(hlo_dir, key + ".txt.zst"), "wb") as f:
+                f.write(zstandard.ZstdCompressor(level=6).compress(
+                    hlo.encode()))
+        except Exception:
+            pass
+        # while-trip-count-aware analysis (cost_analysis counts loop bodies
+        # once — see launch/hlo_cost.py); all values are PER-DEVICE.
+        from repro.launch import hlo_cost
+        deep = hlo_cost.analyze(hlo)
+
+        rec.update({
+            "ok": True,
+            "lower_s": round(t_lower - t0, 2),
+            "compile_s": round(t_compile - t_lower, 2),
+            "flops": deep["flops"],
+            "traffic_bytes": deep["traffic"],
+            "out_bytes": deep["out_bytes"],
+            "xla_flops_body_once": float(cost.get("flops", -1)),
+            "xla_bytes_body_once": float(cost.get("bytes accessed", -1)),
+            "memory": {
+                "argument_bytes": int(getattr(mem, "argument_size_in_bytes", 0)),
+                "output_bytes": int(getattr(mem, "output_size_in_bytes", 0)),
+                "temp_bytes": int(getattr(mem, "temp_size_in_bytes", 0)),
+                "generated_code_bytes": int(
+                    getattr(mem, "generated_code_size_in_bytes", 0)),
+            },
+            "collectives": {
+                "count": deep["coll_count"],
+                "total_bytes": deep["coll_bytes"],
+                **deep["coll"],
+            },
+        })
+    except Exception as e:  # noqa: BLE001 — record the failure, keep sweeping
+        rec.update({"ok": False, "error": f"{type(e).__name__}: {e}",
+                    "traceback": traceback.format_exc()[-4000:]})
+    with open(path, "w") as f:
+        json.dump(rec, f, indent=1)
+    return rec
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default=None)
+    ap.add_argument("--shape", default=None)
+    ap.add_argument("--mesh", default="both", choices=["single", "multi", "both"])
+    ap.add_argument("--force", action="store_true")
+    ap.add_argument("--opt", action="append", default=[],
+                    help="enable a named optimization (results tagged +opt)")
+    ap.add_argument("--include-extra", action="store_true", default=True,
+                    help="include the paper's own dplr-fwfm arch")
+    args = ap.parse_args()
+
+    from repro.launch import steps
+
+    meshes = {"single": ["single"], "multi": ["multi"],
+              "both": ["single", "multi"]}[args.mesh]
+    cells = [(a, s) for a, s, _ in steps.all_cells()]
+    if args.arch:
+        cells = [(a, s) for a, s in cells if a == args.arch]
+    if args.shape:
+        cells = [(a, s) for a, s in cells if s == args.shape]
+
+    n_fail = 0
+    opts = {name: True for name in args.opt}
+    tag = "".join(f"+{n}" for n in sorted(opts)) if opts else ""
+    for mesh_name in meshes:
+        for arch, shape in cells:
+            rec = run_cell(arch, shape, mesh_name, force=args.force,
+                           opts=opts or None, tag=tag)
+            status = "OK " if rec.get("ok") else "FAIL"
+            extra = ""
+            if rec.get("ok"):
+                mem_gb = rec["memory"]["temp_bytes"] / 2**30
+                extra = (f"flops={rec['flops']:.3e} temp={mem_gb:.2f}GiB "
+                         f"coll={rec['collectives']['total_bytes']/2**20:.1f}MiB")
+            else:
+                n_fail += 1
+                extra = rec["error"][:160]
+            print(f"[{status}] {arch:24s} {shape:14s} {mesh_name:6s} {extra}",
+                  flush=True)
+    print(f"\ndone; failures: {n_fail}")
+    raise SystemExit(1 if n_fail else 0)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,241 @@
+"""While-loop-aware HLO cost analysis.
+
+``compiled.cost_analysis()`` counts each while-loop body ONCE — with
+scan-over-layers that under-counts FLOPs by ~n_layers and misses every
+collective inside the loop.  This module re-derives the three roofline
+inputs by walking the compiled HLO text with trip-count multiplication:
+
+  * flops            - 2 * prod(dot output dims) * prod(contracted dims),
+                       summed over every dot (incl. inside fusions/calls),
+                       x while trip counts (from backend_config
+                       known_trip_count, falling back to the max s32
+                       constant in the loop condition)
+  * collective bytes - output-operand bytes of all-gather / all-reduce /
+                       reduce-scatter / all-to-all / collective-permute,
+                       x trip counts.  The HLO is the per-device program,
+                       so bytes are per-chip (comparable to link bandwidth).
+  * hbm traffic      - sum of (operands + output) bytes of every top-level
+                       op (fusion internals excluded — they live in
+                       registers/VMEM), x trip counts.  An upper-bound
+                       proxy for HBM bytes: reuse inside a fused region is
+                       already elided, reuse ACROSS ops is not.
+
+Validated in tests against (a) hand-counted matmul scans and (b) the
+analytic 6*N*D model-FLOPs of the assigned transformers.
+"""
+from __future__ import annotations
+
+import dataclasses
+import json
+import re
+
+_DTYPE_BYTES = {
+    "f64": 8, "f32": 4, "f16": 2, "bf16": 2, "f8e4m3fn": 1, "f8e5m2": 1,
+    "s64": 8, "u64": 8, "s32": 4, "u32": 4, "s16": 2, "u16": 2,
+    "s8": 1, "u8": 1, "s4": 1, "u4": 1, "pred": 1, "c64": 8, "c128": 16,
+}
+_ARRAY_RE = re.compile(r"(\w+)\[([\d,]*)\]")
+_COLLECTIVES = ("all-gather", "all-reduce", "reduce-scatter", "all-to-all",
+                "collective-permute")
+_SKIP_TRAFFIC = {"parameter", "constant", "tuple", "get-tuple-element",
+                 "bitcast", "while", "conditional", "call", "custom-call",
+                 "after-all", "iota", "broadcast", "partition-id"}
+
+
+def tensor_bytes(type_str: str) -> int:
+    total = 0
+    for m in _ARRAY_RE.finditer(type_str):
+        dt, dims = m.group(1), m.group(2)
+        if dt not in _DTYPE_BYTES:
+            continue
+        n = 1
+        for d in dims.split(","):
+            if d:
+                n *= int(d)
+        total += n * _DTYPE_BYTES[dt]
+    return total
+
+
+def _shape_dims(type_str: str) -> list[int]:
+    m = _ARRAY_RE.search(type_str)
+    if not m:
+        return []
+    return [int(d) for d in m.group(2).split(",") if d]
+
+
+@dataclasses.dataclass
+class Instr:
+    name: str
+    type_str: str
+    op: str
+    operands: list
+    attrs: str
+    args: str = ""
+
+
+_ASSIGN_RE = re.compile(r"^(?:ROOT\s+)?%([\w.\-]+)\s*=\s*(.*)$")
+# op name: lowercase identifier immediately followed by '(' — type strings
+# (even tuple types with /*index=N*/ comments or S(5) space annotations)
+# never produce a lowercase-ident-paren sequence.
+_OP_RE = re.compile(r"(?:^|\s)([a-z][\w\-]*)\(")
+_COMP_RE = re.compile(r"^(ENTRY\s+)?%?([\w.\-]+)\s*\(.*\)\s*->\s*.*\{")
+
+
+def parse_hlo(text: str) -> tuple[dict, str]:
+    """-> ({comp_name: {instr_name: Instr}}, entry_name)."""
+    comps: dict[str, dict[str, Instr]] = {}
+    entry = None
+    current = None
+    for raw in text.splitlines():
+        s = raw.strip()
+        if current is None:
+            m = _COMP_RE.match(s)
+            if m:
+                current = m.group(2)
+                comps[current] = {}
+                if m.group(1):
+                    entry = current
+            continue
+        if s == "}":
+            current = None
+            continue
+        m = _ASSIGN_RE.match(s)
+        if not m:
+            continue
+        name, rhs = m.groups()
+        mo = _OP_RE.search(rhs)
+        if not mo:
+            continue
+        type_str, op, rest = rhs[: mo.start()], mo.group(1), rhs[mo.end():]
+        # split the operand list (balance parens; attrs follow the close)
+        depth = 1
+        i = len(rest) - 1
+        for i, ch in enumerate(rest):
+            if ch == "(":
+                depth += 1
+            elif ch == ")":
+                depth -= 1
+                if depth == 0:
+                    break
+        args, attrs = rest[:i], rest[i + 1:]
+        operands = re.findall(r"%([\w.\-]+)", args)
+        comps[current][name] = Instr(name, type_str, op, operands, attrs, args)
+    return comps, entry
+
+
+def _trip_count(instr: Instr, comps: dict) -> int:
+    m = re.search(r'"known_trip_count":\{"n":"(\d+)"\}', instr.attrs)
+    if m:
+        return int(m.group(1))
+    # fallback: the loop condition compares the induction var against a
+    # constant — take the largest integer constant in the cond computation.
+    m = re.search(r"condition=%([\w.\-]+)", instr.attrs)
+    if m and m.group(1) in comps:
+        ints = []
+        for ins in comps[m.group(1)].values():
+            if ins.op == "constant":
+                ints += [int(x) for x in re.findall(r"(\d+)", ins.args)]
+        if ints:
+            return max(ints)
+    return 1
+
+
+_ZERO = {"flops": 0.0, "coll_bytes": 0.0, "coll_count": 0, "traffic": 0.0,
+         "out_bytes": 0.0, "coll": {k: 0.0 for k in _COLLECTIVES}}
+
+
+def _dot_flops(instr: Instr, table: dict[str, Instr]) -> float:
+    out_elems = 1
+    for d in _shape_dims(instr.type_str):
+        out_elems *= d
+    m = re.search(r"lhs_contracting_dims=\{([\d,]*)\}", instr.attrs)
+    cdims = [int(x) for x in m.group(1).split(",")] if m and m.group(1) else []
+    csize = 1
+    if instr.operands and instr.operands[0] in table:
+        lhs_dims = _shape_dims(table[instr.operands[0]].type_str)
+        for c in cdims:
+            if c < len(lhs_dims):
+                csize *= lhs_dims[c]
+    return 2.0 * out_elems * csize
+
+
+def analyze(text: str) -> dict:
+    comps, entry = parse_hlo(text)
+    memo: dict[str, dict] = {}
+
+    def comp_cost(name: str) -> dict:
+        if name in memo:
+            return memo[name]
+        memo[name] = dict(_ZERO, coll=dict(_ZERO["coll"]))  # guard recursion
+        total = {"flops": 0.0, "coll_bytes": 0.0, "coll_count": 0,
+                 "traffic": 0.0, "out_bytes": 0.0,
+                 "coll": {k: 0.0 for k in _COLLECTIVES}}
+        table = comps.get(name, {})
+        for ins in table.values():
+            op = ins.op
+            if op == "dot":
+                total["flops"] += _dot_flops(ins, table)
+            base = op.replace("-start", "")
+            if base in _COLLECTIVES and not op.endswith("-done"):
+                b = tensor_bytes(ins.type_str)
+                total["coll_bytes"] += b
+                total["coll"][base] += b
+                total["coll_count"] += 1
+            if op == "while":
+                mb = re.search(r"body=%([\w.\-]+)", ins.attrs)
+                trips = _trip_count(ins, comps)
+                if mb and mb.group(1) in comps:
+                    sub = comp_cost(mb.group(1))
+                    for k in ("flops", "coll_bytes", "coll_count", "traffic",
+                              "out_bytes"):
+                        total[k] += sub[k] * trips
+                    for k, v in sub["coll"].items():
+                        total["coll"][k] += v * trips
+                continue
+            if op in ("fusion", "call", "custom-call"):
+                mc = re.search(r"(?:calls|to)=%([\w.\-]+)", ins.attrs)
+                if mc and mc.group(1) in comps:
+                    sub = comp_cost(mc.group(1))
+                    total["flops"] += sub["flops"]
+                    total["coll_bytes"] += sub["coll_bytes"]
+                    total["coll_count"] += sub["coll_count"]
+                    for k, v in sub["coll"].items():
+                        total["coll"][k] += v
+                    # traffic: fusion internals stay on-chip; count the
+                    # fusion op's own operands+output below.
+            if op == "conditional":
+                branches = re.findall(r"%([\w.\-]+)", ins.attrs)
+                sub_costs = [comp_cost(b) for b in branches if b in comps]
+                if sub_costs:
+                    best = max(sub_costs, key=lambda c: c["flops"])
+                    for k in ("flops", "coll_bytes", "coll_count", "traffic",
+                              "out_bytes"):
+                        total[k] += best[k]
+                    for k, v in best["coll"].items():
+                        total["coll"][k] += v
+                continue
+            if op not in _SKIP_TRAFFIC:
+                out_b = tensor_bytes(ins.type_str)
+                b = out_b
+                for o in ins.operands:
+                    if o in table:
+                        b += tensor_bytes(table[o].type_str)
+                total["traffic"] += b
+                total["out_bytes"] += out_b
+        memo[name] = total
+        return total
+
+    # fusion-internal computations are only reached via calls; evaluate entry
+    result = comp_cost(entry)
+    result["entry"] = entry
+    return result
+
+
+def analyze_compiled(compiled) -> dict:
+    return analyze(compiled.as_text())
+
+
+if __name__ == "__main__":
+    import sys
+    with open(sys.argv[1]) as f:
+        print(json.dumps(analyze(f.read()), indent=1))

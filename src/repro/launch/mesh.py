@@ -1,0 +1,29 @@
+"""Production meshes.
+
+Defined as a FUNCTION so importing this module never touches jax device
+state (jax locks the device count on first backend init — the dry-run must
+set XLA_FLAGS before anything calls this).
+
+  single-pod:  (16, 16)      axes ("data", "model")          — 256 chips
+  multi-pod:   (2, 16, 16)   axes ("pod", "data", "model")   — 512 chips
+
+The ``pod`` axis is pure data parallelism: the only cross-pod collective is
+the per-step gradient all-reduce, which is what survives a DCN hop at
+1000+ node scale.  ``model`` carries TP / EP / vocab / embedding-row
+parallelism and stays inside the pod's ICI domain.
+"""
+from __future__ import annotations
+
+import jax
+
+
+def make_production_mesh(*, multi_pod: bool = False):
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    return jax.make_mesh(shape, axes)
+
+
+def make_host_mesh():
+    """1-device mesh with the production axis names — lets the same pjit
+    code paths run in smoke tests / examples on this CPU container."""
+    return jax.make_mesh((1, 1), ("data", "model"))

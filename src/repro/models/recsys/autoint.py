@@ -1,0 +1,133 @@
+"""AutoInt (Song et al. 2019, arXiv:1810.11921).
+
+Assigned config: n_sparse=39, embed_dim=16, 3 interacting (self-attention)
+layers, 2 heads, d_attn=32.  Each interacting layer applies multi-head
+self-attention over the m field embeddings with a residual projection and
+ReLU; the final field states are concatenated and mapped to a logit, plus a
+global first-order term.
+
+Note the structural parallel the paper draws: AutoInt's field self-attention
+is O(m^2 (d_attn + k)) per example — the same quadratic-in-fields cost class
+as full FwFM.  ``use_dplr_head`` optionally adds the paper's O(rho m k)
+DPLR-FwFM branch.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.dplr import DPLRParams, init_dplr
+from repro.core.fields import FeatureLayout
+from repro.core.interactions import dplr_pairwise
+from repro.embedding.bag import (
+    init_embedding_table,
+    lookup_field_embeddings,
+    lookup_linear_terms,
+    padded_rows,
+)
+from repro.models.layers import glorot, init_mha, apply_mha
+
+
+@dataclasses.dataclass(frozen=True)
+class AutoIntConfig:
+    layout: FeatureLayout
+    embed_dim: int = 16
+    n_attn_layers: int = 3
+    n_heads: int = 2
+    d_attn: int = 32          # total attention width (per paper's config)
+    use_dplr_head: bool = False
+    dplr_rank: int = 3
+    dtype: Any = jnp.float32
+
+
+def init(rng: jax.Array, cfg: AutoIntConfig) -> dict:
+    keys = jax.random.split(rng, cfg.n_attn_layers * 2 + 3)
+    d_head = cfg.d_attn // cfg.n_heads
+    d = cfg.embed_dim
+    layers = {}
+    for i in range(cfg.n_attn_layers):
+        d_in = d if i == 0 else cfg.d_attn
+        layers[f"attn_{i}"] = init_mha(keys[2 * i], d_in, d_head, cfg.n_heads,
+                                       d_out=cfg.d_attn, dtype=cfg.dtype)
+        layers[f"res_{i}"] = glorot(keys[2 * i + 1], (d_in, cfg.d_attn), cfg.dtype)
+    rows = padded_rows(cfg.layout.total_vocab)
+    params = {
+        "bias": jnp.zeros((), cfg.dtype),
+        "linear": jnp.zeros((rows,), cfg.dtype),
+        "embedding": init_embedding_table(keys[-3], rows, d,
+                                          dtype=cfg.dtype),
+        "out_w": glorot(keys[-2], (cfg.layout.n_fields * cfg.d_attn, 1), cfg.dtype),
+        **layers,
+    }
+    if cfg.use_dplr_head:
+        u, e = init_dplr(keys[-1], cfg.layout.n_fields, cfg.dplr_rank, dtype=cfg.dtype)
+        params["U"], params["e"] = u, e
+    return params
+
+
+def _interact(params: dict, cfg: AutoIntConfig, V: jax.Array) -> jax.Array:
+    h = V
+    for i in range(cfg.n_attn_layers):
+        attn = apply_mha(params[f"attn_{i}"], h, n_heads=cfg.n_heads, scaled=False)
+        h = jax.nn.relu(attn + h @ params[f"res_{i}"])
+    return h
+
+
+def apply(params: dict, cfg: AutoIntConfig, batch: dict, take_fn=None) -> jax.Array:
+    ids, w = batch["ids"], batch["weights"]
+    V = lookup_field_embeddings(params["embedding"], cfg.layout, ids, w,
+                                take_fn=take_fn)
+    h = _interact(params, cfg, V)
+    logit = (h.reshape(*h.shape[:-2], -1) @ params["out_w"])[..., 0]
+    lin = lookup_linear_terms(params["linear"], cfg.layout, ids, w,
+                              take_fn=take_fn)
+    out = params["bias"] + lin + logit
+    if cfg.use_dplr_head:
+        out = out + dplr_pairwise(V, DPLRParams(params["U"], params["e"]))
+    return out
+
+
+def loss(params: dict, cfg: AutoIntConfig, batch: dict, take_fn=None) -> jax.Array:
+    logits = apply(params, cfg, batch, take_fn=take_fn)
+    y = batch["label"].astype(logits.dtype)
+    per = jnp.maximum(logits, 0) - logits * y + jnp.log1p(jnp.exp(-jnp.abs(logits)))
+    return per.mean()
+
+
+def rank_items(params: dict, cfg: AutoIntConfig, query: dict,
+               take_fn=None) -> jax.Array:
+    """Candidate scoring.  Field self-attention must see the joint
+    (context + item) field set, so — unlike DPLR-FwFM — the full O(m^2)
+    interaction re-runs per candidate; only the embedding gathers of the
+    context side are shared.  This is the cost profile the paper's technique
+    removes for FwFM-class models."""
+    layout = cfg.layout
+    ctx_layout = layout.subset("context")
+    item_layout = layout.subset("item")
+    ctx_vocab = ctx_layout.total_vocab
+    from repro.embedding.bag import embedding_bag
+    V_C = lookup_field_embeddings(params["embedding"], ctx_layout,
+                                  query["context_ids"], query["context_weights"],
+                                  take_fn=take_fn)
+    item_rows = query["item_ids"] + ctx_vocab + jnp.asarray(item_layout.slot_offsets)
+    V_I = embedding_bag(params["embedding"], item_rows, query["item_weights"],
+                        item_layout.slot_to_field, item_layout.n_fields,
+                        take_fn=take_fn)
+    V_Cb = jnp.broadcast_to(V_C[..., None, :, :],
+                            (*V_I.shape[:-2], ctx_layout.n_fields, cfg.embed_dim))
+    V = jnp.concatenate([V_Cb, V_I], axis=-2)
+    h = _interact(params, cfg, V)
+    logit = (h.reshape(*h.shape[:-2], -1) @ params["out_w"])[..., 0]
+    lin_c = lookup_linear_terms(params["linear"], ctx_layout,
+                                query["context_ids"], query["context_weights"],
+                                take_fn=take_fn)
+    take = take_fn or (lambda t, i: jnp.take(t, i, axis=0))
+    lin_i = (take(params["linear"].reshape(-1, 1), item_rows)[..., 0]
+             * query["item_weights"]).sum(-1)
+    out = params["bias"] + lin_c[..., None] + lin_i + logit
+    if cfg.use_dplr_head:
+        out = out + dplr_pairwise(V, DPLRParams(params["U"], params["e"]))
+    return out

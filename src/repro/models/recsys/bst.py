@@ -1,0 +1,147 @@
+"""Behavior Sequence Transformer (Chen et al. 2019, arXiv:1905.06874).
+
+Assigned config: embed_dim=32, seq_len=20, n_blocks=1, n_heads=8,
+MLP 1024-512-256.  The user's behavior history (item ids) plus the target
+item form a (seq_len+1)-token sequence; learned positional embeddings are
+added; ``n_blocks`` post-LN transformer blocks run over it; the flattened
+sequence states are concatenated with the "other features" (context field
+embeddings) and fed to the MLP head.
+
+Layout convention: all context fields first, then exactly ONE item field —
+the item id vocabulary shared between history tokens and the target item.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.fields import FeatureLayout
+from repro.embedding.bag import (init_embedding_table, lookup_field_embeddings,
+                                padded_rows)
+from repro.models.layers import (
+    apply_layer_norm,
+    apply_mha,
+    apply_mlp,
+    glorot,
+    init_layer_norm,
+    init_mha,
+    init_mlp,
+)
+
+
+@dataclasses.dataclass(frozen=True)
+class BSTConfig:
+    layout: FeatureLayout          # context fields + 1 item field
+    embed_dim: int = 32
+    seq_len: int = 20
+    n_blocks: int = 1
+    n_heads: int = 8
+    ffn_mult: int = 4
+    mlp_dims: tuple[int, ...] = (1024, 512, 256)
+    dtype: Any = jnp.float32
+
+    @property
+    def n_tokens(self) -> int:
+        return self.seq_len + 1   # history + target item
+
+
+def init(rng: jax.Array, cfg: BSTConfig) -> dict:
+    d = cfg.embed_dim
+    keys = jax.random.split(rng, 4 + 4 * cfg.n_blocks)
+    blocks = {}
+    for i in range(cfg.n_blocks):
+        k0, k1 = keys[4 + 4 * i], keys[5 + 4 * i]
+        blocks[f"block_{i}"] = {
+            "ln1": init_layer_norm(d, cfg.dtype),
+            "mha": init_mha(k0, d, d // cfg.n_heads, cfg.n_heads, dtype=cfg.dtype),
+            "ln2": init_layer_norm(d, cfg.dtype),
+            "ffn": init_mlp(k1, [d, cfg.ffn_mult * d, d], cfg.dtype),
+        }
+    n_ctx = cfg.layout.n_context
+    mlp_in = cfg.n_tokens * d + n_ctx * d
+    return {
+        "embedding": init_embedding_table(keys[0], padded_rows(cfg.layout.total_vocab),
+                                          d, dtype=cfg.dtype),
+        "pos": (jax.random.normal(keys[1], (cfg.n_tokens, d)) * 0.02).astype(cfg.dtype),
+        "head": init_mlp(keys[2], [mlp_in, *cfg.mlp_dims, 1], cfg.dtype),
+        **blocks,
+    }
+
+
+def _item_arena_offset(cfg: BSTConfig) -> int:
+    return int(cfg.layout.field_offsets[cfg.layout.n_context])
+
+
+def _encode_sequence(params: dict, cfg: BSTConfig, hist_ids, hist_mask, target_ids,
+                     take_fn=None):
+    """(batch..., L) history + (batch...,) target -> (batch..., L+1, d)."""
+    table = params["embedding"]
+    take = take_fn or (lambda t, i: jnp.take(t, i, axis=0))
+    off = _item_arena_offset(cfg)
+    hist_e = take(table, hist_ids + off)
+    tgt_e = take(table, target_ids + off)
+    seq = jnp.concatenate([hist_e, tgt_e[..., None, :]], axis=-2) + params["pos"]
+    mask1d = jnp.concatenate(
+        [hist_mask, jnp.ones((*hist_mask.shape[:-1], 1), hist_mask.dtype)], axis=-1
+    )
+    attn_mask = mask1d[..., None, :] * mask1d[..., :, None]
+    h = seq
+    for i in range(cfg.n_blocks):
+        blk = params[f"block_{i}"]
+        a = apply_mha(blk["mha"], h, n_heads=cfg.n_heads, mask=attn_mask)
+        h = apply_layer_norm(blk["ln1"], h + a)
+        f = apply_mlp(blk["ffn"], h, activation=jax.nn.leaky_relu)
+        h = apply_layer_norm(blk["ln2"], h + f)
+    return h * mask1d[..., None]
+
+
+def apply(params: dict, cfg: BSTConfig, batch: dict, take_fn=None) -> jax.Array:
+    """batch: ids/weights (context+item slots), hist_ids, hist_mask."""
+    layout = cfg.layout
+    V = lookup_field_embeddings(params["embedding"], layout, batch["ids"],
+                                batch["weights"], take_fn=take_fn)
+    n_ctx = layout.n_context
+    target_ids = batch["ids"][..., layout.n_slots - 1]   # single item slot (last)
+    h = _encode_sequence(params, cfg, batch["hist_ids"], batch["hist_mask"],
+                         target_ids, take_fn=take_fn)
+    feats = jnp.concatenate(
+        [h.reshape(*h.shape[:-2], -1), V[..., :n_ctx, :].reshape(*V.shape[:-2], -1)],
+        axis=-1,
+    )
+    return apply_mlp(params["head"], feats, activation=jax.nn.leaky_relu)[..., 0]
+
+
+def loss(params: dict, cfg: BSTConfig, batch: dict, take_fn=None) -> jax.Array:
+    logits = apply(params, cfg, batch, take_fn=take_fn)
+    y = batch["label"].astype(logits.dtype)
+    per = jnp.maximum(logits, 0) - logits * y + jnp.log1p(jnp.exp(-jnp.abs(logits)))
+    return per.mean()
+
+
+def rank_items(params: dict, cfg: BSTConfig, query: dict,
+               take_fn=None) -> jax.Array:
+    """Score n candidate items: the target item sits INSIDE the transformer
+    sequence, so the whole encoder re-runs per candidate (cost profile:
+    O(n * L^2 d) — the expensive end of the serving spectrum).
+
+    query: context_ids/context_weights, hist_ids (Bq, L), hist_mask,
+           item_ids (Bq, n, 1).
+    """
+    layout = cfg.layout
+    ctx_layout = layout.subset("context")
+    V_C = lookup_field_embeddings(params["embedding"], ctx_layout,
+                                  query["context_ids"], query["context_weights"],
+                                  take_fn=take_fn)
+    n = query["item_ids"].shape[-2]
+    hist_ids = jnp.broadcast_to(query["hist_ids"][..., None, :],
+                                (*query["hist_ids"].shape[:-1], n, cfg.seq_len))
+    hist_mask = jnp.broadcast_to(query["hist_mask"][..., None, :], hist_ids.shape)
+    h = _encode_sequence(params, cfg, hist_ids, hist_mask,
+                         query["item_ids"][..., 0], take_fn=take_fn)
+    ctx_flat = V_C.reshape(*V_C.shape[:-2], -1)
+    ctx_flat = jnp.broadcast_to(ctx_flat[..., None, :], (*h.shape[:-3], n, ctx_flat.shape[-1]))
+    feats = jnp.concatenate([h.reshape(*h.shape[:-2], -1), ctx_flat], axis=-1)
+    return apply_mlp(params["head"], feats, activation=jax.nn.leaky_relu)[..., 0]

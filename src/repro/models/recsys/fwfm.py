@@ -1,0 +1,286 @@
+"""The paper's model family: FM / FwFM / pruned-FwFM / DPLR-FwFM.
+
+    phi(x) = b0 + <b, x> + pairwise(V)                    (Sections 3-4)
+
+with ``pairwise`` selected by ``cfg.interaction``:
+    "fm"     - Rendle's O(mk) identity
+    "fwfm"   - full O(m^2 k) field-weighted interactions (Eq. 3)
+    "dplr"   - the paper's O(rho m k) reformulation (Prop. 1) [contribution]
+Pruned FwFM is not a training-time variant: per the paper's protocol a
+trained "fwfm" model is magnitude-pruned post hoc (``repro.core.pruning``)
+and served through the pruned ranking path.
+
+Two serving entry points:
+  * ``apply``       - pointwise scoring of full rows (training / eval)
+  * ``rank_items``  - Algorithm 1: one context, n candidate items, with the
+                      context computation cached (the latency-critical path)
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import ranking as rk
+from repro.core.dplr import DPLRParams, init_dplr
+from repro.core.fields import FeatureLayout
+from repro.core.interactions import (
+    dplr_pairwise,
+    fm_pairwise,
+    fwfm_pairwise,
+    pruned_pairwise_dense,
+)
+from repro.embedding.bag import (
+    init_embedding_table,
+    lookup_field_embeddings,
+    lookup_linear_terms,
+    padded_rows,
+)
+
+
+@dataclasses.dataclass(frozen=True)
+class FwFMConfig:
+    layout: FeatureLayout
+    embed_dim: int = 8
+    interaction: str = "dplr"        # fm | fwfm | dplr
+    rank: int = 3                    # DPLR rank rho
+    task: str = "ctr"                # ctr (logloss) | rating (mse)
+    dtype: Any = jnp.float32
+
+    @property
+    def n_fields(self) -> int:
+        return self.layout.n_fields
+
+
+def init(rng: jax.Array, cfg: FwFMConfig) -> dict:
+    k_emb, k_lin, k_int = jax.random.split(rng, 3)
+    rows = padded_rows(cfg.layout.total_vocab)
+    params = {
+        "bias": jnp.zeros((), cfg.dtype),
+        "linear": jnp.zeros((rows,), cfg.dtype),
+        "embedding": init_embedding_table(
+            k_emb, rows, cfg.embed_dim, dtype=cfg.dtype
+        ),
+    }
+    m = cfg.n_fields
+    if cfg.interaction == "fwfm":
+        # symmetric, zero-diagonal; store full matrix, symmetrize in apply.
+        params["R"] = (jax.random.normal(k_int, (m, m)) * 0.1).astype(cfg.dtype)
+    elif cfg.interaction == "dplr":
+        u, e = init_dplr(k_int, m, cfg.rank, dtype=cfg.dtype)
+        params["U"], params["e"] = u, e
+    elif cfg.interaction != "fm":
+        raise ValueError(cfg.interaction)
+    return params
+
+
+def field_matrix(params: dict, cfg: FwFMConfig) -> jax.Array:
+    """Symmetric zero-diagonal R from the raw parameter (fwfm only)."""
+    Rp = params["R"]
+    R = 0.5 * (Rp + Rp.T)
+    return R - jnp.diag(jnp.diag(R))
+
+
+def _pairwise(params: dict, cfg: FwFMConfig, V: jax.Array,
+              pruned_mask: jax.Array | None) -> jax.Array:
+    if cfg.interaction == "fm":
+        return fm_pairwise(V)
+    if cfg.interaction == "fwfm":
+        R = field_matrix(params, cfg)
+        if pruned_mask is not None:
+            return pruned_pairwise_dense(V, R, pruned_mask)
+        return fwfm_pairwise(V, R)
+    return dplr_pairwise(V, DPLRParams(params["U"], params["e"]))
+
+
+def apply(params: dict, cfg: FwFMConfig, batch: dict,
+          pruned_mask: jax.Array | None = None, take_fn=None) -> jax.Array:
+    """Pointwise logits/scores for full rows: batch = {ids, weights}."""
+    ids, w = batch["ids"], batch["weights"]
+    V = lookup_field_embeddings(params["embedding"], cfg.layout, ids, w,
+                                take_fn=take_fn)
+    lin = lookup_linear_terms(params["linear"], cfg.layout, ids, w,
+                              take_fn=take_fn)
+    return params["bias"] + lin + _pairwise(params, cfg, V, pruned_mask)
+
+
+def loss(params: dict, cfg: FwFMConfig, batch: dict, take_fn=None) -> jax.Array:
+    logits = apply(params, cfg, batch, take_fn=take_fn)
+    y = batch["label"].astype(logits.dtype)
+    if cfg.task == "ctr":
+        # numerically-stable binary cross-entropy on logits
+        per = jnp.maximum(logits, 0) - logits * y + jnp.log1p(jnp.exp(-jnp.abs(logits)))
+    else:
+        per = (logits - y) ** 2
+    return per.mean()
+
+
+# ---------------------------------------------------------------------------
+# Ranking (Algorithm 1 and cached baselines)
+# ---------------------------------------------------------------------------
+
+def _check_context_first(layout: FeatureLayout) -> None:
+    kinds = [f.kind for f in layout.fields]
+    nC = layout.n_context
+    if kinds != ["context"] * nC + ["item"] * (len(kinds) - nC):
+        raise ValueError("rank_items requires context fields before item fields")
+
+
+def rank_items(params: dict, cfg: FwFMConfig, query: dict,
+               pruned: Any = None, take_fn=None) -> jax.Array:
+    """Score n items for each query context.  Shapes:
+
+        query = {
+          "context_ids":     (Bq, n_ctx_slots),
+          "context_weights": (Bq, n_ctx_slots),
+          "item_ids":        (Bq, n, n_item_slots),
+          "item_weights":    (Bq, n, n_item_slots),
+        }
+
+    Returns (Bq, n) scores.  The context-only work is O(1) per query,
+    independent of n — the paper's Algorithm 1.  ``pruned`` is an optional
+    ``repro.core.pruning.PrunedR`` for serving a pruned fwfm model.
+    """
+    layout = cfg.layout
+    _check_context_first(layout)
+    ctx_layout = layout.subset("context")
+    item_layout = layout.subset("item")
+    # item-field arena offsets start after all context vocab rows
+    ctx_vocab = ctx_layout.total_vocab
+    table = params["embedding"]
+    lin = params["linear"]
+
+    V_C = lookup_field_embeddings(table, ctx_layout, query["context_ids"],
+                                  query["context_weights"], take_fn=take_fn)
+    item_arena_ids = query["item_ids"] + ctx_vocab
+    from repro.embedding.bag import embedding_bag
+    V_I = embedding_bag(table, item_arena_ids + jnp.asarray(item_layout.slot_offsets),
+                        query["item_weights"], item_layout.slot_to_field,
+                        item_layout.n_fields, take_fn=take_fn)
+
+    # first-order terms: context part cached, item part per item
+    lin_C = lookup_linear_terms(lin, ctx_layout, query["context_ids"],
+                                query["context_weights"], take_fn=take_fn)
+    lin_I = lookup_linear_terms(lin, item_layout, item_arena_ids,
+                                query["item_weights"], take_fn=take_fn)
+    first_order = params["bias"] + lin_C[..., None] + lin_I
+
+    nC = layout.n_context
+    if cfg.interaction == "fm":
+        cache = rk.fm_context_cache(V_C)
+        pw = rk.fm_score_items(cache, V_I)
+    elif cfg.interaction == "dplr":
+        p = DPLRParams(params["U"], params["e"])
+        cache = rk.dplr_context_cache(p, V_C, nC)
+        pw = rk.dplr_score_items(p, cache, V_I, nC)
+    elif pruned is not None:
+        groups = rk.split_pruned_entries(pruned.entries_i, pruned.entries_j,
+                                         pruned.entries_r, nC)
+        cache = rk.pruned_context_cache(groups, V_C, layout.n_item)
+        pw = rk.pruned_score_items(groups, cache, V_I)
+    else:
+        R = field_matrix(params, cfg)
+        cache = rk.fwfm_context_cache(R, V_C, nC)
+        pw = rk.fwfm_score_items(R, cache, V_I, nC)
+    return first_order + pw
+
+
+# ---------------------------------------------------------------------------
+# Model-parallel DPLR scoring (beyond-paper optimization, EXPERIMENTS.md
+# §Perf): the paper's Proposition-1 projection is LINEAR in the field
+# embeddings, so it distributes over the sharded-arena partial sums:
+#
+#     P = U V = U (sum_shards V_s) = sum_shards (U V_s)
+#
+# Each model shard projects its locally-owned embedding rows to the rank-rho
+# subspace BEFORE the cross-shard reduction, so the psum moves
+# (rho*k + 2) floats per item instead of (m_item*k + m_item + ...) —
+# a (m k)/(rho k) ~ 12x collective-byte reduction for the paper's deployed
+# geometry — and the projection FLOPs spread across the model axis.
+# The quadratic d-term stays exact because every one-hot field's embedding
+# row lives on exactly one shard (sum ||v_i||^2 = sum_shards ||v_i^s||^2).
+# ---------------------------------------------------------------------------
+
+def rank_items_mp(params: dict, cfg: FwFMConfig, query: dict, *,
+                  mesh, item_spec, model_axis: str = "model") -> jax.Array:
+    """Distributed Algorithm 1 for ``interaction == 'dplr'`` models.
+
+    ``item_spec``: PartitionSpec of the (Bq, n, slots) item ids (batch-dim
+    sharding over the DP axes).  Requires a one-hot layout (multiplicity 1
+    for every field).
+    """
+    import numpy as np
+    from functools import partial
+    from jax.sharding import PartitionSpec as P
+
+    assert cfg.interaction == "dplr"
+    layout = cfg.layout
+    _check_context_first(layout)
+    assert all(f.multiplicity == 1 for f in layout.fields), \
+        "model-parallel d-term requires one-hot fields"
+    nC = layout.n_context
+    mI = layout.n_item
+    k = cfg.embed_dim
+    rho = cfg.rank
+
+    ctx_offsets = jnp.asarray(layout.field_offsets[:nC])
+    item_offsets = jnp.asarray(layout.field_offsets[nC:])
+
+    def body(table, lin, U, e, bias, ctx_ids, ctx_w, item_ids, item_w):
+        shard = jax.lax.axis_index(model_axis)
+        rows_per = table.shape[0]
+        d = -jnp.einsum("r,rm,rm->m", e, U, U)
+
+        def local_rows(ids):
+            owner = ids // rows_per
+            local = ids - owner * rows_per
+            mine = owner == shard
+            rows = jnp.take(table, jnp.where(mine, local, 0), axis=0)
+            lin_v = jnp.take(lin, jnp.where(mine, local, 0), axis=0)
+            rows = jnp.where(mine[..., None], rows, 0.0)
+            lin_v = jnp.where(mine, lin_v, 0.0)
+            return rows, lin_v
+
+        # context side (once per query); the 0.5 of Eq. (5) is folded into
+        # the d-term partials so the psum'd scalars are final addends.
+        # weights cast to the table dtype — a stray f32 here promotes every
+        # downstream partial (and its psum) to f32.
+        ctx_w = ctx_w.astype(table.dtype)
+        item_w = item_w.astype(table.dtype)
+        U = U.astype(table.dtype)
+        e = e.astype(table.dtype)
+        vC, linC = local_rows(ctx_ids + ctx_offsets)         # (Bq, nC, k)
+        vC = vC * ctx_w[..., None]
+        P_C_part = jnp.einsum("rm,qmk->qrk", U[:, :nC], vC)
+        s_C_part = (0.5 * jnp.einsum("qmk,m->q", vC * vC, d[:nC])
+                    + (linC * ctx_w).sum(-1))
+
+        # item side (per candidate)
+        vI, linI = local_rows(item_ids + item_offsets)       # (Bq, n, mI, k)
+        vI = vI * item_w[..., None]
+        P_I_part = jnp.einsum("rm,qnmk->qnrk", U[:, nC:], vI)
+        s_I_part = (0.5 * jnp.einsum("qnmk,m->qn", vI * vI, d[nC:])
+                    + (linI * item_w).sum(-1))
+
+        # the ONLY cross-shard traffic: rank-rho projections + scalars
+        P_C = jax.lax.psum(P_C_part, model_axis)             # (Bq, rho, k)
+        s_C = jax.lax.psum(s_C_part, model_axis)             # (Bq,)
+        P_I = jax.lax.psum(P_I_part, model_axis)             # (Bq, n, rho, k)
+        s_I = jax.lax.psum(s_I_part, model_axis)             # (Bq, n)
+
+        Pfull = P_C[:, None] + P_I
+        term_e = 0.5 * jnp.einsum("qnrk,r->qn", Pfull * Pfull, e)
+        return bias + s_C[:, None] + s_I + term_e
+
+    qspec = P(*item_spec[:-1])    # scores follow the item batch dims
+    lin2d = params["linear"]
+    return jax.shard_map(
+        body, mesh=mesh,
+        in_specs=(P(model_axis, None), P(model_axis), P(), P(), P(),
+                  P(None, None), P(None, None), item_spec, item_spec),
+        out_specs=qspec,
+    )(params["embedding"], lin2d, params["U"], params["e"], params["bias"],
+      query["context_ids"], query["context_weights"],
+      query["item_ids"], query["item_weights"])

@@ -1,0 +1,130 @@
+"""MIND: Multi-Interest Network with Dynamic routing (Li et al. 2019,
+arXiv:1904.08030).
+
+Assigned config: embed_dim=64, n_interests=4, capsule_iters=3.
+
+Pipeline: user behavior history (item ids) -> behavior capsules ->
+Behavior-to-Interest (B2I) dynamic routing with a shared bilinear map S ->
+``n_interests`` interest capsules (squash nonlinearity) -> label-aware
+attention (softmax over pow-p scaled interest-target dots) for training.
+Retrieval serving scores a candidate as max_k <interest_k, e_item> — i.e.
+the per-candidate cost is O(K k), already "item-only" in the paper's sense.
+
+Routing logits are randomly initialized and NOT learned (per the paper:
+fixed random init breaks interest symmetry); we sample them at ``init`` and
+stop gradients through them.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.fields import FeatureLayout
+from repro.embedding.bag import (init_embedding_table, lookup_field_embeddings,
+                                padded_rows)
+from repro.models.layers import glorot
+
+
+@dataclasses.dataclass(frozen=True)
+class MINDConfig:
+    layout: FeatureLayout          # context fields + 1 item field (shared vocab)
+    embed_dim: int = 64
+    n_interests: int = 4
+    capsule_iters: int = 3
+    seq_len: int = 50
+    label_pow: float = 2.0         # p in label-aware attention
+    n_neg: int = 8                 # sampled-softmax negatives (training)
+    dtype: Any = jnp.float32
+
+
+def init(rng: jax.Array, cfg: MINDConfig) -> dict:
+    k_emb, k_s, k_b = jax.random.split(rng, 3)
+    d = cfg.embed_dim
+    return {
+        "embedding": init_embedding_table(k_emb, padded_rows(cfg.layout.total_vocab),
+                                          d, dtype=cfg.dtype),
+        "S": glorot(k_s, (d, d), cfg.dtype),               # shared bilinear map
+        "b_init": (jax.random.normal(k_b, (cfg.n_interests, cfg.seq_len))).astype(cfg.dtype),
+    }
+
+
+def _item_arena_offset(cfg: MINDConfig) -> int:
+    return int(cfg.layout.field_offsets[cfg.layout.n_context])
+
+
+def _squash(v: jax.Array) -> jax.Array:
+    n2 = (v * v).sum(axis=-1, keepdims=True)
+    return (n2 / (1.0 + n2)) * v * jax.lax.rsqrt(n2 + 1e-9)
+
+
+def user_interests(params: dict, cfg: MINDConfig, hist_ids: jax.Array,
+                   hist_mask: jax.Array, take_fn=None) -> jax.Array:
+    """(batch..., L) -> (batch..., K, d) interest capsules via B2I routing."""
+    off = _item_arena_offset(cfg)
+    take = take_fn or (lambda t, i: jnp.take(t, i, axis=0))
+    e = take(params["embedding"], hist_ids + off)               # (..., L, d)
+    low = (e @ params["S"]) * hist_mask[..., None]              # S e_i
+    b = jax.lax.stop_gradient(params["b_init"])                 # (K, L), frozen
+    b = jnp.broadcast_to(b, (*low.shape[:-2], cfg.n_interests, cfg.seq_len))
+    neg = jnp.asarray(-1e30, low.dtype)
+    for _ in range(cfg.capsule_iters):
+        logits = jnp.where(hist_mask[..., None, :] > 0, b, neg)
+        w = jax.nn.softmax(logits, axis=-2)                     # over interests
+        caps = _squash(jnp.einsum("...kl,...ld->...kd", w * hist_mask[..., None, :], low))
+        b = b + jnp.einsum("...kd,...ld->...kl", caps, low)
+    return caps
+
+
+def label_aware_user_vec(cfg: MINDConfig, interests: jax.Array,
+                         target_e: jax.Array) -> jax.Array:
+    """Label-aware attention: softmax((K e_t)^p scaled dots) combination."""
+    dots = jnp.einsum("...kd,...d->...k", interests, target_e)
+    attn = jax.nn.softmax(cfg.label_pow * dots, axis=-1)
+    return jnp.einsum("...k,...kd->...d", attn, interests)
+
+
+def loss(params: dict, cfg: MINDConfig, batch: dict, take_fn=None) -> jax.Array:
+    """Sampled-softmax over {target} + n_neg sampled item ids.
+
+    batch: hist_ids (B, L), hist_mask (B, L), target_id (B,),
+           neg_ids (B, n_neg).
+    """
+    off = _item_arena_offset(cfg)
+    take = take_fn or (lambda t, i: jnp.take(t, i, axis=0))
+    interests = user_interests(params, cfg, batch["hist_ids"], batch["hist_mask"],
+                               take_fn=take_fn)
+    tgt_e = take(params["embedding"], batch["target_id"] + off)
+    user = label_aware_user_vec(cfg, interests, tgt_e)
+    neg_e = take(params["embedding"], batch["neg_ids"] + off)
+    pos_logit = (user * tgt_e).sum(-1, keepdims=True)
+    neg_logit = jnp.einsum("...d,...nd->...n", user, neg_e)
+    logits = jnp.concatenate([pos_logit, neg_logit], axis=-1)
+    return -jax.nn.log_softmax(logits, axis=-1)[..., 0].mean()
+
+
+def apply(params: dict, cfg: MINDConfig, batch: dict) -> jax.Array:
+    """Pointwise score of (user history, target item) — eval convenience."""
+    off = _item_arena_offset(cfg)
+    interests = user_interests(params, cfg, batch["hist_ids"], batch["hist_mask"])
+    tgt_e = jnp.take(params["embedding"], batch["target_id"] + off, axis=0)
+    return jnp.einsum("...kd,...d->...k", interests, tgt_e).max(axis=-1)
+
+
+def rank_items(params: dict, cfg: MINDConfig, query: dict,
+               take_fn=None) -> jax.Array:
+    """Retrieval scoring: max over interests of <interest, item>.
+
+    query: hist_ids (Bq, L), hist_mask (Bq, L), item_ids (Bq, n, 1).
+    The interest extraction runs ONCE per query; per-candidate cost is a
+    K x d dot — a batched (n, d) @ (d, K) matmul -> max over K.
+    """
+    off = _item_arena_offset(cfg)
+    take = take_fn or (lambda t, i: jnp.take(t, i, axis=0))
+    interests = user_interests(params, cfg, query["hist_ids"], query["hist_mask"],
+                               take_fn=take_fn)
+    item_e = take(params["embedding"], query["item_ids"][..., 0] + off)
+    scores = jnp.einsum("...nd,...kd->...nk", item_e, interests)
+    return scores.max(axis=-1)

@@ -1,0 +1,155 @@
+"""Attention for the LM architectures: GQA + RoPE, with three execution
+strategies sharing one numerics definition:
+
+  * ``dense``    - materializes (B, H, Sq, Skv) scores.  Only for short
+                   sequences / smoke tests.
+  * ``chunked``  - lax.scan over query chunks; peak score memory is
+                   (B, H, q_chunk, Skv).  This is the dry-run/compile path —
+                   no S x S tensor ever exists at 32k/500k.
+  * windowed     - chunked + a static sliding window W: each query chunk
+                   attends to a dynamic_slice of W + q_chunk keys, so FLOPs
+                   scale as O(S * W) instead of O(S^2)  (mixtral SWA,
+                   gemma3 local layers).
+  * decode       - single-position queries against a (possibly
+                   sequence-sharded) KV cache; softmax reductions over the
+                   sharded key axis become psums under SPMD (flash-decoding
+                   split-K, expressed at the XLA level).
+
+The Pallas flash kernel (repro.kernels.flash_attention) implements the same
+contract for real TPU runs and is validated against these in interpret mode.
+"""
+from __future__ import annotations
+
+import numpy as np
+
+import jax
+import jax.numpy as jnp
+
+NEG_INF = -1e30
+
+
+# ---------------------------------------------------------------------------
+# RoPE
+# ---------------------------------------------------------------------------
+
+def rope(x: jax.Array, positions: jax.Array, theta: float) -> jax.Array:
+    """x: (..., S, H, hd), positions: broadcastable to (..., S)."""
+    hd = x.shape[-1]
+    half = hd // 2
+    freqs = 1.0 / (theta ** (np.arange(0, half) * 2.0 / hd))
+    ang = positions[..., None].astype(jnp.float32) * freqs     # (..., S, half)
+    cos = jnp.cos(ang)[..., None, :].astype(x.dtype)           # (..., S, 1, half)
+    sin = jnp.sin(ang)[..., None, :].astype(x.dtype)
+    x1, x2 = x[..., :half], x[..., half:]
+    return jnp.concatenate([x1 * cos - x2 * sin, x2 * cos + x1 * sin], axis=-1)
+
+
+# ---------------------------------------------------------------------------
+# Core masked attention on explicit position indices (GQA layout).
+#   q: (B, Sq, K, G, hd)   k/v: (B, Skv, K, hd)
+# ---------------------------------------------------------------------------
+
+def _attend(q, k, v, q_pos, k_pos, window, softmax_scale):
+    logits = jnp.einsum("bqkgh,bskh->bkgqs", q, k).astype(jnp.float32)
+    logits = logits * softmax_scale
+    causal = k_pos[..., None, None, None, :] <= q_pos[..., None, None, :, None]
+    mask = causal
+    if window is not None:
+        mask = mask & (
+            k_pos[..., None, None, None, :]
+            > q_pos[..., None, None, :, None] - window
+        )
+    logits = jnp.where(mask, logits, NEG_INF)
+    probs = jax.nn.softmax(logits, axis=-1).astype(v.dtype)
+    return jnp.einsum("bkgqs,bskh->bqkgh", probs, v)
+
+
+def gqa_attention(
+    q: jax.Array,           # (B, Sq, H, hd)
+    k: jax.Array,           # (B, Skv, KV, hd)
+    v: jax.Array,           # (B, Skv, KV, hd)
+    *,
+    n_kv_heads: int,
+    q_positions: jax.Array,   # (B, Sq) or (Sq,)
+    k_positions: jax.Array,   # (B, Skv) or (Skv,)
+    window: int | None = None,
+    q_chunk: int | None = None,
+) -> jax.Array:
+    """Causal (optionally sliding-window) GQA.  Returns (B, Sq, H, hd)."""
+    B, Sq, H, hd = q.shape
+    Skv = k.shape[1]
+    G = H // n_kv_heads
+    scale = 1.0 / np.sqrt(hd)
+    qg = q.reshape(B, Sq, n_kv_heads, G, hd)
+    q_pos = jnp.broadcast_to(q_positions, (B, Sq))
+    k_pos = jnp.broadcast_to(k_positions, (B, Skv))
+
+    if q_chunk is None or Sq <= q_chunk:
+        out = _attend(qg, k, v, q_pos, k_pos, window, scale)
+        return out.reshape(B, Sq, H, hd)
+
+    if Sq % q_chunk != 0:
+        # pad queries to a chunk multiple; padded rows are sliced away.
+        pad = q_chunk - Sq % q_chunk
+        qg_p = jnp.pad(qg, ((0, 0), (0, pad), (0, 0), (0, 0), (0, 0)))
+        qp_p = jnp.pad(q_pos, ((0, 0), (0, pad)), constant_values=0)
+        out = gqa_attention(
+            qg_p.reshape(B, Sq + pad, H, hd), k, v,
+            n_kv_heads=n_kv_heads, q_positions=qp_p, k_positions=k_pos,
+            window=window, q_chunk=q_chunk)
+        return out[:, :Sq]
+    n_chunks = Sq // q_chunk
+    qs = qg.reshape(B, n_chunks, q_chunk, n_kv_heads, G, hd).transpose(1, 0, 2, 3, 4, 5)
+    qp = q_pos.reshape(B, n_chunks, q_chunk).transpose(1, 0, 2)
+
+    use_window_slice = window is not None and (window + q_chunk) < Skv
+    if use_window_slice:
+        # keys needed by chunk i: positions (i*qc - W, i*qc + qc - 1]
+        span = window + q_chunk
+
+        def body(carry, xs):
+            qc_i, qp_i, i = xs
+            start = jnp.clip(i * q_chunk + q_chunk - span, 0, Skv - span)
+            k_i = jax.lax.dynamic_slice_in_dim(k, start, span, axis=1)
+            v_i = jax.lax.dynamic_slice_in_dim(v, start, span, axis=1)
+            kp_i = jax.lax.dynamic_slice_in_dim(k_pos, start, span, axis=1)
+            o = _attend(qc_i, k_i, v_i, qp_i, kp_i, window, scale)
+            return carry, o
+    else:
+
+        def body(carry, xs):
+            qc_i, qp_i, i = xs
+            o = _attend(qc_i, k, v, qp_i, k_pos, window, scale)
+            return carry, o
+
+    idx = jnp.arange(n_chunks)
+    # nested remat: without it, scan saves every chunk's f32 score matrix as
+    # a bwd residual — an (n_chunks, B, KV, G, qc, Skv) stack that dwarfs the
+    # model.  With it, bwd recomputes one chunk's scores at a time.
+    _, outs = jax.lax.scan(jax.checkpoint(body), None, (qs, qp, idx))
+    out = outs.transpose(1, 0, 2, 3, 4, 5).reshape(B, Sq, H, hd)
+    return out
+
+
+def decode_attention(
+    q: jax.Array,            # (B, 1, H, hd) — one new position per sequence
+    k_cache: jax.Array,      # (B, S, KV, hd)
+    v_cache: jax.Array,
+    *,
+    n_kv_heads: int,
+    cache_index: jax.Array,  # () current position (0-based) of the new token
+    window: int | None = None,
+) -> jax.Array:
+    """One-step decode against a full cache (new k/v already written)."""
+    B, _, H, hd = q.shape
+    S = k_cache.shape[1]
+    k_pos = jnp.arange(S)
+    q_pos = jnp.full((B, 1), cache_index)
+    return gqa_attention(
+        q, k_cache, v_cache,
+        n_kv_heads=n_kv_heads,
+        q_positions=q_pos,
+        k_positions=k_pos,
+        window=window,
+        q_chunk=None,
+    )

@@ -1,0 +1,392 @@
+"""Decoder-only LM covering all five assigned architectures:
+
+  starcoder2-7b  dense GQA(kv=4)  GELU MLP        full attention
+  yi-9b          dense GQA(kv=4)  SwiGLU          full attention
+  gemma3-1b      dense GQA(kv=1)  GeGLU, tied emb 5 local : 1 global pattern
+  granite-moe    MoE 32e top-8    SwiGLU experts  full attention
+  mixtral-8x7b   MoE 8e top-2     SwiGLU experts  sliding window (SWA)
+
+Design points:
+  * parameters are stacked (L, ...) and consumed by lax.scan — HLO size and
+    compile time stay flat in depth (essential for the 512-device dry-run)
+  * heterogeneous layer patterns (gemma3's 5:1 local:global) scan over
+    *periods*: params reshape to (n_periods, p, ...) and the scan body runs
+    the p-layer pattern statically; the non-divisible tail runs as a second
+    scan over the truncated pattern
+  * three entry points: ``lm_loss`` (train), ``prefill`` (build KV cache +
+    last logits), ``decode_step`` (one token against the cache)
+  * params are stored f32 (optimizer master copy); compute casts to
+    cfg.compute_dtype (bf16); KV caches are bf16
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any
+
+import numpy as np
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.transformer import attention as attn_lib
+from repro.models.transformer import moe as moe_lib
+
+
+@dataclasses.dataclass(frozen=True)
+class TransformerConfig:
+    name: str
+    n_layers: int
+    d_model: int
+    n_heads: int
+    n_kv_heads: int
+    d_ff: int
+    vocab: int
+    head_dim: int | None = None
+    rope_theta: float = 10000.0
+    mlp_type: str = "swiglu"                 # swiglu | geglu | gelu
+    # per-layer attention pattern, repeated over depth. Entries: window size
+    # (sliding-window attention) or None (full causal).
+    layer_pattern: tuple[Any, ...] = (None,)
+    tie_embeddings: bool = False
+    # MoE (n_experts == 0 -> dense FFN)
+    n_experts: int = 0
+    top_k: int = 0
+    capacity_factor: float = 1.25
+    moe_group_size: int = 512
+    moe_impl: str = "einsum"
+    moe_fused_combine: bool = False
+    aux_loss_weight: float = 0.01
+    # numerics / execution
+    param_dtype: Any = jnp.float32
+    compute_dtype: Any = jnp.bfloat16
+    remat: bool = True
+    q_chunk: int = 512
+    # sequence-chunked cross-entropy: peak logits memory is
+    # (B, loss_chunk, vocab) instead of (B, S, vocab); the chunk fn is
+    # rematerialized so the bwd never holds full-seq logits either.
+    # Essential for gemma3's 262k vocab at 4k x 256 batch.
+    loss_chunk: int = 512
+    # distribution hooks injected by launch/steps.py (None on one device):
+    #   act_constraint(x: (B,S,d))   - sharding constraint on scan carries
+    #       (sequence parallelism: the per-layer residual stack saved for
+    #       bwd shards over the model axis instead of replicating)
+    #   kv_constraint(k: (B,S,KV,hd)) - constraint on per-layer k/v during
+    #       prefill so the collected cache is BORN in the cache layout
+    #       (S over model) instead of being resharded by a giant copy
+    act_constraint: Any = None
+    act_gather: Any = None
+    kv_constraint: Any = None
+    # gradient-accumulation microbatches for train_step (1 = full batch).
+    # Bounds the per-layer activation stacks saved across the layer scan:
+    # peak activation memory scales with batch/micro_batches while grads
+    # accumulate in parameter-sharded f32 buffers.
+    micro_batches: int = 1
+    # FSDP: additionally shard every large weight over the 'data' axis
+    # (GSPMD all-gathers weights per layer, reduce-scatters grads — the
+    # MaxText production scheme).  Required for the 7B+ archs: TP-16 alone
+    # leaves params/16 * 12 bytes of param+optimizer state per chip.
+    fsdp: bool = False
+
+    @property
+    def hd(self) -> int:
+        return self.head_dim or self.d_model // self.n_heads
+
+    @property
+    def vocab_padded(self) -> int:
+        """Vocab rounded up to 128 so the vocab axis shards over any mesh
+        axis <= 128 wide (granite's 49155 -> 49280).  Padded logit columns
+        are masked to -inf in ``_logits``."""
+        return ((self.vocab + 127) // 128) * 128
+
+    @property
+    def is_moe(self) -> bool:
+        return self.n_experts > 0
+
+    @property
+    def moe_cfg(self) -> moe_lib.MoEConfig:
+        return moe_lib.MoEConfig(
+            n_experts=self.n_experts, top_k=self.top_k,
+            capacity_factor=self.capacity_factor,
+            group_size=self.moe_group_size, impl=self.moe_impl,
+            fused_combine=self.moe_fused_combine,
+        )
+
+    def n_params(self) -> int:
+        """Total parameter count (for MODEL_FLOPS = 6*N*D reporting)."""
+        return sum(int(np.prod(s.shape)) for s in jax.tree.leaves(
+            jax.eval_shape(lambda: init(jax.random.PRNGKey(0), self))))
+
+    def n_active_params(self) -> int:
+        """Active params per token (MoE counts top_k of n_experts)."""
+        total = self.n_params()
+        if not self.is_moe:
+            return total
+        expert_block = 3 * self.d_model * self.d_ff * self.n_layers
+        all_experts = expert_block * self.n_experts
+        active = expert_block * self.top_k
+        return total - all_experts + active
+
+
+def _init_linear(rng, shape, dtype):
+    scale = 1.0 / np.sqrt(shape[0] if len(shape) == 2 else shape[1])
+    return (jax.random.normal(rng, shape) * scale).astype(dtype)
+
+
+def init(rng: jax.Array, cfg: TransformerConfig) -> dict:
+    L, d, H, KV, hd, f = (cfg.n_layers, cfg.d_model, cfg.n_heads,
+                          cfg.n_kv_heads, cfg.hd, cfg.d_ff)
+    ks = jax.random.split(rng, 16)
+    dt = cfg.param_dtype
+    layers = {
+        "ln_attn": jnp.ones((L, d), dt),
+        "wq": _init_linear(ks[0], (L, d, H * hd), dt),
+        "wk": _init_linear(ks[1], (L, d, KV * hd), dt),
+        "wv": _init_linear(ks[2], (L, d, KV * hd), dt),
+        "wo": _init_linear(ks[3], (L, H * hd, d), dt),
+        "ln_mlp": jnp.ones((L, d), dt),
+    }
+    if cfg.is_moe:
+        layers["router"] = _init_linear(ks[4], (L, d, cfg.n_experts), dt)
+        E = cfg.n_experts
+        layers["w_gate"] = _init_linear(ks[5], (L, E, d, f), dt)
+        layers["w_in"] = _init_linear(ks[6], (L, E, d, f), dt)
+        layers["w_out"] = _init_linear(ks[7], (L, E, f, d), dt)
+    else:
+        if cfg.mlp_type in ("swiglu", "geglu"):
+            layers["w_gate"] = _init_linear(ks[5], (L, d, f), dt)
+        layers["w_in"] = _init_linear(ks[6], (L, d, f), dt)
+        layers["w_out"] = _init_linear(ks[7], (L, f, d), dt)
+    params = {
+        "embed": (jax.random.normal(ks[8], (cfg.vocab_padded, d)) * 0.02).astype(dt),
+        "layers": layers,
+        "final_ln": jnp.ones((d,), dt),
+    }
+    if not cfg.tie_embeddings:
+        params["lm_head"] = _init_linear(ks[9], (d, cfg.vocab_padded), dt)
+    return params
+
+
+def _rms(x, scale, eps=1e-6):
+    var = (x.astype(jnp.float32) ** 2).mean(-1, keepdims=True)
+    return (x * jax.lax.rsqrt(var + eps).astype(x.dtype)) * scale
+
+
+def _mlp(lp, cfg, x):
+    if cfg.is_moe:
+        return moe_lib.moe_ffn(x, lp["router"], lp["w_gate"], lp["w_in"],
+                               lp["w_out"], cfg.moe_cfg)
+    if cfg.mlp_type == "swiglu":
+        a = jax.nn.silu(x @ lp["w_gate"]) * (x @ lp["w_in"])
+    elif cfg.mlp_type == "geglu":
+        a = jax.nn.gelu(x @ lp["w_gate"]) * (x @ lp["w_in"])
+    else:
+        a = jax.nn.gelu(x @ lp["w_in"])
+    return a @ lp["w_out"]
+
+
+def _layer(lp: dict, cfg: TransformerConfig, window, x, q_positions,
+           kv_slice=None, cache_index=None):
+    """One transformer layer.  lp: this layer's params (no L dim).
+
+    Returns (x, (k, v)) — new k/v for cache construction, or attention uses
+    ``kv_slice`` = (k_cache, v_cache) for decode.
+    """
+    B, S, d = x.shape
+    H, KV, hd = cfg.n_heads, cfg.n_kv_heads, cfg.hd
+    h = _rms(x, lp["ln_attn"])
+    q = (h @ lp["wq"]).reshape(B, S, H, hd)
+    k = (h @ lp["wk"]).reshape(B, S, KV, hd)
+    v = (h @ lp["wv"]).reshape(B, S, KV, hd)
+    q = attn_lib.rope(q, q_positions, cfg.rope_theta)
+    k = attn_lib.rope(k, q_positions, cfg.rope_theta)
+
+    if kv_slice is None:
+        o = attn_lib.gqa_attention(
+            q, k, v, n_kv_heads=KV, q_positions=q_positions,
+            k_positions=q_positions, window=window, q_chunk=cfg.q_chunk)
+        if cfg.kv_constraint is not None:
+            k = cfg.kv_constraint(k)
+            v = cfg.kv_constraint(v)
+        new_kv = (k, v)
+    else:
+        k_cache, v_cache = kv_slice
+        k_cache = jax.lax.dynamic_update_slice_in_dim(
+            k_cache, k.astype(k_cache.dtype), cache_index, axis=1)
+        v_cache = jax.lax.dynamic_update_slice_in_dim(
+            v_cache, v.astype(v_cache.dtype), cache_index, axis=1)
+        o = attn_lib.decode_attention(
+            q, k_cache.astype(q.dtype), v_cache.astype(q.dtype),
+            n_kv_heads=KV, cache_index=cache_index, window=window)
+        new_kv = (k_cache, v_cache)
+
+    x = x + (o.reshape(B, S, H * hd) @ lp["wo"])
+    x = x + _mlp(lp, cfg, _rms(x, lp["ln_mlp"]))
+    return x, new_kv
+
+
+def _pattern_scan(params, cfg, x, q_positions, cache=None, cache_index=None,
+                  collect_kv=False):
+    """Scan layers in pattern periods.  cache: optional (L,2,B,S,KV,hd)."""
+    L = cfg.n_layers
+    p = len(cfg.layer_pattern)
+    layers = params["layers"]
+
+    def run_block(x, block_params, block_cache, pattern):
+        """Run len(pattern) consecutive layers (params stacked on axis 0)."""
+        if cfg.act_gather is not None:
+            # sequence parallelism: the carry arrives sequence-sharded (the
+            # bwd residual stack stays small); gather it ONCE here so the
+            # partitioner all-gathers x instead of the much larger
+            # attention score tensors.
+            x = cfg.act_gather(x)
+        new_kvs = []
+        for j, window in enumerate(pattern):
+            lp = jax.tree.map(lambda a: a[j], block_params)
+            kv_slice = None
+            if block_cache is not None:
+                kv_slice = (block_cache[j, 0], block_cache[j, 1])
+            x, kv = _layer(lp, cfg, window, x, q_positions, kv_slice,
+                           cache_index)
+            new_kvs.append(jnp.stack(kv))
+        if cfg.act_constraint is not None:
+            x = cfg.act_constraint(x)
+        return x, (jnp.stack(new_kvs) if (collect_kv or cache is not None)
+                   else None)
+
+    def scan_over(x, stacked, cache_part, pattern):
+        n = jax.tree.leaves(stacked)[0].shape[0] // len(pattern)
+        resh = jax.tree.map(
+            lambda a: a.reshape(n, len(pattern), *a.shape[1:]), stacked)
+        cache_resh = None
+        if cache_part is not None:
+            cache_resh = cache_part.reshape(n, len(pattern), *cache_part.shape[1:])
+
+        def body(carry, xs):
+            blk, cblk = xs
+            y, kv = run_block(carry, blk, cblk, pattern)
+            return y, kv
+
+        fn = jax.checkpoint(body) if cfg.remat else body
+        x, kvs = jax.lax.scan(fn, x, (resh, cache_resh))
+        if kvs is not None:
+            kvs = kvs.reshape(n * len(pattern), *kvs.shape[2:])
+        return x, kvs
+
+    n_full = (L // p) * p
+    head = jax.tree.map(lambda a: a[:n_full], layers)
+    cache_head = cache[:n_full] if cache is not None else None
+    x, kv_head = scan_over(x, head, cache_head, cfg.layer_pattern)
+    kv_parts = [kv_head] if kv_head is not None else []
+    if n_full < L:
+        tail = jax.tree.map(lambda a: a[n_full:], layers)
+        cache_tail = cache[n_full:] if cache is not None else None
+        x, kv_tail = scan_over(x, tail, cache_tail,
+                               cfg.layer_pattern[: L - n_full])
+        if kv_tail is not None:
+            kv_parts.append(kv_tail)
+    new_cache = jnp.concatenate(kv_parts, 0) if kv_parts else None
+    return x, new_cache
+
+
+def _logits(params, cfg, x):
+    x = _rms(x, params["final_ln"])
+    if cfg.tie_embeddings:
+        out = x @ params["embed"].T
+    else:
+        out = x @ params["lm_head"]
+    if cfg.vocab_padded != cfg.vocab:   # mask pad columns out of softmaxes
+        col = jax.lax.broadcasted_iota(jnp.int32, out.shape, out.ndim - 1)
+        out = jnp.where(col < cfg.vocab, out, -1e30)
+    return out
+
+
+def trunk(params: dict, cfg: TransformerConfig, tokens: jax.Array):
+    """tokens (B, S) -> final hidden states (B, S, d), pre-final-norm."""
+    cdt = cfg.compute_dtype
+    cparams = jax.tree.map(lambda a: a.astype(cdt), params)
+    x = jnp.take(cparams["embed"], tokens, axis=0)
+    if cfg.tie_embeddings:
+        x = x * np.sqrt(cfg.d_model).astype(cdt)
+    pos = jnp.arange(tokens.shape[1])
+    x, _ = _pattern_scan(cparams, cfg, x, pos)
+    return x, cparams
+
+
+def forward(params: dict, cfg: TransformerConfig, tokens: jax.Array):
+    """tokens (B, S) -> logits (B, S, vocab).  Eval forward."""
+    x, cparams = trunk(params, cfg, tokens)
+    return _logits(cparams, cfg, x)
+
+
+def lm_loss(params: dict, cfg: TransformerConfig, batch: dict) -> jax.Array:
+    """Next-token cross-entropy; batch = {tokens (B,S), labels (B,S)}.
+
+    The unembedding + CE run sequence-chunked under remat so the full
+    (B, S, vocab) f32 logits tensor never exists (fwd or bwd).
+    """
+    x, cparams = trunk(params, cfg, batch["tokens"])
+    B, S, d = x.shape
+    labels = batch["labels"]
+    c = min(cfg.loss_chunk, S)
+    assert S % c == 0, (S, c)
+    n = S // c
+
+    def chunk_ce(cparams, x_c, labels_c):
+        logits = _logits(cparams, cfg, x_c).astype(jnp.float32)
+        logz = jax.nn.logsumexp(logits, axis=-1)
+        gold = jnp.take_along_axis(logits, labels_c[..., None], axis=-1)[..., 0]
+        return (logz - gold).sum()
+
+    chunk_ce = jax.checkpoint(chunk_ce)
+    xs = (x.reshape(B, n, c, d).transpose(1, 0, 2, 3),
+          labels.reshape(B, n, c).transpose(1, 0, 2))
+
+    def body(acc, xc):
+        x_c, l_c = xc
+        return acc + chunk_ce(cparams, x_c, l_c), None
+
+    total, _ = jax.lax.scan(body, jnp.zeros((), jnp.float32), xs)
+    return total / (B * S)
+
+
+def init_cache(cfg: TransformerConfig, batch: int, max_seq: int,
+               dtype=jnp.bfloat16) -> jax.Array:
+    """(L, 2, B, S, KV, hd) KV cache."""
+    return jnp.zeros(
+        (cfg.n_layers, 2, batch, max_seq, cfg.n_kv_heads, cfg.hd), dtype)
+
+
+def prefill(params: dict, cfg: TransformerConfig, tokens: jax.Array,
+            max_seq: int):
+    """Process a prompt; returns (last-position logits, cache)."""
+    cdt = cfg.compute_dtype
+    cparams = jax.tree.map(lambda a: a.astype(cdt), params)
+    B, S = tokens.shape
+    x = jnp.take(cparams["embed"], tokens, axis=0)
+    if cfg.tie_embeddings:
+        x = x * np.sqrt(cfg.d_model).astype(cdt)
+    pos = jnp.arange(S)
+    x, kv = _pattern_scan(cparams, cfg, x, pos, collect_kv=True)
+    logits = _logits(cparams, cfg, x[:, -1:, :])
+    cache = jnp.zeros((cfg.n_layers, 2, B, max_seq, cfg.n_kv_heads, cfg.hd),
+                      jnp.bfloat16)
+    cache = jax.lax.dynamic_update_slice_in_dim(
+        cache, kv.astype(jnp.bfloat16).transpose(0, 1, 2, 3, 4, 5), 0, axis=3)
+    return logits, cache
+
+
+def decode_step(params: dict, cfg: TransformerConfig, tokens: jax.Array,
+                cache: jax.Array, cache_index: jax.Array):
+    """One decode step.  tokens (B, 1); cache (L,2,B,S,KV,hd).
+
+    Returns (logits (B, 1, vocab), updated cache).
+    """
+    cdt = cfg.compute_dtype
+    cparams = jax.tree.map(lambda a: a.astype(cdt), params)
+    x = jnp.take(cparams["embed"], tokens, axis=0)
+    if cfg.tie_embeddings:
+        x = x * np.sqrt(cfg.d_model).astype(cdt)
+    pos = jnp.full((tokens.shape[0], 1), cache_index)
+    x, new_cache = _pattern_scan(cparams, cfg, x, pos, cache=cache,
+                                 cache_index=cache_index)
+    return _logits(cparams, cfg, x), new_cache

@@ -1,0 +1,156 @@
+"""Mixture-of-Experts FFN: top-k routing with capacity, two dispatch
+implementations.
+
+  * ``einsum``  - GShard-style one-hot dispatch/combine tensors
+                  (arXiv:2006.16668).  SPMD-friendly (all-to-alls fall out of
+                  sharded einsums) but pays O(g * E * C * d) dispatch FLOPs.
+  * ``scatter`` - position-computed scatter/gather dispatch: FLOP-minimal
+                  (O(T * d) data movement, no dispatch matmuls).  This is the
+                  beyond-paper optimization lever measured in EXPERIMENTS.md
+                  §Perf.
+
+Tokens are processed in groups of ``group_size`` along the (data-sharded)
+leading axis, so per-group capacity C = ceil(g * top_k * cf / E) bounds both
+memory and imbalance; overflow tokens are dropped (standard GShard
+semantics) and pass through the residual connection only.
+
+Expert networks are SwiGLU MLPs (mixtral / granite style); expert weights
+are stacked (E, ...) so they shard over the model axis as expert parallelism
+when E divides the axis, falling back to tensor parallelism on d_ff.
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+
+
+@dataclasses.dataclass(frozen=True)
+class MoEConfig:
+    n_experts: int
+    top_k: int
+    capacity_factor: float = 1.25
+    group_size: int = 512
+    impl: str = "einsum"              # einsum | scatter
+    router_mode: str = "topk_softmax"  # softmax over the selected logits
+    # reassociate the combine so the tensor-parallel psum of the expert
+    # output happens on the (g, d) token domain instead of the (E, C, d)
+    # slot domain — E*C/g ~ 2.5x fewer bytes on the wire, and the psum
+    # operand stays in the compute dtype (bf16) instead of the f32
+    # accumulator (see EXPERIMENTS.md §Perf / mixtral prefill).
+    fused_combine: bool = False
+
+
+def capacity(cfg: MoEConfig) -> int:
+    c = int(np.ceil(cfg.group_size * cfg.top_k * cfg.capacity_factor / cfg.n_experts))
+    return max(c, 1)
+
+
+import numpy as np  # noqa: E402  (after dataclass to keep header tight)
+
+
+def router_probs(logits: jax.Array, cfg: MoEConfig):
+    """Top-k selection.  Returns (gates (..., k), experts (..., k) int32).
+
+    ``topk_softmax`` (mixtral/granite): softmax over the k selected logits.
+    """
+    gates_logits, experts = jax.lax.top_k(logits, cfg.top_k)
+    if cfg.router_mode == "topk_softmax":
+        gates = jax.nn.softmax(gates_logits.astype(jnp.float32), axis=-1)
+    else:  # softmax_topk: softmax over all experts, then select
+        probs = jax.nn.softmax(logits.astype(jnp.float32), axis=-1)
+        gates = jnp.take_along_axis(probs, experts, axis=-1)
+    return gates.astype(logits.dtype), experts
+
+
+def _expert_ffn(w_gate, w_in, w_out, x):
+    """SwiGLU expert: x (E, C, d), weights (E, d, f)/(E, f, d)."""
+    g = jnp.einsum("ecd,edf->ecf", x, w_gate)
+    h = jnp.einsum("ecd,edf->ecf", x, w_in)
+    a = jax.nn.silu(g) * h
+    return jnp.einsum("ecf,efd->ecd", a, w_out)
+
+
+def _positions_in_expert(experts: jax.Array, gates: jax.Array, cfg: MoEConfig):
+    """Flatten (g, k) choices; compute each choice's slot within its expert.
+
+    Priority is (token, choice) order — earlier tokens keep their slots when
+    capacity overflows (GShard).  Returns flat (g*k,) expert ids, slot ids,
+    gate values, and keep mask.
+    """
+    g = experts.shape[0]
+    flat_e = experts.reshape(g * cfg.top_k)
+    flat_gate = gates.reshape(g * cfg.top_k)
+    onehot = jax.nn.one_hot(flat_e, cfg.n_experts, dtype=jnp.int32)  # (gk, E)
+    pos = jnp.cumsum(onehot, axis=0) * onehot                       # 1-based
+    slot = (pos.sum(axis=-1) - 1).astype(jnp.int32)                 # (gk,)
+    keep = slot < capacity(cfg)
+    return flat_e, slot, flat_gate, keep
+
+
+def moe_ffn_group(x: jax.Array, router_w: jax.Array, w_gate, w_in, w_out,
+                  cfg: MoEConfig) -> jax.Array:
+    """One group: x (g, d) -> (g, d)."""
+    gsz, d = x.shape
+    C = capacity(cfg)
+    logits = x @ router_w                                  # (g, E)
+    gates, experts = router_probs(logits, cfg)             # (g, k)
+
+    flat_e, slot, flat_gate, keep = _positions_in_expert(experts, gates, cfg)
+
+    if cfg.impl == "einsum":
+        # dispatch: (g, E, C) combine weights; bf16 keeps the tensor small.
+        oh_e = jax.nn.one_hot(flat_e, cfg.n_experts, dtype=x.dtype)
+        oh_c = jax.nn.one_hot(slot, C, dtype=x.dtype) * keep[:, None].astype(x.dtype)
+        disp = (oh_e[:, :, None] * oh_c[:, None, :]).reshape(gsz, cfg.top_k, cfg.n_experts, C).sum(1)
+        comb = (oh_e[:, :, None] * oh_c[:, None, :] * flat_gate[:, None, None]
+                ).reshape(gsz, cfg.top_k, cfg.n_experts, C).sum(1)
+        ex_in = jnp.einsum("gec,gd->ecd", disp, x)
+        if cfg.fused_combine:
+            # combine BEFORE the w_out contraction: the partial sums that
+            # the partitioner must all-reduce live on (g, d) not (E, C, d).
+            g_ = jnp.einsum("ecd,edf->ecf", ex_in, w_gate)
+            h_ = jnp.einsum("ecd,edf->ecf", ex_in, w_in)
+            a = (jax.nn.silu(g_) * h_).astype(x.dtype)
+            z = jnp.einsum("gec,ecf->egf", comb, a)      # per-expert tokens
+            return jnp.einsum("egf,efd->gd", z, w_out)   # contract f AND e
+        ex_out = _expert_ffn(w_gate, w_in, w_out, ex_in)
+        return jnp.einsum("gec,ecd->gd", comb, ex_out)
+
+    # scatter impl — FLOP-minimal data movement
+    tok_idx = jnp.repeat(jnp.arange(gsz), cfg.top_k)
+    safe_slot = jnp.where(keep, slot, 0)
+    ex_in = jnp.zeros((cfg.n_experts, C, d), x.dtype)
+    ex_in = ex_in.at[flat_e, safe_slot].add(
+        jnp.where(keep[:, None], x[tok_idx], 0.0)
+    )
+    ex_out = _expert_ffn(w_gate, w_in, w_out, ex_in)
+    gathered = ex_out[flat_e, safe_slot]                    # (gk, d)
+    contrib = gathered * (flat_gate * keep.astype(flat_gate.dtype))[:, None]
+    return jax.ops.segment_sum(contrib, tok_idx, num_segments=gsz)
+
+
+def moe_ffn(x: jax.Array, router_w: jax.Array, w_gate, w_in, w_out,
+            cfg: MoEConfig) -> jax.Array:
+    """x: (..., d) — flattens leading dims into groups of cfg.group_size."""
+    lead = x.shape[:-1]
+    d = x.shape[-1]
+    flat = x.reshape(-1, d)
+    T = flat.shape[0]
+    gsz = min(cfg.group_size, T)
+    assert T % gsz == 0, (T, gsz)
+    grouped = flat.reshape(T // gsz, gsz, d)
+    out = jax.vmap(
+        lambda xs: moe_ffn_group(xs, router_w, w_gate, w_in, w_out,
+                                 dataclasses.replace(cfg, group_size=gsz))
+    )(grouped)
+    return out.reshape(*lead, d)
+
+
+def load_balancing_loss(logits: jax.Array, experts: jax.Array, cfg: MoEConfig):
+    """Switch-style aux loss: E * sum_e f_e * p_e (arXiv:2101.03961)."""
+    probs = jax.nn.softmax(logits.astype(jnp.float32), axis=-1)
+    p_mean = probs.reshape(-1, cfg.n_experts).mean(0)
+    counts = jax.nn.one_hot(experts.reshape(-1), cfg.n_experts).mean(0) * cfg.top_k
+    return cfg.n_experts * jnp.sum(p_mean * counts)

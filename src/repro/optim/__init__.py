@@ -1,0 +1,6 @@
+from repro.optim.optimizers import (  # noqa: F401
+    adamw, adagrad, sgd, clip_by_global_norm, apply_weight_decay,
+)
+from repro.optim.schedules import warmup_cosine, constant  # noqa: F401
+from repro.optim.accumulate import gradient_accumulation  # noqa: F401
+from repro.optim.compression import int8_compress, int8_decompress  # noqa: F401

@@ -1,0 +1,57 @@
+"""Microbatch gradient accumulation: trade activation memory for steps.
+
+Wraps a per-microbatch loss fn into a full-batch grad fn via lax.scan; the
+batch's leading axis is split into ``n_micro`` chunks.  Used when a cell's
+activations do not fit (the dry-run memory_analysis is the arbiter).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def gradient_accumulation(loss_fn, n_micro: int, constrain=None):
+    """loss_fn(params, batch) -> scalar.  Returns grad_fn(params, batch) ->
+    (loss, grads) accumulating over n_micro microbatches.
+
+    ``constrain(grad_tree) -> grad_tree`` should apply the parameters'
+    sharding constraints; without it the partitioner tends to REPLICATE the
+    scan-carried accumulator, turning every per-microbatch gradient psum
+    into a full-size all-reduce."""
+
+    def split(batch):
+        # keep the (DP-sharded) batch dim MAJOR: (B, ...) -> (B/n, n, ...).
+        # Reshaping to (n, B/n, ...) instead would put the microbatch axis
+        # first, and n < n_dp_shards destroys the batch sharding (every
+        # device would compute the full global microbatch).
+        def r(x):
+            b = x.shape[0]
+            assert b % n_micro == 0, (b, n_micro)
+            return x.reshape(b // n_micro, n_micro, *x.shape[1:])
+        return jax.tree.map(r, batch)
+
+    def grad_fn(params, batch):
+        micro = split(batch)
+        vg = jax.value_and_grad(loss_fn)
+
+        def body(carry, i):
+            acc_loss, acc_g = carry
+            mb = jax.tree.map(
+                lambda x: jax.lax.dynamic_index_in_dim(x, i, axis=1,
+                                                       keepdims=False),
+                micro)
+            l, g = vg(params, mb)
+            acc_g = jax.tree.map(jnp.add, acc_g, g)
+            if constrain is not None:
+                acc_g = constrain(acc_g)
+            return (acc_loss + l, acc_g), None
+
+        zeros = jax.tree.map(jnp.zeros_like, params)
+        if constrain is not None:
+            zeros = constrain(zeros)
+        (tot_l, tot_g), _ = jax.lax.scan(body, (jnp.zeros(()), zeros),
+                                         jnp.arange(n_micro))
+        inv = 1.0 / n_micro
+        return tot_l * inv, jax.tree.map(lambda g: g * inv, tot_g)
+
+    return grad_fn

@@ -1,0 +1,96 @@
+"""Optimizers as (init, update) pairs over parameter pytrees.
+
+``update(grads, state, params, lr) -> (new_params, new_state)``; lr is a
+scalar (schedules produce it per step).  All states are pytrees matching
+params, so checkpointing/sharding treat them uniformly — optimizer state
+inherits each parameter's PartitionSpec (ZeRO-style sharding falls out of
+the parameter sharding for TP/EP-sharded params).
+"""
+from __future__ import annotations
+
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+
+class Optimizer(NamedTuple):
+    init: callable
+    update: callable
+
+
+def clip_by_global_norm(grads, max_norm: float):
+    leaves = jax.tree.leaves(grads)
+    gnorm = jnp.sqrt(sum(jnp.sum(g.astype(jnp.float32) ** 2) for g in leaves))
+    scale = jnp.minimum(1.0, max_norm / jnp.maximum(gnorm, 1e-9))
+    return jax.tree.map(lambda g: (g * scale).astype(g.dtype), grads), gnorm
+
+
+def apply_weight_decay(params, updates, weight_decay: float, lr):
+    if weight_decay == 0.0:
+        return updates
+    return jax.tree.map(lambda u, p: u + weight_decay * lr * p, updates, params)
+
+
+def sgd(momentum: float = 0.0) -> Optimizer:
+    def init(params):
+        if momentum == 0.0:
+            return {}
+        return {"mom": jax.tree.map(jnp.zeros_like, params)}
+
+    def update(grads, state, params, lr):
+        if momentum == 0.0:
+            new = jax.tree.map(lambda p, g: p - lr * g, params, grads)
+            return new, state
+        mom = jax.tree.map(lambda m, g: momentum * m + g, state["mom"], grads)
+        new = jax.tree.map(lambda p, m: p - lr * m, params, mom)
+        return new, {"mom": mom}
+
+    return Optimizer(init, update)
+
+
+def adamw(b1: float = 0.9, b2: float = 0.999, eps: float = 1e-8,
+          weight_decay: float = 0.0, clip_norm: float | None = 1.0) -> Optimizer:
+    def init(params):
+        return {
+            "m": jax.tree.map(jnp.zeros_like, params),
+            "v": jax.tree.map(jnp.zeros_like, params),
+            "t": jnp.zeros((), jnp.int32),
+        }
+
+    def update(grads, state, params, lr):
+        if clip_norm is not None:
+            grads, _ = clip_by_global_norm(grads, clip_norm)
+        t = state["t"] + 1
+        m = jax.tree.map(lambda m_, g: b1 * m_ + (1 - b1) * g, state["m"], grads)
+        v = jax.tree.map(lambda v_, g: b2 * v_ + (1 - b2) * g * g, state["v"], grads)
+        bc1 = 1 - b1 ** t.astype(jnp.float32)
+        bc2 = 1 - b2 ** t.astype(jnp.float32)
+
+        def upd(p, m_, v_):
+            step = (m_ / bc1) / (jnp.sqrt(v_ / bc2) + eps)
+            if weight_decay:
+                step = step + weight_decay * p
+            return p - lr * step
+
+        new = jax.tree.map(upd, params, m, v)
+        return new, {"m": m, "v": v, "t": t}
+
+    return Optimizer(init, update)
+
+
+def adagrad(eps: float = 1e-10, init_acc: float = 0.1) -> Optimizer:
+    """Classic per-coordinate Adagrad — the production recsys default
+    (sparse-feature-friendly: rarely-seen embedding rows keep high lr)."""
+
+    def init(params):
+        return {"acc": jax.tree.map(lambda p: jnp.full_like(p, init_acc), params)}
+
+    def update(grads, state, params, lr):
+        acc = jax.tree.map(lambda a, g: a + g * g, state["acc"], grads)
+        new = jax.tree.map(
+            lambda p, g, a: p - lr * g / (jnp.sqrt(a) + eps), params, grads, acc
+        )
+        return new, {"acc": acc}
+
+    return Optimizer(init, update)

@@ -1,0 +1,4 @@
+from repro.sharding.rules import (  # noqa: F401
+    dp_axes, lm_param_specs, recsys_param_specs, gnn_param_specs,
+    opt_state_specs, lm_cache_spec,
+)

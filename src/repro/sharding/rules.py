@@ -1,0 +1,140 @@
+"""Per-family parameter/activation PartitionSpec rules.
+
+Mesh axes: ``("data", "model")`` single-pod, ``("pod", "data", "model")``
+multi-pod.  ``pod`` + ``data`` are pure data parallelism (the pod axis keeps
+cross-pod traffic to one gradient all-reduce per step — DCN-friendly);
+``model`` carries tensor / expert / vocab / embedding-row parallelism.
+
+Conventions:
+  * LM params are stacked (L, ...): dim 0 is never sharded (scan consumes it)
+  * Megatron pairing: column-parallel (out-dim on model) matmuls feed
+    row-parallel (in-dim on model) matmuls, so each attn/FFN block ends in
+    exactly one psum — GSPMD derives these from the weight specs
+  * optimizer state mirrors parameter specs (ZeRO-for-free on TP/EP shards)
+  * recsys: ONLY the embedding arenas are model-sharded (rows); dense parts
+    are small and replicate.  The arena gather runs through
+    ``repro.embedding.sharded.make_sharded_take`` inside the step.
+"""
+from __future__ import annotations
+
+import jax
+from jax.sharding import PartitionSpec as P
+
+
+def dp_axes(mesh: jax.sharding.Mesh) -> tuple[str, ...]:
+    return tuple(a for a in ("pod", "data") if a in mesh.axis_names)
+
+
+def model_size(mesh: jax.sharding.Mesh) -> int:
+    return mesh.shape["model"]
+
+
+# ---------------------------------------------------------------------------
+# LM family
+# ---------------------------------------------------------------------------
+
+def lm_param_specs(cfg, mesh) -> dict:
+    m = model_size(mesh)
+    # FSDP: the non-TP dim of each large weight additionally shards over
+    # 'data' (weights all-gather per layer, grads reduce-scatter — the
+    # production scheme for 7B+ params on 16-wide TP).
+    fs = "data" if getattr(cfg, "fsdp", False) else None
+    layers = {
+        "ln_attn": P(None, None),
+        "wq": P(None, fs, "model"),
+        "wk": P(None, fs, "model"),
+        "wv": P(None, fs, "model"),
+        "wo": P(None, "model", fs),
+        "ln_mlp": P(None, None),
+    }
+    if cfg.is_moe:
+        layers["router"] = P(None, None, None)
+        if cfg.n_experts % m == 0:
+            # expert parallelism: each device owns E/m whole experts
+            layers["w_gate"] = P(None, "model", fs, None)
+            layers["w_in"] = P(None, "model", fs, None)
+            layers["w_out"] = P(None, "model", None, fs)
+        else:
+            # TP inside experts (mixtral: 8 experts on a 16-wide axis)
+            layers["w_gate"] = P(None, None, fs, "model")
+            layers["w_in"] = P(None, None, fs, "model")
+            layers["w_out"] = P(None, None, "model", fs)
+    else:
+        if cfg.mlp_type in ("swiglu", "geglu"):
+            layers["w_gate"] = P(None, fs, "model")
+        layers["w_in"] = P(None, fs, "model")
+        layers["w_out"] = P(None, "model", fs)
+    specs = {
+        "embed": P("model", fs),           # vocab_padded % 128 == 0
+        "layers": layers,
+        "final_ln": P(None),
+    }
+    if not cfg.tie_embeddings:
+        specs["lm_head"] = P(fs, "model")
+    return specs
+
+
+def lm_batch_spec(mesh) -> P:
+    return P(dp_axes(mesh), None)
+
+
+def lm_cache_spec(mesh, batch: int) -> P:
+    """KV cache (L, 2, B, S, KV, hd).  Batch shards over DP when it divides;
+    batch=1 (long-context) shards the SEQUENCE over every mesh axis —
+    the flash-decoding split-K layout."""
+    dp = dp_axes(mesh)
+    n_dp = 1
+    for a in dp:
+        n_dp *= mesh.shape[a]
+    if batch % n_dp == 0 and batch >= n_dp:
+        return P(None, None, dp, "model", None, None)
+    all_axes = tuple(mesh.axis_names)
+    return P(None, None, None, all_axes, None, None)
+
+
+# ---------------------------------------------------------------------------
+# RecSys family
+# ---------------------------------------------------------------------------
+
+def recsys_param_specs(params_shape: dict, mesh) -> dict:
+    """Arena tensors ('embedding', 'linear', 'wide') -> row-sharded; rest
+    replicated.  Works on the abstract param tree (names carry intent)."""
+
+    def spec_for(path, leaf):
+        name = path[-1].key if hasattr(path[-1], "key") else str(path[-1])
+        if name in ("embedding",):
+            return P("model", None)
+        if name in ("linear", "wide"):
+            return P("model")
+        return P(*([None] * leaf.ndim))
+
+    return jax.tree_util.tree_map_with_path(spec_for, params_shape)
+
+
+# ---------------------------------------------------------------------------
+# GNN family
+# ---------------------------------------------------------------------------
+
+def gnn_param_specs(params_shape: dict, mesh) -> dict:
+    return jax.tree.map(lambda leaf: P(*([None] * leaf.ndim)), params_shape)
+
+
+# ---------------------------------------------------------------------------
+# Optimizer state
+# ---------------------------------------------------------------------------
+
+def opt_state_specs(param_specs, opt_state_shape) -> dict:
+    """Mirror parameter specs onto m/v/acc/mom; scalars replicated."""
+
+    def build(entry):
+        if isinstance(entry, dict):
+            return {k: build(v) for k, v in entry.items()}
+        return entry
+
+    out = {}
+    for key, val in opt_state_shape.items():
+        if key in ("m", "v", "acc", "mom"):
+            out[key] = param_specs
+        else:
+            out[key] = jax.tree.map(lambda leaf: P(), val)
+    return out

@@ -1,0 +1,23 @@
+"""Shared fixtures.  NOTE: no XLA_FLAGS here — smoke tests and benches see
+the real 1-device CPU backend; only launch/dryrun.py forces 512 devices."""
+import numpy as np
+import pytest
+
+import jax
+
+
+@pytest.fixture
+def rng():
+    return np.random.default_rng(0)
+
+
+@pytest.fixture
+def key():
+    return jax.random.PRNGKey(0)
+
+
+@pytest.fixture
+def host_mesh():
+    """1-device mesh with production axis names — exercises the pjit/
+    shard_map code paths on this container."""
+    return jax.make_mesh((1, 1), ("data", "model"))

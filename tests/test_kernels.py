@@ -1,0 +1,136 @@
+"""Per-kernel interpret-mode validation: sweep shapes/dtypes and
+assert_allclose against the pure-jnp oracle in kernels/ref.py."""
+import numpy as np
+import pytest
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels import ops, ref
+
+
+@pytest.mark.parametrize("n,mI,k,rho,block_n", [
+    (64, 4, 8, 1, 32),
+    (1000, 12, 16, 3, 256),     # non-divisible n -> padding path
+    (257, 38, 16, 5, 128),      # paper-scale item fields
+    (128, 7, 32, 2, 128),
+])
+def test_dplr_score_kernel(rng, n, mI, k, rho, block_n):
+    V = jnp.asarray(rng.standard_normal((n, mI, k), dtype=np.float32))
+    U = jnp.asarray(rng.standard_normal((rho, mI), dtype=np.float32))
+    e = jnp.asarray(rng.standard_normal(rho).astype(np.float32))
+    d = jnp.asarray(rng.standard_normal(mI).astype(np.float32))
+    PC = jnp.asarray(rng.standard_normal((rho, k), dtype=np.float32))
+    sC = jnp.asarray(np.float32(0.37))
+    out = ops.dplr_score_items(V, U, e, d, PC, sC, block_n=block_n)
+    want = ref.dplr_score_items_ref(V, U, e, d, PC, sC)
+    np.testing.assert_allclose(out, want, rtol=1e-4, atol=1e-4)
+
+
+def test_dplr_score_kernel_consistent_with_algorithm1(rng):
+    """Kernel == core.ranking Algorithm 1 on a real DPLR parameterization."""
+    from repro.core import ranking as rk
+    from repro.core.dplr import dplr_diagonal, init_dplr
+
+    m, nC, k, rho, n = 12, 7, 8, 3, 100
+    p = init_dplr(jax.random.PRNGKey(0), m, rho)
+    V_C = jnp.asarray(rng.standard_normal((1, nC, k), dtype=np.float32))
+    V_I = jnp.asarray(rng.standard_normal((1, n, m - nC, k), dtype=np.float32))
+    cache = rk.dplr_context_cache(p, V_C, nC)
+    want = rk.dplr_score_items(p, cache, V_I, nC)[0]
+    d = dplr_diagonal(p)
+    got = ops.dplr_score_items(V_I[0], p.U[:, nC:], p.e, d[nC:],
+                               cache.P_C[0], cache.s_C[0], block_n=64)
+    np.testing.assert_allclose(got, want, rtol=1e-4, atol=1e-4)
+
+
+@pytest.mark.parametrize("B,m,k,block_b", [
+    (64, 8, 8, 32),
+    (300, 14, 16, 128),    # padding path
+    (128, 39, 16, 64),     # criteo-scale fields
+])
+def test_fwfm_kernel(rng, B, m, k, block_b):
+    V = jnp.asarray(rng.standard_normal((B, m, k), dtype=np.float32))
+    R = rng.standard_normal((m, m)).astype(np.float32)
+    R = 0.5 * (R + R.T)
+    np.fill_diagonal(R, 0)
+    out = ops.fwfm_pairwise(V, jnp.asarray(R), block_b=block_b)
+    want = ref.fwfm_pairwise_ref(V, jnp.asarray(R))
+    np.testing.assert_allclose(out, want, rtol=1e-4, atol=1e-4)
+
+
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+@pytest.mark.parametrize("B,slots,F,k", [(32, 6, 4, 16), (17, 3, 3, 8)])
+def test_embedding_bag_kernel(rng, B, slots, F, k, dtype):
+    rows = 200
+    table = jnp.asarray(rng.standard_normal((rows, k)), dtype=dtype)
+    ids = jnp.asarray(rng.integers(0, rows, (B, slots)).astype(np.int32))
+    w = jnp.asarray(rng.random((B, slots)).astype(np.float32))
+    seg = tuple(int(x) for x in sorted(rng.integers(0, F, slots)))
+    out = ops.embedding_bag(table, ids, w, segment_ids=seg, n_bags=F)
+    want = ref.embedding_bag_ref(table, ids, w, seg, F)
+    tol = 1e-5 if dtype == jnp.float32 else 2e-2
+    np.testing.assert_allclose(np.asarray(out, np.float32),
+                               np.asarray(want, np.float32),
+                               rtol=tol, atol=tol)
+
+
+@pytest.mark.parametrize("window", [None, 96])
+@pytest.mark.parametrize("S,H,KV,hd,bq,bk", [
+    (256, 8, 2, 32, 64, 64),
+    (128, 4, 4, 16, 32, 64),   # MHA (G=1), uneven blocks
+])
+def test_flash_attention_kernel(rng, S, H, KV, hd, bq, bk, window):
+    B = 2
+    q = jnp.asarray(rng.standard_normal((B, S, H, hd), dtype=np.float32))
+    k = jnp.asarray(rng.standard_normal((B, S, KV, hd), dtype=np.float32))
+    v = jnp.asarray(rng.standard_normal((B, S, KV, hd), dtype=np.float32))
+    out = ops.flash_attention(q, k, v, window=window, block_q=bq, block_k=bk)
+    want = ref.flash_attention_ref(q, k, v, causal=True, window=window)
+    np.testing.assert_allclose(out, want, rtol=1e-3, atol=1e-3)
+
+
+def test_flash_attention_matches_model_attention(rng):
+    """Pallas kernel == the pure-JAX chunked attention used by the dry-run."""
+    from repro.models.transformer.attention import gqa_attention
+
+    B, S, H, KV, hd = 1, 128, 4, 2, 16
+    q = jnp.asarray(rng.standard_normal((B, S, H, hd), dtype=np.float32))
+    k = jnp.asarray(rng.standard_normal((B, S, KV, hd), dtype=np.float32))
+    v = jnp.asarray(rng.standard_normal((B, S, KV, hd), dtype=np.float32))
+    pos = jnp.arange(S)
+    want = gqa_attention(q, k, v, n_kv_heads=KV, q_positions=pos,
+                         k_positions=pos, window=None, q_chunk=32)
+    got = ops.flash_attention(q, k, v, block_q=32, block_k=32)
+    np.testing.assert_allclose(got, want, rtol=1e-3, atol=1e-3)
+
+
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_dplr_score_kernel_dtypes(rng, dtype):
+    """bf16 candidate embeddings (the serving checkpoint dtype)."""
+    n, mI, k, rho = 128, 38, 16, 3
+    V = jnp.asarray(rng.standard_normal((n, mI, k)), dtype=dtype)
+    U = jnp.asarray(rng.standard_normal((rho, mI)), dtype=dtype)
+    e = jnp.asarray(rng.standard_normal(rho), dtype=dtype)
+    d = jnp.asarray(rng.standard_normal(mI), dtype=dtype)
+    PC = jnp.asarray(rng.standard_normal((rho, k)), dtype=dtype)
+    sC = jnp.asarray(0.37, dtype)
+    out = ops.dplr_score_items(V, U, e, d, PC, sC, block_n=64)
+    f32 = [np.asarray(x, np.float32) for x in (V, U, e, d, PC, sC)]
+    want = ref.dplr_score_items_ref(*[jnp.asarray(x) for x in f32])
+    tol = 1e-4 if dtype == jnp.float32 else 5e-2
+    np.testing.assert_allclose(np.asarray(out, np.float32), want,
+                               rtol=tol, atol=tol)
+
+
+def test_fwfm_kernel_block_sweep(rng):
+    """Block-size invariance: results must not depend on tiling."""
+    B, m, k = 200, 20, 8
+    V = jnp.asarray(rng.standard_normal((B, m, k), dtype=np.float32))
+    R = rng.standard_normal((m, m)).astype(np.float32)
+    R = 0.5 * (R + R.T); np.fill_diagonal(R, 0)
+    want = ref.fwfm_pairwise_ref(V, jnp.asarray(R))
+    for bb in (16, 64, 200, 512):
+        out = ops.fwfm_pairwise(V, jnp.asarray(R), block_b=bb)
+        np.testing.assert_allclose(out, want, rtol=1e-4, atol=1e-4,
+                                   err_msg=f"block_b={bb}")

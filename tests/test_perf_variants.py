@@ -1,0 +1,95 @@
+"""§Perf optimization variants must be numerically faithful to their
+baselines (EXPERIMENTS.md cells 1-3)."""
+import numpy as np
+import pytest
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+
+from repro.core.fields import uniform_layout
+from repro.models.gnn import pna
+from repro.models.recsys import fwfm
+from repro.models.transformer import model as tm
+
+
+def test_mp_scoring_exact(rng, host_mesh):
+    """Model-parallel DPLR scoring == Algorithm 1 (cell 3, iter 1)."""
+    layout = uniform_layout(7, 5, 40)
+    cfg = fwfm.FwFMConfig(layout=layout, embed_dim=8, interaction="dplr",
+                          rank=3)
+    params = fwfm.init(jax.random.PRNGKey(0), cfg)
+    q = {"context_ids": jnp.asarray(rng.integers(0, 30, (1, 7)).astype(np.int32)),
+         "context_weights": jnp.ones((1, 7)),
+         "item_ids": jnp.asarray(rng.integers(0, 30, (1, 6, 5)).astype(np.int32)),
+         "item_weights": jnp.ones((1, 6, 5))}
+    want = fwfm.rank_items(params, cfg, q)
+    got = fwfm.rank_items_mp(params, cfg, q, mesh=host_mesh,
+                             item_spec=P(None, None, None))
+    np.testing.assert_allclose(got, want, rtol=1e-5, atol=1e-5)
+
+
+def test_mp_scoring_rejects_multi_hot(rng, host_mesh):
+    from repro.core.fields import FeatureLayout, FieldSpec
+
+    layout = FeatureLayout((FieldSpec("c", 10, "context", multiplicity=2),
+                            FieldSpec("i", 10, "item")))
+    cfg = fwfm.FwFMConfig(layout=layout, embed_dim=4, interaction="dplr",
+                          rank=1)
+    params = fwfm.init(jax.random.PRNGKey(0), cfg)
+    with pytest.raises(AssertionError):
+        fwfm.rank_items_mp(params, cfg, {}, mesh=host_mesh,
+                           item_spec=P(None, None, None))
+
+
+def test_partitioned_pna_exact(rng, host_mesh):
+    """Destination-partitioned message passing == pjit baseline (cell 1)."""
+    N_p, E, F, C = 32, 100, 10, 5
+    cfg = pna.PNAConfig(d_feat=F, d_hidden=12, n_layers=2, n_classes=C)
+    params = pna.init(jax.random.PRNGKey(0), cfg)
+    edge_src = rng.integers(0, N_p, E).astype(np.int32)
+    edge_dst = rng.integers(0, N_p, E).astype(np.int32)
+    batch = {"node_feat": jnp.asarray(rng.standard_normal((N_p, F), dtype=np.float32)),
+             "edge_src": jnp.asarray(edge_src), "edge_dst": jnp.asarray(edge_dst),
+             "labels": jnp.asarray(rng.integers(0, C, N_p).astype(np.int32)),
+             "label_mask": jnp.ones(N_p, jnp.float32)}
+    want = pna.loss(params, cfg, batch)
+
+    part, _ = pna.partition_graph(edge_src, edge_dst, N_p, 1)
+    pbatch = {"node_feat": batch["node_feat"],
+              "src_global": jnp.asarray(part["src_global"]),
+              "dst_local": jnp.asarray(part["dst_local"]),
+              "edge_mask": jnp.asarray(part["edge_mask"]),
+              "labels": batch["labels"], "label_mask": batch["label_mask"]}
+    got = pna.loss_partitioned(params, cfg, pbatch, mesh=host_mesh,
+                               axes=("data", "model"))
+    np.testing.assert_allclose(got, want, rtol=1e-5, atol=1e-5)
+
+
+def test_partition_graph_covers_all_edges(rng):
+    N_p, E = 64, 500
+    src = rng.integers(0, N_p, E).astype(np.int32)
+    dst = rng.integers(0, N_p, E).astype(np.int32)
+    for shards in (1, 4, 8):
+        part, e_loc = pna.partition_graph(src, dst, N_p, shards)
+        assert int(part["edge_mask"].sum()) == E       # nothing dropped
+        rows_per = N_p // shards
+        dst_l = part["dst_local"].reshape(shards, e_loc)
+        mask = part["edge_mask"].reshape(shards, e_loc) > 0
+        assert (dst_l[mask] < rows_per).all()          # dst truly local
+
+
+def test_moe_fused_combine_equals_baseline(rng):
+    """Combine-before-psum reassociation (cell 2, iter 2)."""
+    toks = jnp.asarray(rng.integers(0, 97, (2, 16)).astype(np.int32))
+    outs = {}
+    for fused in (False, True):
+        cfg = tm.TransformerConfig(
+            name="t", n_layers=2, d_model=32, n_heads=4, n_kv_heads=2,
+            d_ff=64, vocab=97, mlp_type="swiglu", compute_dtype=jnp.float32,
+            q_chunk=None, remat=False, loss_chunk=4, layer_pattern=(None,),
+            n_experts=4, top_k=2, moe_group_size=8, capacity_factor=2.0,
+            moe_fused_combine=fused)
+        params = tm.init(jax.random.PRNGKey(3), cfg)
+        outs[fused] = tm.forward(params, cfg, toks)
+    np.testing.assert_allclose(outs[False], outs[True], rtol=1e-4, atol=1e-4)
