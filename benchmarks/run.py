@@ -18,8 +18,8 @@ def main() -> None:
     args = ap.parse_args()
 
     from benchmarks import (fig1_latency, fig2_posthoc, roofline,
-                            table1_accuracy, table2_proprietary,
-                            table3_serving)
+                            serving_engine, table1_accuracy,
+                            table2_proprietary, table3_serving)
 
     modules = {
         "table1": table1_accuracy,
@@ -28,6 +28,7 @@ def main() -> None:
         "fig1": fig1_latency,
         "fig2": fig2_posthoc,
         "roofline": roofline,
+        "serving": serving_engine,
     }
     if args.only:
         modules = {args.only: modules[args.only]}

@@ -176,6 +176,16 @@ class CheckpointManager:
     def restore(self, tree_like, step: int | None = None, shardings=None):
         return restore_pytree(tree_like, self.directory, step, shardings)
 
-    def latest_step(self) -> int | None:
+    def latest_step(self, validate: bool = True) -> int | None:
+        """Newest checkpoint step.  ``validate=False`` discovers by
+        directory name only (no checksum pass over every retained
+        checkpoint) — the cheap polling mode for serving loops; the
+        subsequent ``restore`` still validates what it actually loads."""
+        if not validate:
+            steps = [int(n.split("_")[1]) for n in
+                     (os.listdir(self.directory)
+                      if os.path.isdir(self.directory) else [])
+                     if n.startswith("step_") and not n.endswith(".tmp")]
+            return max(steps, default=None)
         ckpts = list_checkpoints(self.directory)
         return ckpts[-1][0] if ckpts else None

@@ -92,6 +92,17 @@ class SyntheticCTR:
         labels = (rng.random(batch_size) < p).astype(np.float32)
         return {"ids": ids, "weights": weights, "label": labels}
 
+    def context_query(self, seed: int) -> dict:
+        """One query context, no candidates — the corpus-engine serving
+        workload, where the item side is the engine's static corpus."""
+        rng = np.random.default_rng((self.seed, 7, seed))
+        ctx_slots = self.layout.slots_of("context")
+        ctx_ids = self._sample_ids(rng, 1)[:, ctx_slots]
+        return {
+            "context_ids": ctx_ids,
+            "context_weights": np.ones_like(ctx_ids, np.float32),
+        }
+
     def ranking_query(self, n_items: int, seed: int) -> dict:
         """One context + n candidate items (the serving workload)."""
         rng = np.random.default_rng((self.seed, 7, seed))

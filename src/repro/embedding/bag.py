@@ -78,6 +78,33 @@ def lookup_field_embeddings(
     )
 
 
+def item_arena_ids(layout: FeatureLayout, ids: jax.Array) -> jax.Array:
+    """Arena-global ids for item-side *local* slot ids.
+
+    The arena stores context-field rows first, then item-field rows, so an
+    item-side lookup shifts local ids by the total context vocab.  Shared by
+    ``fwfm.rank_items``, the ranking-server example, and the corpus-cache
+    builder (one definition of the offset math, not three copies).
+    """
+    return ids + layout.subset("context").total_vocab
+
+
+def lookup_item_embeddings(
+    table: jax.Array,
+    layout: FeatureLayout,    # the FULL layout (context + item fields)
+    ids: jax.Array,           # (..., n_item_slots) local item-side ids
+    weights: jax.Array,       # (..., n_item_slots)
+    take_fn=None,
+) -> jax.Array:
+    """(..., m_item, k) item-field embedding matrix V_I from local item ids."""
+    item_layout = layout.subset("item")
+    arena = item_arena_ids(layout, ids) + jnp.asarray(item_layout.slot_offsets)
+    return embedding_bag(
+        table, arena, weights, item_layout.slot_to_field,
+        item_layout.n_fields, take_fn=take_fn,
+    )
+
+
 def lookup_linear_terms(
     table: jax.Array,     # (n_rows, 1) first-order weights
     layout: FeatureLayout,

@@ -23,6 +23,7 @@ import jax.numpy as jnp
 from jax.sharding import PartitionSpec as P
 
 from repro.core.fields import FeatureLayout
+from repro.sharding import shard_map
 
 
 def _local_masked_bag(
@@ -79,7 +80,7 @@ def make_sharded_take(mesh: jax.sharding.Mesh, spec_by_rank: dict[int, P],
         ispec = spec_by_rank[ids.ndim]
         out_spec = P(*(tuple(ispec) + (None,)))
         fn = partial(_local_masked_take, axis_name=model_axis)
-        return jax.shard_map(
+        return shard_map(
             fn, mesh=mesh,
             in_specs=(P(model_axis, None), ispec),
             out_specs=out_spec,
@@ -111,7 +112,7 @@ def sharded_lookup_field_embeddings(
         n_bags=layout.n_fields,
         axis_name=model_axis,
     )
-    return jax.shard_map(
+    return shard_map(
         fn,
         mesh=mesh,
         in_specs=(P(model_axis, None), batch_spec, batch_spec),

@@ -8,6 +8,9 @@ Each kernel ships three files:
 
 Kernels:
     dplr_score        - Algorithm 1 item scoring (the paper's hot op)
+    dplr_corpus_score - corpus-precomputed batched scoring + fused top-K
+                        (one HBM pass over (n, rho, k) instead of
+                        (n, m_I, k) — the serving-engine hot op)
     fwfm_interaction  - full O(m^2 k) FwFM pairwise term (the baseline)
     embedding_bag     - scalar-prefetch gather + weighted bag reduce
     flash_attention   - blocked causal/windowed GQA attention (LM serving)

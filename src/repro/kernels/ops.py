@@ -10,6 +10,7 @@ from __future__ import annotations
 
 import jax
 
+from repro.kernels import dplr_corpus_score as _corpus
 from repro.kernels import dplr_score as _dplr
 from repro.kernels import embedding_bag as _bag
 from repro.kernels import flash_attention as _flash
@@ -25,6 +26,13 @@ def dplr_score_items(V_I, U_I, e, d_I, P_C, s_C, *, block_n: int = 1024,
     interp = (not _on_tpu()) if interpret is None else interpret
     return _dplr.dplr_score_items(V_I, U_I, e, d_I, P_C, s_C,
                                   block_n=block_n, interpret=interp)
+
+
+def dplr_corpus_score(Q_I, a_I, e, P_C, a_C, *, topk=None,
+                      block_n: int = 2048, interpret: bool | None = None):
+    interp = (not _on_tpu()) if interpret is None else interpret
+    return _corpus.dplr_corpus_score(Q_I, a_I, e, P_C, a_C, topk=topk,
+                                     block_n=block_n, interpret=interp)
 
 
 def fwfm_pairwise(V, R, *, block_b: int = 512, interpret: bool | None = None):

@@ -15,6 +15,20 @@ def dplr_score_items_ref(V_I, U_I, e, d_I, P_C, s_C):
     return 0.5 * (s_C + term_d + term_e)
 
 
+def dplr_corpus_score_ref(Q_I, a_I, e, P_C, a_C):
+    """(Bq, n) corpus-cached scores: a_C + a_I + 0.5 e.||P_C + Q_I||^2."""
+    P = P_C[:, None] + Q_I[None]
+    term_e = jnp.einsum("qnrk,r->qn", P * P, e)
+    return a_C[:, None] + a_I[None, :] + 0.5 * term_e
+
+
+def dplr_corpus_topk_ref(Q_I, a_I, e, P_C, a_C, topk):
+    """argsort-based top-K oracle: ((Bq, K) scores, (Bq, K) indices)."""
+    s = dplr_corpus_score_ref(Q_I, a_I, e, P_C, a_C)
+    idx = jnp.argsort(-s, axis=1)[:, :topk].astype(jnp.int32)
+    return jnp.take_along_axis(s, idx, axis=1), idx
+
+
 def fwfm_pairwise_ref(V, R):
     G = jnp.einsum("bik,bjk->bij", V, V)
     return 0.5 * jnp.einsum("bij,ij->b", G, R)

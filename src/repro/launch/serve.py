@@ -1,16 +1,34 @@
 """Serving driver: the paper's deployment — a ranking service answering
-"score these N candidates for this context" queries with Algorithm 1.
+"score these N candidates for this context" queries.
 
     PYTHONPATH=src python -m repro.launch.serve --arch dplr-fwfm \
-        [--items 512] [--queries 100] [--mp] [--bf16]
+        [--engine corpus|percall] [--items 512] [--queries 100] \
+        [--topk 10] [--mp] [--bf16]
+
+Serving engine
+--------------
+The default ``--engine corpus`` path serves through
+``repro.serving.CorpusRankingEngine``: the candidate corpus is static
+between model refreshes, so the item side (``Q_I = U_I V_I``, ``t_I``,
+``lin_I``) is precomputed ONCE per (corpus, model) and each query costs
+
+    O(rho m_C k)            context cache (once per query)
+    O(rho k) per item       combine with the precomputed Q_I
+
+versus Algorithm 1's per-query O(rho m_I k + m_I k) per item (``--engine
+percall``, kept as the baseline: it re-gathers and re-projects every
+candidate on every query).  With ``--topk K`` only the (Bq, K) winners
+leave the scorer instead of (Bq, n) logits.
+
+Model refresh: with ``--ckpt-dir`` the engine polls the CheckpointManager
+every ``--refresh-every`` queries and, when a newer step lands (the
+sliding-window retrain mode of Section 5.3), rebuilds the corpus cache
+WITHOUT retracing the jitted scorer — ``--refresh-demo`` exercises the
+round-trip in-process by writing a perturbed checkpoint mid-stream.
 
 ``--mp`` switches to the model-parallel DPLR scorer (EXPERIMENTS.md §Perf
 cell 3) — on this 1-device container it exercises the same shard_map code
 path the production mesh runs; ``--bf16`` serves bf16 tables.
-
-The loop mirrors a production replica: a jitted scorer, per-query latency
-tracking with rolling percentiles, graceful model refresh from the newest
-checkpoint (the sliding-window retrain deployment mode of Section 5.3).
 """
 from __future__ import annotations
 
@@ -28,19 +46,42 @@ from repro.configs import REGISTRY
 from repro.data.synthetic_ctr import SyntheticCTR
 from repro.launch.mesh import make_host_mesh
 from repro.models.recsys import fwfm
+from repro.serving import CorpusRankingEngine
+
+
+def _report(tag: str, lat: np.ndarray, queries: int, items: int) -> None:
+    if lat.size == 0:   # fewer queries than the 2 warmup/compile drops
+        print(f"{queries} queries x {items} items ({tag}): "
+              f"too few queries for latency percentiles")
+        return
+    print(f"{queries} queries x {items} items ({tag}): "
+          f"avg {lat.mean():.2f} ms  P95 {np.percentile(lat, 95):.2f} ms  "
+          f"P99 {np.percentile(lat, 99):.2f} ms")
 
 
 def main(argv=None):
     ap = argparse.ArgumentParser()
     ap.add_argument("--arch", default="dplr-fwfm")
     ap.add_argument("--config", default="smoke", choices=["smoke", "full"])
+    ap.add_argument("--engine", default=None, choices=["corpus", "percall"],
+                    help="corpus = precomputed item cache (default for "
+                         "dplr); percall = Algorithm 1 per-query baseline")
     ap.add_argument("--items", type=int, default=512)
     ap.add_argument("--queries", type=int, default=100)
+    ap.add_argument("--topk", type=int, default=0,
+                    help="fused top-K: only (Bq, K) leaves the scorer")
+    ap.add_argument("--use-pallas", action="store_true",
+                    help="corpus engine scores through the Pallas kernel")
     ap.add_argument("--mp", action="store_true",
                     help="model-parallel DPLR scoring (shard_map)")
     ap.add_argument("--bf16", action="store_true", help="bf16 serving tables")
     ap.add_argument("--ckpt-dir", default=None,
                     help="load params from the newest checkpoint")
+    ap.add_argument("--refresh-every", type=int, default=25,
+                    help="poll --ckpt-dir for a newer step every N queries")
+    ap.add_argument("--refresh-demo", action="store_true",
+                    help="write a perturbed checkpoint mid-stream and "
+                         "verify the corpus engine hot-swaps it")
     ap.add_argument("--seed", type=int, default=0)
     args = ap.parse_args(argv)
 
@@ -52,9 +93,23 @@ def main(argv=None):
         from repro.launch.steps import _recsys_module
         mod = _recsys_module(args.arch)
 
+    is_dplr = getattr(cfg, "interaction", None) == "dplr"
+    engine_kind = args.engine or ("corpus" if is_dplr and not args.mp
+                                  else "percall")
+    if engine_kind == "corpus":
+        if not is_dplr or args.mp:
+            ap.error("--engine corpus requires a dplr model (and not --mp)")
+    elif args.topk or args.refresh_demo or args.use_pallas:
+        ap.error("--topk/--refresh-demo/--use-pallas require --engine corpus")
+
     params = mod.init(jax.random.PRNGKey(args.seed), cfg)
-    if args.ckpt_dir:
-        mgr = CheckpointManager(args.ckpt_dir)
+    mgr = None
+    if args.ckpt_dir or args.refresh_demo:
+        ckpt_dir = args.ckpt_dir
+        if ckpt_dir is None:           # demo mode: self-contained tmp dir
+            import tempfile
+            ckpt_dir = tempfile.mkdtemp(prefix="serve_refresh_demo_")
+        mgr = CheckpointManager(ckpt_dir)
         restored, step = mgr.restore({"params": params})
         if restored:
             params = restored["params"]
@@ -66,6 +121,78 @@ def main(argv=None):
 
     data = SyntheticCTR(cfg.layout, embed_dim=4, seed=args.seed)
     mesh = make_host_mesh()
+
+    if engine_kind == "corpus":
+        # checkpoints store f32 (npz can't round-trip bf16); restored params
+        # are cast back to the serving dtype so the scorer never retraces.
+        def to_serving_dtype(tree):
+            if not args.bf16:
+                return tree
+            return jax.tree.map(
+                lambda a: jnp.asarray(a).astype(jnp.bfloat16)
+                if jnp.asarray(a).dtype == jnp.float32 else jnp.asarray(a),
+                tree)
+
+        def to_checkpoint_dtype(tree):
+            return jax.tree.map(
+                lambda a: np.asarray(a, np.float32)
+                if jnp.asarray(a).dtype == jnp.bfloat16 else np.asarray(a),
+                tree)
+
+        # static candidate corpus: the item side of a fixed ranking query
+        corpus = data.ranking_query(args.items, 0)
+        engine = CorpusRankingEngine(
+            cfg, corpus["item_ids"][0], corpus["item_weights"][0],
+            use_pallas_kernel=args.use_pallas)
+        engine.refresh(params, step=(mgr.latest_step() if mgr else None))
+
+        lat, refreshes = [], 0
+        demo_pending = False
+        for s in range(args.queries):
+            if args.refresh_demo and s == args.queries // 2:
+                bumped = jax.tree.map(lambda a: a, params)
+                bumped["bias"] = params["bias"] + 1.0
+                mgr.save({"params": to_checkpoint_dtype(bumped)},
+                         step=(engine.model_step or 0) + 1, blocking=True)
+                demo_pending = True   # poll immediately, whatever the cadence
+            if mgr is not None and (demo_pending
+                                    or (s and s % args.refresh_every == 0)):
+                if engine.maybe_refresh(
+                        mgr, {"params": to_checkpoint_dtype(params)},
+                        select=lambda t: to_serving_dtype(t["params"])):
+                    refreshes += 1
+                    demo_pending = False
+                    print(f"query {s}: refreshed to checkpoint step "
+                          f"{engine.model_step} (corpus cache rebuilt)")
+            qn = data.context_query(s)
+            ctx = jnp.asarray(qn["context_ids"])
+            ctx_w = jnp.asarray(qn["context_weights"])
+            t0 = time.perf_counter()
+            if args.topk:
+                out = jax.block_until_ready(engine.topk(ctx, args.topk,
+                                                        ctx_w))
+                scores = out[0]
+            else:
+                scores = jax.block_until_ready(engine.score(ctx, ctx_w))
+            lat.append((time.perf_counter() - t0) * 1e3)
+            if s == 0:
+                if args.topk:
+                    print(f"query 0: fused top-{args.topk} of {args.items} "
+                          f"candidates -> {np.asarray(out[1][0][:3])}")
+                else:
+                    top = np.argsort(-np.asarray(scores[0]))[:3]
+                    print(f"query 0: top-3 of {args.items} candidates -> {top}")
+        tag = (f"corpus{', pallas' if args.use_pallas else ''}"
+               f"{f', top{args.topk}' if args.topk else ''}"
+               f"{', bf16' if args.bf16 else ''}")
+        _report(tag, np.asarray(lat[2:]), args.queries, args.items)
+        if args.refresh_demo:
+            assert refreshes >= 1, "refresh demo never saw the new checkpoint"
+            assert engine.trace_count <= 1, \
+                f"scorer retraced across refresh ({engine.trace_count})"
+            print(f"refresh round-trip OK: {refreshes} refresh(es), "
+                  f"scorer traced {engine.trace_count}x (no restart)")
+        return
 
     if args.mp:
         assert args.arch == "dplr-fwfm" and cfg.interaction == "dplr"
@@ -84,11 +211,9 @@ def main(argv=None):
         if s == 0:
             top = np.argsort(-np.asarray(scores[0]))[:3]
             print(f"query 0: top-3 of {args.items} candidates -> {top}")
-    lat = np.asarray(lat[2:])
-    print(f"{args.queries} queries x {args.items} items "
-          f"({'mp' if args.mp else 'spmd'}{', bf16' if args.bf16 else ''}): "
-          f"avg {lat.mean():.2f} ms  P95 {np.percentile(lat, 95):.2f} ms  "
-          f"P99 {np.percentile(lat, 99):.2f} ms")
+    tag = (f"percall, {'mp' if args.mp else 'spmd'}"
+           f"{', bf16' if args.bf16 else ''}")
+    _report(tag, np.asarray(lat[2:]), args.queries, args.items)
 
 
 if __name__ == "__main__":

@@ -22,6 +22,7 @@ from repro import optim
 from repro.configs import registry as reg
 from repro.embedding.sharded import _local_masked_take
 from repro.sharding import rules
+from repro.sharding import shard_map
 
 
 # ---------------------------------------------------------------------------
@@ -75,7 +76,7 @@ def make_auto_take(mesh):
         ispec = auto_leaf_spec(ids.shape, mesh)
         out_spec = P(*(tuple(ispec) + (None,)))
         fn = partial(_local_masked_take, axis_name="model")
-        return jax.shard_map(
+        return shard_map(
             fn, mesh=mesh,
             in_specs=(P("model", None), ispec),
             out_specs=out_spec,

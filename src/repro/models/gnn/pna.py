@@ -31,6 +31,7 @@ import jax
 import jax.numpy as jnp
 
 from repro.models.layers import glorot, init_mlp, apply_mlp
+from repro.sharding import shard_map
 
 
 @dataclasses.dataclass(frozen=True)
@@ -236,7 +237,7 @@ def forward_partitioned(params: dict, cfg: PNAConfig, batch: dict, *,
         return apply_mlp(dec_c, h)
 
     layer_list = [params[f"layer_{i}"] for i in range(cfg.n_layers)]
-    return jax.shard_map(
+    return shard_map(
         body, mesh=mesh,
         in_specs=(P(None, None), P(), [P()] * cfg.n_layers,
                   P(axes, None), P(axes), P(axes), P(axes)),

@@ -34,7 +34,9 @@ from repro.core.interactions import (
 )
 from repro.embedding.bag import (
     init_embedding_table,
+    item_arena_ids,
     lookup_field_embeddings,
+    lookup_item_embeddings,
     lookup_linear_terms,
     padded_rows,
 )
@@ -48,6 +50,9 @@ class FwFMConfig:
     rank: int = 3                    # DPLR rank rho
     task: str = "ctr"                # ctr (logloss) | rating (mse)
     dtype: Any = jnp.float32
+    # Route the dplr rank_items hot loop through the Pallas kernel
+    # (kernels.ops.dplr_score_items: Mosaic on TPU, interpret on CPU).
+    use_pallas_kernels: bool = False
 
     @property
     def n_fields(self) -> int:
@@ -128,6 +133,18 @@ def _check_context_first(layout: FeatureLayout) -> None:
         raise ValueError("rank_items requires context fields before item fields")
 
 
+def context_inputs(params: dict, cfg: FwFMConfig, ctx_ids: jax.Array,
+                   ctx_w: jax.Array, take_fn=None) -> tuple[jax.Array, jax.Array]:
+    """(V_C, lin_C): the context-side lookups shared by ``rank_items`` and
+    the corpus serving engine (one definition of the per-query step 0)."""
+    ctx_layout = cfg.layout.subset("context")
+    V_C = lookup_field_embeddings(params["embedding"], ctx_layout, ctx_ids,
+                                  ctx_w, take_fn=take_fn)
+    lin_C = lookup_linear_terms(params["linear"], ctx_layout, ctx_ids,
+                                ctx_w, take_fn=take_fn)
+    return V_C, lin_C
+
+
 def rank_items(params: dict, cfg: FwFMConfig, query: dict,
                pruned: Any = None, take_fn=None) -> jax.Array:
     """Score n items for each query context.  Shapes:
@@ -145,25 +162,18 @@ def rank_items(params: dict, cfg: FwFMConfig, query: dict,
     """
     layout = cfg.layout
     _check_context_first(layout)
-    ctx_layout = layout.subset("context")
     item_layout = layout.subset("item")
-    # item-field arena offsets start after all context vocab rows
-    ctx_vocab = ctx_layout.total_vocab
     table = params["embedding"]
     lin = params["linear"]
 
-    V_C = lookup_field_embeddings(table, ctx_layout, query["context_ids"],
-                                  query["context_weights"], take_fn=take_fn)
-    item_arena_ids = query["item_ids"] + ctx_vocab
-    from repro.embedding.bag import embedding_bag
-    V_I = embedding_bag(table, item_arena_ids + jnp.asarray(item_layout.slot_offsets),
-                        query["item_weights"], item_layout.slot_to_field,
-                        item_layout.n_fields, take_fn=take_fn)
-
-    # first-order terms: context part cached, item part per item
-    lin_C = lookup_linear_terms(lin, ctx_layout, query["context_ids"],
+    # context side (cached per query) + item side; lin_C/lin_I are the
+    # first-order terms, context part cached, item part per item.
+    V_C, lin_C = context_inputs(params, cfg, query["context_ids"],
                                 query["context_weights"], take_fn=take_fn)
-    lin_I = lookup_linear_terms(lin, item_layout, item_arena_ids,
+    V_I = lookup_item_embeddings(table, layout, query["item_ids"],
+                                 query["item_weights"], take_fn=take_fn)
+    lin_I = lookup_linear_terms(lin, item_layout,
+                                item_arena_ids(layout, query["item_ids"]),
                                 query["item_weights"], take_fn=take_fn)
     first_order = params["bias"] + lin_C[..., None] + lin_I
 
@@ -174,7 +184,16 @@ def rank_items(params: dict, cfg: FwFMConfig, query: dict,
     elif cfg.interaction == "dplr":
         p = DPLRParams(params["U"], params["e"])
         cache = rk.dplr_context_cache(p, V_C, nC)
-        pw = rk.dplr_score_items(p, cache, V_I, nC)
+        if cfg.use_pallas_kernels:
+            from repro.core.dplr import dplr_diagonal
+            from repro.kernels import ops as kops
+            d = dplr_diagonal(p)
+            pw = jax.vmap(
+                lambda v, pc, sc: kops.dplr_score_items(
+                    v, p.U[:, nC:], p.e, d[nC:], pc, sc)
+            )(V_I, cache.P_C, cache.s_C)
+        else:
+            pw = rk.dplr_score_items(p, cache, V_I, nC)
     elif pruned is not None:
         groups = rk.split_pruned_entries(pruned.entries_i, pruned.entries_j,
                                          pruned.entries_r, nC)
@@ -274,9 +293,11 @@ def rank_items_mp(params: dict, cfg: FwFMConfig, query: dict, *,
         term_e = 0.5 * jnp.einsum("qnrk,r->qn", Pfull * Pfull, e)
         return bias + s_C[:, None] + s_I + term_e
 
+    from repro.sharding import shard_map
+
     qspec = P(*item_spec[:-1])    # scores follow the item batch dims
     lin2d = params["linear"]
-    return jax.shard_map(
+    return shard_map(
         body, mesh=mesh,
         in_specs=(P(model_axis, None), P(model_axis), P(), P(), P(),
                   P(None, None), P(None, None), item_spec, item_spec),

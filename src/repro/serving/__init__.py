@@ -1,0 +1,14 @@
+"""Corpus-precomputation serving subsystem for DPLR-FwFM.
+
+Extends the paper's context-side caching (Algorithm 1) to the item side:
+the candidate corpus is static between model refreshes, so its rank-space
+projections are precomputed once and every query costs O(rho k) per item.
+
+    corpus.py - ItemCorpusCache + build_corpus_cache (the precompute)
+    engine.py - CorpusRankingEngine (batched scoring, fused top-K,
+                checkpoint-refresh invalidation)
+"""
+from repro.serving.corpus import ItemCorpusCache, build_corpus_cache
+from repro.serving.engine import CorpusRankingEngine
+
+__all__ = ["ItemCorpusCache", "build_corpus_cache", "CorpusRankingEngine"]

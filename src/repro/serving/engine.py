@@ -1,0 +1,163 @@
+"""Batched corpus-cached ranking engine (the serving hot path).
+
+``CorpusRankingEngine`` owns a static candidate corpus and a model snapshot,
+and answers ``(Bq queries x n candidates)`` scoring in ONE jitted dispatch:
+per query only the context cache (P_C, s_C, lin_C) is computed — O(rho m_C k)
+— then every candidate costs O(rho k) against the precomputed item cache
+(``repro.serving.corpus``).  Compare Algorithm 1's per-query O(rho m_I k +
+m_I k) per candidate (gather + project), and the dense FwFM's O(m_I^2 k).
+
+Model refresh (the sliding-window retrain deployment of Section 5.3) swaps
+the parameter arrays and rebuilds the corpus cache WITHOUT retracing the
+jitted scorer: shapes are refresh-invariant, so the swap is two dispatches
+(cache rebuild + next score) — no recompilation stall in the query loop.
+``maybe_refresh`` polls a ``CheckpointManager`` and performs the swap when a
+newer step lands, which is the invalidation hook ``launch/serve.py`` uses.
+
+Scoring backends:
+  * jnp (default)  — fused broadcast form, XLA-compiled; also serves top-K
+    via ``jax.lax.top_k`` so only (Bq, K) leaves the scorer.
+  * Pallas         — ``kernels.ops.dplr_corpus_score``: one HBM pass over
+    (n, rho, k) with an optional in-kernel running top-K (interpret mode on
+    CPU, Mosaic on TPU).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import ranking as rk
+from repro.core.dplr import DPLRParams
+from repro.serving.corpus import ItemCorpusCache, build_corpus_cache
+
+
+class CorpusRankingEngine:
+    """Scores a static item corpus for batches of query contexts."""
+
+    def __init__(self, cfg, item_ids, item_weights=None, *,
+                 use_pallas_kernel: bool = False, block_n: int = 2048):
+        if cfg.interaction != "dplr":
+            raise ValueError("CorpusRankingEngine requires interaction='dplr'")
+        self.cfg = cfg
+        self.item_ids = jnp.asarray(item_ids)
+        self.item_weights = (jnp.ones(self.item_ids.shape, jnp.float32)
+                             if item_weights is None
+                             else jnp.asarray(item_weights))
+        self.n_items = int(self.item_ids.shape[0])
+        self.use_pallas_kernel = use_pallas_kernel
+        self.block_n = block_n
+
+        self.params: dict | None = None
+        self.cache: ItemCorpusCache | None = None
+        self.model_step: int | None = None
+        self.refresh_count = 0
+        self.trace_count = 0      # incremented only when the scorer retraces
+
+        self._build = jax.jit(self._build_impl)
+        self._score = jax.jit(self._score_impl)
+        self._topk = jax.jit(self._topk_impl, static_argnames=("K",))
+        self._context = jax.jit(self._context_impl)
+
+    # -- jitted bodies ------------------------------------------------------
+
+    def _build_impl(self, params):
+        return build_corpus_cache(params, self.cfg, self.item_ids,
+                                  self.item_weights)
+
+    def _context_impl(self, params, ctx_ids, ctx_w):
+        """Per-query context cache: P_C (Bq, rho, k), s_C (Bq,), lin_C (Bq,)."""
+        from repro.models.recsys.fwfm import context_inputs
+        V_C, lin_C = context_inputs(params, self.cfg, ctx_ids, ctx_w)
+        p = DPLRParams(params["U"], params["e"])
+        ctx = rk.dplr_context_cache(p, V_C, self.cfg.layout.n_context)
+        return ctx.P_C, ctx.s_C, lin_C
+
+    def _score_impl(self, params, cache, ctx_ids, ctx_w):
+        self.trace_count += 1     # python side effect: runs at trace time only
+        P_C, s_C, lin_C = self._context_impl(params, ctx_ids, ctx_w)
+        # direct fused form — same reduction order as rank_items, so the
+        # corpus-cached path is float32-epsilon-close to the per-query path.
+        P = P_C[:, None] + cache.Q_I[None]                 # (Bq, n, rho, k)
+        term_e = jnp.einsum("qnrk,r->qn", P * P, params["e"])
+        pw = 0.5 * (s_C[:, None] + cache.t_I[None, :] + term_e)
+        return params["bias"] + lin_C[:, None] + cache.lin_I[None, :] + pw
+
+    def _topk_impl(self, params, cache, ctx_ids, ctx_w, *, K):
+        scores = self._score_impl(params, cache, ctx_ids, ctx_w)
+        return jax.lax.top_k(scores, K)
+
+    # -- corpus/model lifecycle --------------------------------------------
+
+    def refresh(self, params: dict, step: int | None = None) -> None:
+        """Install a model snapshot: rebuild the item-corpus cache (one
+        jitted dispatch), keep the scorer's jit cache intact."""
+        self.params = params
+        self.cache = self._build(params)
+        self._a_I = self.cache.a_I     # fused addend for the kernel path
+        self.model_step = step
+        self.refresh_count += 1
+
+    def maybe_refresh(self, manager, template, select=lambda t: t) -> bool:
+        """CheckpointManager invalidation hook: if a newer checkpoint step
+        exists, restore it and rebuild the corpus cache.  ``template`` is
+        the pytree structure passed to ``manager.restore``; ``select``
+        extracts the model params from the restored tree."""
+        # cheap name-only poll: no checksum pass over retained checkpoints
+        # in the serving loop; restore() below validates what it loads.
+        step = manager.latest_step(validate=False)
+        if step is None or step == self.model_step:
+            return False
+        restored, step = manager.restore(template)
+        if restored is None:
+            return False
+        self.refresh(select(restored), step=step)
+        return True
+
+    # -- public scoring API -------------------------------------------------
+
+    def _require_ready(self):
+        if self.cache is None:
+            raise RuntimeError("engine has no model: call refresh() first")
+
+    def _ctx_arrays(self, context_ids, context_weights):
+        ids = jnp.asarray(context_ids)
+        w = (jnp.ones(ids.shape, jnp.float32) if context_weights is None
+             else jnp.asarray(context_weights))
+        return ids, w
+
+    def score(self, context_ids, context_weights=None) -> jax.Array:
+        """(Bq, n_items) scores for a batch of query contexts."""
+        self._require_ready()
+        ids, w = self._ctx_arrays(context_ids, context_weights)
+        if self.use_pallas_kernel:
+            from repro.kernels import ops as kops
+            P_C, s_C, lin_C = self._context(self.params, ids, w)
+            a_C = self.params["bias"] + lin_C + 0.5 * s_C
+            return kops.dplr_corpus_score(
+                self.cache.Q_I, self._a_I, self.params["e"], P_C, a_C,
+                block_n=self.block_n)
+        return self._score(self.params, self.cache, ids, w)
+
+    def topk(self, context_ids, K: int, context_weights=None):
+        """((Bq, K) scores, (Bq, K) int32 corpus indices) — only the winners
+        leave the scorer, not the (Bq, n) logit matrix."""
+        self._require_ready()
+        if not 0 < K <= self.n_items:
+            raise ValueError(
+                f"topk K={K} out of range for corpus of {self.n_items} items")
+        ids, w = self._ctx_arrays(context_ids, context_weights)
+        if self.use_pallas_kernel:
+            from repro.kernels import ops as kops
+            P_C, s_C, lin_C = self._context(self.params, ids, w)
+            a_C = self.params["bias"] + lin_C + 0.5 * s_C
+            return kops.dplr_corpus_score(
+                self.cache.Q_I, self._a_I, self.params["e"], P_C, a_C,
+                topk=K, block_n=self.block_n)
+        return self._topk(self.params, self.cache, ids, w, K=K)
+
+    def score_query(self, query: dict) -> jax.Array:
+        """Convenience for ``rank_items``-style query dicts (item tensors,
+        if present, are ignored — the corpus is the engine's)."""
+        return self.score(query["context_ids"], query.get("context_weights"))

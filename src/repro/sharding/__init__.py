@@ -1,4 +1,13 @@
+import jax as _jax
+
 from repro.sharding.rules import (  # noqa: F401
     dp_axes, lm_param_specs, recsys_param_specs, gnn_param_specs,
     opt_state_specs, lm_cache_spec,
 )
+
+# jax.shard_map landed as a top-level export in jax 0.5; fall back to the
+# experimental home on older runtimes (this container ships 0.4.x).
+try:
+    shard_map = _jax.shard_map
+except AttributeError:
+    from jax.experimental.shard_map import shard_map  # noqa: F401

@@ -1,0 +1,62 @@
+"""``hypothesis`` shim: re-export the real library when installed, else a
+deterministic fallback so the property tests still *run* (rather than skip).
+
+The fallback implements the tiny subset the suite uses — ``@settings``,
+``@given`` with keyword strategies, and ``st.integers`` — by drawing
+``max_examples`` pseudo-random examples from a generator seeded by the test
+name (stable across processes, unlike ``hash(str)``).
+"""
+from __future__ import annotations
+
+try:
+    from hypothesis import given, settings, strategies as st  # noqa: F401
+    HAVE_HYPOTHESIS = True
+except ImportError:
+    HAVE_HYPOTHESIS = False
+
+    import functools
+    import inspect
+    import zlib
+
+    import numpy as np
+
+    class _Integers:
+        def __init__(self, lo: int, hi: int):
+            self.lo, self.hi = int(lo), int(hi)
+
+        def draw(self, rng: np.random.Generator) -> int:
+            return int(rng.integers(self.lo, self.hi, endpoint=True))
+
+    class _Strategies:
+        @staticmethod
+        def integers(min_value: int, max_value: int) -> _Integers:
+            return _Integers(min_value, max_value)
+
+    st = _Strategies()
+
+    def settings(max_examples: int = 20, **_ignored):
+        def deco(fn):
+            fn._max_examples = max_examples
+            return fn
+        return deco
+
+    def given(**strategies):
+        def deco(fn):
+            @functools.wraps(fn)
+            def wrapper(*args, **kwargs):
+                n = getattr(wrapper, "_max_examples", 20)
+                seed = zlib.crc32(fn.__name__.encode())
+                rng = np.random.default_rng(seed)
+                for _ in range(n):
+                    drawn = {k: s.draw(rng) for k, s in strategies.items()}
+                    fn(*args, **drawn, **kwargs)
+
+            # hide the drawn params from pytest's fixture resolution: the
+            # wrapper's visible signature keeps only non-strategy params.
+            sig = inspect.signature(fn)
+            keep = [p for name, p in sig.parameters.items()
+                    if name not in strategies]
+            wrapper.__signature__ = sig.replace(parameters=keep)
+            del wrapper.__wrapped__
+            return wrapper
+        return deco

@@ -1,0 +1,217 @@
+"""Corpus-precomputation serving engine + dplr_corpus_score kernel:
+numeric parity (atol 1e-5) against the per-query Algorithm 1 path, fused
+top-K vs argsort, checkpoint-refresh without scorer retrace."""
+import numpy as np
+import pytest
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import ranking as rk
+from repro.core.dplr import DPLRParams, dplr_diagonal
+from repro.core.fields import uniform_layout
+from repro.data.synthetic_ctr import SyntheticCTR
+from repro.embedding.bag import (item_arena_ids, lookup_item_embeddings)
+from repro.kernels import ops, ref
+from repro.models.recsys import fwfm
+from repro.serving import CorpusRankingEngine, build_corpus_cache
+
+
+def _setup(nC=5, nI=4, vocab=50, k=8, rho=2, n=37, seed=0):
+    layout = uniform_layout(nC, nI, vocab)
+    cfg = fwfm.FwFMConfig(layout=layout, embed_dim=k, interaction="dplr",
+                          rank=rho)
+    params = fwfm.init(jax.random.PRNGKey(seed), cfg)
+    data = SyntheticCTR(layout, embed_dim=4, seed=seed)
+    q = {k_: jnp.asarray(v) for k_, v in data.ranking_query(n, seed).items()}
+    return layout, cfg, params, data, q
+
+
+def _batched_query(data, q, Bq, n):
+    """Bq distinct contexts against q's item corpus."""
+    ctxs = [jnp.asarray(data.ranking_query(n, 100 + b)["context_ids"])
+            for b in range(Bq)]
+    ctx = jnp.concatenate(ctxs, 0)
+    return {
+        "context_ids": ctx,
+        "context_weights": jnp.ones(ctx.shape, jnp.float32),
+        "item_ids": jnp.broadcast_to(q["item_ids"][0],
+                                     (Bq, *q["item_ids"].shape[1:])),
+        "item_weights": jnp.broadcast_to(q["item_weights"][0],
+                                         (Bq, *q["item_weights"].shape[1:])),
+    }
+
+
+# ---------------------------------------------------------------------------
+# Corpus cache + engine parity vs the per-query Algorithm 1 path
+# ---------------------------------------------------------------------------
+
+def test_corpus_cache_matches_per_query_projection():
+    layout, cfg, params, data, q = _setup()
+    cache = build_corpus_cache(params, cfg, q["item_ids"][0],
+                               q["item_weights"][0])
+    V_I = lookup_item_embeddings(params["embedding"], layout,
+                                 q["item_ids"][0], q["item_weights"][0])
+    p = DPLRParams(params["U"], params["e"])
+    nC = layout.n_context
+    want_Q = jnp.einsum("rm,nmk->nrk", p.U[:, nC:], V_I)
+    np.testing.assert_allclose(cache.Q_I, want_Q, atol=1e-6)
+    d = dplr_diagonal(p)
+    want_t = jnp.einsum("nmk,m->n", V_I * V_I, d[nC:])
+    np.testing.assert_allclose(cache.t_I, want_t, atol=1e-6)
+
+
+@pytest.mark.parametrize("Bq", [1, 3])
+def test_engine_score_equals_rank_items(Bq):
+    _, cfg, params, data, q = _setup(n=37)
+    qb = _batched_query(data, q, Bq, 37)
+    want = fwfm.rank_items(params, cfg, qb)
+    engine = CorpusRankingEngine(cfg, q["item_ids"][0], q["item_weights"][0])
+    engine.refresh(params, step=0)
+    got = engine.score(qb["context_ids"], qb["context_weights"])
+    assert got.shape == (Bq, 37)
+    np.testing.assert_allclose(got, want, atol=1e-5)
+
+
+@pytest.mark.parametrize("Bq", [1, 2])
+def test_engine_pallas_kernel_equals_rank_items(Bq):
+    """Kernel path (interpret mode), non-divisible block_n."""
+    _, cfg, params, data, q = _setup(n=37)
+    qb = _batched_query(data, q, Bq, 37)
+    want = fwfm.rank_items(params, cfg, qb)
+    engine = CorpusRankingEngine(cfg, q["item_ids"][0], q["item_weights"][0],
+                                 use_pallas_kernel=True, block_n=16)
+    engine.refresh(params)
+    got = engine.score(qb["context_ids"], qb["context_weights"])
+    np.testing.assert_allclose(got, want, atol=1e-5)
+
+
+def test_engine_topk_matches_full_scores():
+    _, cfg, params, data, q = _setup(n=37)
+    qb = _batched_query(data, q, 2, 37)
+    engine = CorpusRankingEngine(cfg, q["item_ids"][0], q["item_weights"][0])
+    engine.refresh(params)
+    full = np.asarray(engine.score(qb["context_ids"], qb["context_weights"]))
+    vals, idx = engine.topk(qb["context_ids"], 5, qb["context_weights"])
+    want_idx = np.argsort(-full, axis=1)[:, :5]
+    np.testing.assert_array_equal(np.asarray(idx), want_idx)
+    np.testing.assert_allclose(np.asarray(vals),
+                               np.take_along_axis(full, want_idx, 1),
+                               atol=1e-6)
+
+
+# ---------------------------------------------------------------------------
+# dplr_corpus_score kernel vs jnp oracle and vs rk.dplr_score_items
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("n,rho,k,Bq,block_n", [
+    (64, 2, 8, 1, 32),
+    (1000, 3, 16, 4, 256),      # non-divisible n -> padding path
+    (130, 5, 16, 2, 64),
+])
+def test_corpus_score_kernel_vs_ref(rng, n, rho, k, Bq, block_n):
+    Q = jnp.asarray(rng.standard_normal((n, rho, k), dtype=np.float32))
+    a_I = jnp.asarray(rng.standard_normal(n).astype(np.float32))
+    e = jnp.asarray(rng.standard_normal(rho).astype(np.float32))
+    PC = jnp.asarray(rng.standard_normal((Bq, rho, k), dtype=np.float32))
+    a_C = jnp.asarray(rng.standard_normal(Bq).astype(np.float32))
+    out = ops.dplr_corpus_score(Q, a_I, e, PC, a_C, block_n=block_n)
+    want = ref.dplr_corpus_score_ref(Q, a_I, e, PC, a_C)
+    np.testing.assert_allclose(out, want, atol=1e-5, rtol=1e-5)
+
+
+@pytest.mark.parametrize("n,block_n,K", [
+    (100, 32, 7),      # padding + K not a block multiple
+    (256, 64, 16),
+])
+def test_corpus_score_kernel_topk_vs_argsort(rng, n, block_n, K):
+    rho, k, Bq = 3, 8, 3
+    Q = jnp.asarray(rng.standard_normal((n, rho, k), dtype=np.float32))
+    a_I = jnp.asarray(rng.standard_normal(n).astype(np.float32))
+    e = jnp.asarray(rng.standard_normal(rho).astype(np.float32))
+    PC = jnp.asarray(rng.standard_normal((Bq, rho, k), dtype=np.float32))
+    a_C = jnp.asarray(rng.standard_normal(Bq).astype(np.float32))
+    vals, idx = ops.dplr_corpus_score(Q, a_I, e, PC, a_C, topk=K,
+                                      block_n=block_n)
+    want_v, want_i = ref.dplr_corpus_topk_ref(Q, a_I, e, PC, a_C, K)
+    np.testing.assert_allclose(vals, want_v, atol=1e-5, rtol=1e-5)
+    np.testing.assert_array_equal(np.asarray(idx), np.asarray(want_i))
+
+
+def test_corpus_kernel_consistent_with_algorithm1(rng):
+    """Corpus kernel == rk.dplr_score_items on a real DPLR parameterization
+    (pairwise term only: a_I = 0.5 t_I, a_C = 0.5 s_C)."""
+    m, nC, k, rho, n = 12, 7, 8, 3, 100
+    from repro.core.dplr import init_dplr
+    p = init_dplr(jax.random.PRNGKey(0), m, rho)
+    V_C = jnp.asarray(rng.standard_normal((1, nC, k), dtype=np.float32))
+    V_I = jnp.asarray(rng.standard_normal((1, n, m - nC, k), dtype=np.float32))
+    cache = rk.dplr_context_cache(p, V_C, nC)
+    want = rk.dplr_score_items(p, cache, V_I, nC)
+    d = dplr_diagonal(p)
+    Q_I = jnp.einsum("rm,nmk->nrk", p.U[:, nC:], V_I[0])
+    t_I = jnp.einsum("nmk,m->n", V_I[0] * V_I[0], d[nC:])
+    got = ops.dplr_corpus_score(Q_I, 0.5 * t_I, p.e, cache.P_C,
+                                0.5 * cache.s_C, block_n=64)
+    np.testing.assert_allclose(got, want, atol=1e-5, rtol=1e-4)
+
+
+# ---------------------------------------------------------------------------
+# Checkpoint refresh: cache rebuilds, jitted scorer does not retrace
+# ---------------------------------------------------------------------------
+
+def test_engine_checkpoint_refresh_no_retrace(tmp_path):
+    from repro.checkpoint import CheckpointManager
+
+    _, cfg, params, data, q = _setup(n=20)
+    engine = CorpusRankingEngine(cfg, q["item_ids"][0], q["item_weights"][0])
+    engine.refresh(params, step=0)
+    s0 = engine.score(q["context_ids"], q["context_weights"])
+    assert engine.trace_count == 1
+
+    mgr = CheckpointManager(str(tmp_path))
+    bumped = dict(params)
+    bumped["bias"] = params["bias"] + 2.0
+    mgr.save({"params": bumped}, step=1, blocking=True)
+
+    assert engine.maybe_refresh(mgr, {"params": params},
+                                select=lambda t: t["params"])
+    assert engine.model_step == 1 and engine.refresh_count == 2
+    s1 = engine.score(q["context_ids"], q["context_weights"])
+    # model changed -> scores changed (by exactly the bias bump) ...
+    np.testing.assert_allclose(np.asarray(s1), np.asarray(s0) + 2.0,
+                               atol=1e-5)
+    # ... but the jitted scorer was NOT retraced, let alone restarted
+    assert engine.trace_count == 1
+    # idempotent: same step -> no refresh
+    assert not engine.maybe_refresh(mgr, {"params": params},
+                                    select=lambda t: t["params"])
+
+
+# ---------------------------------------------------------------------------
+# Satellites: shared item-lookup helper + use_pallas_kernels flag
+# ---------------------------------------------------------------------------
+
+def test_lookup_item_embeddings_helper(rng):
+    layout, cfg, params, _, q = _setup()
+    table = params["embedding"]
+    item_layout = layout.subset("item")
+    from repro.embedding.bag import embedding_bag
+    want = embedding_bag(
+        table,
+        item_arena_ids(layout, q["item_ids"])
+        + jnp.asarray(item_layout.slot_offsets),
+        q["item_weights"], item_layout.slot_to_field, item_layout.n_fields)
+    got = lookup_item_embeddings(table, layout, q["item_ids"],
+                                 q["item_weights"])
+    np.testing.assert_array_equal(np.asarray(got), np.asarray(want))
+
+
+def test_use_pallas_kernels_flag_routes_rank_items():
+    import dataclasses
+    _, cfg, params, data, q = _setup(n=25)
+    qb = _batched_query(data, q, 2, 25)
+    want = fwfm.rank_items(params, cfg, qb)
+    cfg_k = dataclasses.replace(cfg, use_pallas_kernels=True)
+    got = fwfm.rank_items(params, cfg_k, qb)
+    np.testing.assert_allclose(got, want, atol=1e-5)

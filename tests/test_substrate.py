@@ -2,7 +2,7 @@
 gradient accumulation, int8 compression, data pipeline."""
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as st
+from _hypothesis_compat import given, settings, st
 
 import jax
 import jax.numpy as jnp
@@ -15,6 +15,7 @@ from repro.embedding.bag import (embedding_bag, lookup_field_embeddings,
                                  lookup_linear_terms, padded_rows)
 from repro.embedding.sharded import make_sharded_take
 from repro import optim
+from repro.sharding import shard_map
 
 
 def test_multi_hot_field_averages(rng, key):
@@ -113,7 +114,7 @@ def test_compressed_psum_single_device(host_mesh, rng):
 
     x = jnp.asarray(rng.standard_normal((8, 4)).astype(np.float32))
     err0 = jnp.zeros_like(x)
-    fn = jax.shard_map(
+    fn = shard_map(
         lambda a, b: compressed_psum(a, "data", b),
         mesh=host_mesh, in_specs=(P(), P()), out_specs=(P(), P()))
     out, err = fn(x, err0)
