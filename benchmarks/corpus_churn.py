@@ -1,0 +1,91 @@
+"""Delta-update vs full-rebuild latency across catalog churn rates (the
+mutable-corpus claim).
+
+The deployed corpus churns continuously: Δn of n items are added, removed,
+or re-priced between queries.  PR 1's frozen cache forced a full
+O(n rho k) ``build_corpus_cache`` per change; the mutable slab absorbs the
+same change with one O(Δn rho k) scattered row write and zero scorer
+retraces.  This benchmark measures both on the paper's deployed geometry
+(63 fields / 38 item-side, k=16, rho=3):
+
+    delta   - ``engine.update_items`` of Δn live slots (bucket-padded
+              scatter, the steady-state churn op)
+    rebuild - ``engine.refresh`` (the full jitted slab rebuild a frozen
+              cache would need for ANY Δn)
+
+Output lines:  churn: <n>,<churn_frac>,<dn>,<delta_ms>,<rebuild_ms>,<speedup>
+
+The claim: delta is >= 10x cheaper at churn rates Δn/n <= 1%; at high
+churn (10%+) the gap narrows and a full rebuild becomes competitive —
+which is the crossover that justifies keeping BOTH paths.
+"""
+from __future__ import annotations
+
+import time
+
+import numpy as np
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.fields import uniform_layout
+from repro.data.synthetic_ctr import SyntheticCTR
+from repro.models.recsys import fwfm
+from repro.serving import CorpusRankingEngine
+
+
+def _time(fn, reps: int) -> float:
+    fn(0)                                 # compile + warmup
+    fn(1 % reps)
+    t0 = time.perf_counter()
+    for r in range(reps):
+        fn(r)
+    return (time.perf_counter() - t0) * 1e3 / reps
+
+
+def main(quick: bool = False) -> None:
+    sizes = [4096] if quick else [8192, 32768]
+    fracs = [0.001, 0.01, 0.1]
+    reps = 5 if quick else 10
+    layout = uniform_layout(25, 38, 1000)
+    cfg = fwfm.FwFMConfig(layout=layout, embed_dim=16, interaction="dplr",
+                          rank=3)
+    params = fwfm.init(jax.random.PRNGKey(0), cfg)
+    data = SyntheticCTR(layout, embed_dim=8, seed=0)
+
+    for n in sizes:
+        corpus = data.ranking_query(n, 0)
+        # capacity == n: the rebuild baseline then does exactly the O(n)
+        # row work a frozen PR-1-style cache would redo for ANY change
+        # (updates need no free slots, so churn fits a full slab)
+        engine = CorpusRankingEngine(cfg, corpus["item_ids"][0],
+                                     corpus["item_weights"][0],
+                                     capacity=n)
+
+        def rebuild(_):
+            engine.refresh(params, step=0)
+            jax.block_until_ready(engine.cache.Q_I)
+
+        rebuild_ms = _time(rebuild, reps)
+
+        # pre-staged delta batches so timing is pure row-compute + scatter
+        rng = np.random.default_rng(0)
+        for frac in fracs:
+            dn = max(1, int(n * frac))
+            deltas = [data.ranking_query(dn, 100 + r) for r in range(reps)]
+            slot_sets = [rng.choice(n, dn, replace=False).astype(np.int32)
+                         for _ in range(reps)]
+
+            def delta(r):
+                engine.update_items(slot_sets[r],
+                                    deltas[r]["item_ids"][0],
+                                    deltas[r]["item_weights"][0])
+                jax.block_until_ready(engine.cache.Q_I)
+
+            delta_ms = _time(delta, reps)
+            print(f"churn: {n},{frac},{dn},{delta_ms:.3f},{rebuild_ms:.3f},"
+                  f"{rebuild_ms / delta_ms:.1f}")
+
+
+if __name__ == "__main__":
+    main()

@@ -17,8 +17,8 @@ def main() -> None:
                     help="run a single benchmark module by name")
     args = ap.parse_args()
 
-    from benchmarks import (fig1_latency, fig2_posthoc, roofline,
-                            serving_engine, table1_accuracy,
+    from benchmarks import (corpus_churn, fig1_latency, fig2_posthoc,
+                            roofline, serving_engine, table1_accuracy,
                             table2_proprietary, table3_serving)
 
     modules = {
@@ -29,6 +29,7 @@ def main() -> None:
         "fig2": fig2_posthoc,
         "roofline": roofline,
         "serving": serving_engine,
+        "churn": corpus_churn,
     }
     if args.only:
         modules = {args.only: modules[args.only]}

@@ -80,7 +80,7 @@ def main(quick: bool = False) -> None:
         maxdiff = float(jnp.abs(eager - fwfm.rank_items(params, cfg,
                                                         full[0])).max())
         jitdiff = float(jnp.abs(
-            engine.score(*ctxs[0]) - base_scorer(params, full[0])).max())
+            engine.score(*ctxs[0])[:, :n] - base_scorer(params, full[0])).max())
         print(f"serving: {n},1,{base_ms:.3f},{eng_ms:.3f},"
               f"{base_ms / eng_ms:.2f},{maxdiff:.2e} (jitdiff {jitdiff:.1e})")
 

@@ -176,6 +176,24 @@ class CheckpointManager:
     def restore(self, tree_like, step: int | None = None, shardings=None):
         return restore_pytree(tree_like, self.directory, step, shardings)
 
+    def step_signature(self, step: int) -> tuple:
+        """Cheap identity of the poll state: (step, checkpoint-directory
+        mtime_ns, manifest mtime_ns).  Lets a poller skip re-examining a
+        corrupt newest step WITHOUT missing later landings: any save
+        (re-writing the same step, or a new step at ANY number — including
+        a valid lower step while the corrupt one persists) renames a dir
+        into ``self.directory`` and so bumps its mtime, changing the
+        signature."""
+        def mtime(path):
+            try:
+                return os.stat(path).st_mtime_ns
+            except OSError:
+                return None
+
+        man = os.path.join(self.directory, f"step_{step:08d}",
+                           "manifest.json")
+        return (step, mtime(self.directory), mtime(man))
+
     def latest_step(self, validate: bool = True) -> int | None:
         """Newest checkpoint step.  ``validate=False`` discovers by
         directory name only (no checksum pass over every retained

@@ -28,8 +28,12 @@ Two output modes:
     supported in interpret mode; on Mosaic a bitonic merge may be needed
     for very old toolchains.
 
-Padding: n is padded up to a block multiple with ``a_I = NEG_INF`` so
-phantom items can never win a top-K slot; the full mode slices them off.
+Validity mask: the serving corpus is a capacity-padded MUTABLE slab
+(``repro.serving.corpus``), so the kernel takes an optional ``valid`` (n,)
+mask and pins dead slots to exactly ``NEG_INF`` inside each tile — before
+the running top-K merge — so a dead (or phantom-padding) slot can never win
+a top-K slot.  Padding: n is padded up to a block multiple with
+``valid = 0`` phantom rows; the full mode slices them off.
 """
 from __future__ import annotations
 
@@ -42,22 +46,26 @@ from jax.experimental import pallas as pl
 NEG_INF = -1e30
 
 
-def _tile_scores(q, a_i, e, pc, a_c):
-    """(Bq, block_n) scores for one item tile.  All operands f32 in VMEM."""
+def _tile_scores(q, a_i, e, pc, a_c, m):
+    """(Bq, block_n) scores for one item tile.  All operands f32 in VMEM;
+    ``m`` is the tile's (block_n,) {0,1} validity mask — dead slots are
+    pinned to exactly NEG_INF so they can never win a top-K slot."""
     # p: (Bq, bn, rho, k) — direct fused form, same reduction order as the
     # jnp reference so corpus-cached parity stays at float32 epsilon.
     p = pc[:, None, :, :] + q[None, :, :, :]
     term_e = jnp.einsum("qnrk,r->qn", p * p, e)
-    return a_c[:, None] + a_i[None, :] + 0.5 * term_e
+    s = a_c[:, None] + a_i[None, :] + 0.5 * term_e
+    return jnp.where((m != 0)[None, :], s, NEG_INF)
 
 
-def _kernel_full(q_ref, a_ref, e_ref, pc_ref, ac_ref, out_ref):
+def _kernel_full(q_ref, a_ref, e_ref, pc_ref, ac_ref, m_ref, out_ref):
     out_ref[...] = _tile_scores(
-        q_ref[...], a_ref[:, 0], e_ref[:, 0], pc_ref[...], ac_ref[:, 0])
+        q_ref[...], a_ref[:, 0], e_ref[:, 0], pc_ref[...], ac_ref[:, 0],
+        m_ref[:, 0])
 
 
-def _kernel_topk(q_ref, a_ref, e_ref, pc_ref, ac_ref, val_ref, idx_ref, *,
-                 block_n: int, topk: int):
+def _kernel_topk(q_ref, a_ref, e_ref, pc_ref, ac_ref, m_ref, val_ref,
+                 idx_ref, *, block_n: int, topk: int):
     i = pl.program_id(0)
 
     @pl.when(i == 0)
@@ -66,7 +74,8 @@ def _kernel_topk(q_ref, a_ref, e_ref, pc_ref, ac_ref, val_ref, idx_ref, *,
         idx_ref[...] = jnp.zeros_like(idx_ref)
 
     scores = _tile_scores(
-        q_ref[...], a_ref[:, 0], e_ref[:, 0], pc_ref[...], ac_ref[:, 0])
+        q_ref[...], a_ref[:, 0], e_ref[:, 0], pc_ref[...], ac_ref[:, 0],
+        m_ref[:, 0])
     tile_idx = i * block_n + jax.lax.broadcasted_iota(
         jnp.int32, scores.shape, 1)
     cat_v = jnp.concatenate([val_ref[...], scores], axis=1)
@@ -84,13 +93,15 @@ def dplr_corpus_score(
     e: jax.Array,      # (rho,)       DPLR eigen-weights
     P_C: jax.Array,    # (Bq, rho, k) cached context projections
     a_C: jax.Array,    # (Bq,)        per-query scalar (b0 + lin_C + 0.5*s_C)
+    valid: jax.Array | None = None,   # (n,) slot liveness; None = all live
     *,
     topk: int | None = None,
     block_n: int = 2048,
     interpret: bool = False,
 ):
-    """Corpus-cached batched scorer.  Returns ``(Bq, n)`` scores, or with
-    ``topk=K`` the fused ``((Bq, K) scores, (Bq, K) int32 indices)``."""
+    """Corpus-cached batched scorer.  Returns ``(Bq, n)`` scores (dead
+    slots exactly ``NEG_INF``), or with ``topk=K`` the fused ``((Bq, K)
+    scores, (Bq, K) int32 indices)`` over LIVE slots only."""
     n, rho, k = Q_I.shape
     Bq = P_C.shape[0]
     Q_I = Q_I.astype(jnp.float32)
@@ -98,12 +109,15 @@ def dplr_corpus_score(
     e = e.astype(jnp.float32)
     P_C = P_C.astype(jnp.float32)
     a_C = a_C.astype(jnp.float32)
+    mask = (jnp.ones((n,), jnp.int32) if valid is None
+            else jnp.asarray(valid).astype(jnp.int32))
 
     block_n = min(block_n, n)
     pad = (-n) % block_n
     if pad:
         Q_I = jnp.pad(Q_I, ((0, pad), (0, 0), (0, 0)))
-        a_I = jnp.pad(a_I, (0, pad), constant_values=NEG_INF)
+        a_I = jnp.pad(a_I, (0, pad))
+        mask = jnp.pad(mask, (0, pad))      # phantom rows are dead slots
     n_pad = n + pad
     grid = (n_pad // block_n,)
 
@@ -113,8 +127,9 @@ def dplr_corpus_score(
         pl.BlockSpec((rho, 1), lambda i: (0, 0)),
         pl.BlockSpec((Bq, rho, k), lambda i: (0, 0, 0)),
         pl.BlockSpec((Bq, 1), lambda i: (0, 0)),
+        pl.BlockSpec((block_n, 1), lambda i: (i, 0)),
     ]
-    args = (Q_I, a_I[:, None], e[:, None], P_C, a_C[:, None])
+    args = (Q_I, a_I[:, None], e[:, None], P_C, a_C[:, None], mask[:, None])
 
     if topk is None:
         return pl.pallas_call(

@@ -37,7 +37,10 @@ def _make_kernel(n_slots: int, segment_ids, n_bags: int):
         out = jnp.zeros(out_ref.shape, out_ref.dtype)   # (1, n_bags, k)
         for s in range(n_slots):
             row = row_refs[s][0]                     # (k,)
-            w = w_ref[0, s]
+            # weight cast to the table dtype: an f32 weight would promote
+            # the product and scatter f32 into a bf16 accumulator (a hard
+            # error in upcoming JAX), matching the jnp embedding_bag path.
+            w = w_ref[0, s].astype(row.dtype)
             out = out.at[0, seg[s], :].add(row * w)
         out_ref[...] = out
 

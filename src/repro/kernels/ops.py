@@ -28,11 +28,12 @@ def dplr_score_items(V_I, U_I, e, d_I, P_C, s_C, *, block_n: int = 1024,
                                   block_n=block_n, interpret=interp)
 
 
-def dplr_corpus_score(Q_I, a_I, e, P_C, a_C, *, topk=None,
+def dplr_corpus_score(Q_I, a_I, e, P_C, a_C, valid=None, *, topk=None,
                       block_n: int = 2048, interpret: bool | None = None):
     interp = (not _on_tpu()) if interpret is None else interpret
-    return _corpus.dplr_corpus_score(Q_I, a_I, e, P_C, a_C, topk=topk,
-                                     block_n=block_n, interpret=interp)
+    return _corpus.dplr_corpus_score(Q_I, a_I, e, P_C, a_C, valid,
+                                     topk=topk, block_n=block_n,
+                                     interpret=interp)
 
 
 def fwfm_pairwise(V, R, *, block_b: int = 512, interpret: bool | None = None):

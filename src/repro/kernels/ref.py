@@ -15,16 +15,22 @@ def dplr_score_items_ref(V_I, U_I, e, d_I, P_C, s_C):
     return 0.5 * (s_C + term_d + term_e)
 
 
-def dplr_corpus_score_ref(Q_I, a_I, e, P_C, a_C):
-    """(Bq, n) corpus-cached scores: a_C + a_I + 0.5 e.||P_C + Q_I||^2."""
+def dplr_corpus_score_ref(Q_I, a_I, e, P_C, a_C, valid=None):
+    """(Bq, n) corpus-cached scores: a_C + a_I + 0.5 e.||P_C + Q_I||^2,
+    with dead slots (``valid[i] == False``) pinned to the kernel's
+    NEG_INF sentinel."""
+    from repro.kernels.dplr_corpus_score import NEG_INF
     P = P_C[:, None] + Q_I[None]
     term_e = jnp.einsum("qnrk,r->qn", P * P, e)
-    return a_C[:, None] + a_I[None, :] + 0.5 * term_e
+    s = a_C[:, None] + a_I[None, :] + 0.5 * term_e
+    if valid is not None:
+        s = jnp.where(jnp.asarray(valid)[None, :], s, NEG_INF)
+    return s
 
 
-def dplr_corpus_topk_ref(Q_I, a_I, e, P_C, a_C, topk):
+def dplr_corpus_topk_ref(Q_I, a_I, e, P_C, a_C, topk, valid=None):
     """argsort-based top-K oracle: ((Bq, K) scores, (Bq, K) indices)."""
-    s = dplr_corpus_score_ref(Q_I, a_I, e, P_C, a_C)
+    s = dplr_corpus_score_ref(Q_I, a_I, e, P_C, a_C, valid)
     idx = jnp.argsort(-s, axis=1)[:, :topk].astype(jnp.int32)
     return jnp.take_along_axis(s, idx, axis=1), idx
 

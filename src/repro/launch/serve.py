@@ -26,6 +26,13 @@ sliding-window retrain mode of Section 5.3), rebuilds the corpus cache
 WITHOUT retracing the jitted scorer — ``--refresh-demo`` exercises the
 round-trip in-process by writing a perturbed checkpoint mid-stream.
 
+Catalog churn: the corpus is a capacity-padded mutable slab
+(``--capacity``), so items can be added/removed/updated between queries
+with O(Δn rho k) in-place writes.  ``--churn-demo`` interleaves
+``--churn-ops`` add/remove/update/score operations on a live engine and
+asserts the jitted scorer NEVER retraces (the recompilation stall the slab
+design removes) and that masked top-K never surfaces a dead slot.
+
 ``--mp`` switches to the model-parallel DPLR scorer (EXPERIMENTS.md §Perf
 cell 3) — on this 1-device container it exercises the same shard_map code
 path the production mesh runs; ``--bf16`` serves bf16 tables.
@@ -59,6 +66,69 @@ def _report(tag: str, lat: np.ndarray, queries: int, items: int) -> None:
           f"P99 {np.percentile(lat, 99):.2f} ms")
 
 
+def _churn_demo(args, engine, data) -> None:
+    """Interleave add/remove/update/score on the LIVE engine and prove the
+    slab absorbs arbitrary catalog churn with zero scorer retraces."""
+    rng = np.random.default_rng(args.seed)
+    K = args.topk or 10
+
+    def one_score(s):
+        q = data.context_query(s)
+        ctx = jnp.asarray(q["context_ids"])
+        ctx_w = jnp.asarray(q["context_weights"])
+        t0 = time.perf_counter()
+        vals, idx = jax.block_until_ready(engine.topk(ctx, K, ctx_w))
+        dt = (time.perf_counter() - t0) * 1e3
+        idx = np.asarray(idx).ravel()
+        assert engine.is_live(idx).all(), \
+            f"masked top-K surfaced a dead slot: {idx}"
+        return dt
+
+    # warmup: trace the scorer once for the slab capacity
+    one_score(0)
+    traced, cap0 = engine.trace_count, engine.capacity
+    lat, counts = [], {"add": 0, "remove": 0, "update": 0, "score": 0}
+    for s in range(args.churn_ops):
+        kind = ("score" if s % 2 else
+                rng.choice(["add", "remove", "update"]))
+        live = engine.valid_slots
+        if kind == "add":
+            dn = int(rng.integers(1, 9))
+            if engine.n_items + dn > engine.capacity:
+                kind = "remove"      # stay inside the slab: no mid-demo grow
+            else:
+                fresh = data.ranking_query(dn, 10_000 + s)
+                engine.add_items(fresh["item_ids"][0],
+                                 fresh["item_weights"][0])
+        if kind == "remove":
+            dn = int(rng.integers(1, 9))
+            if engine.n_items - dn < max(K, args.items // 2):
+                kind = "update"      # keep enough live items for top-K
+            else:
+                engine.remove_items(rng.choice(live, dn, replace=False))
+        if kind == "update":
+            dn = int(rng.integers(1, 9))
+            fresh = data.ranking_query(dn, 20_000 + s)
+            engine.update_items(rng.choice(live, dn, replace=False),
+                                fresh["item_ids"][0],
+                                fresh["item_weights"][0])
+        if kind == "score":
+            lat.append(one_score(s))
+        counts[kind] += 1
+    jax.block_until_ready(engine.cache.Q_I)
+
+    assert engine.capacity == cap0, "slab doubled mid-demo"
+    assert engine.trace_count == traced, \
+        (f"scorer retraced under churn: {engine.trace_count} != {traced}")
+    print(f"churn demo: {args.churn_ops} interleaved ops "
+          f"({counts['add']} add / {counts['remove']} remove / "
+          f"{counts['update']} update / {counts['score']} score), "
+          f"{engine.n_items}/{engine.capacity} live slots at exit")
+    _report(f"churn, top{K}", np.asarray(lat), counts["score"], args.items)
+    print(f"zero-retrace OK: scorer traced {traced}x during warmup, "
+          f"{engine.trace_count}x after {args.churn_ops} churn ops")
+
+
 def main(argv=None):
     ap = argparse.ArgumentParser()
     ap.add_argument("--arch", default="dplr-fwfm")
@@ -82,6 +152,14 @@ def main(argv=None):
     ap.add_argument("--refresh-demo", action="store_true",
                     help="write a perturbed checkpoint mid-stream and "
                          "verify the corpus engine hot-swaps it")
+    ap.add_argument("--capacity", type=int, default=0,
+                    help="corpus slab capacity (power of two; 0 = auto: "
+                         "items rounded up, 2x items under --churn-demo)")
+    ap.add_argument("--churn-demo", action="store_true",
+                    help="interleave add/remove/update/score ops on the "
+                         "live corpus and assert zero scorer retraces")
+    ap.add_argument("--churn-ops", type=int, default=1000,
+                    help="number of interleaved churn/score operations")
     ap.add_argument("--seed", type=int, default=0)
     args = ap.parse_args(argv)
 
@@ -99,8 +177,9 @@ def main(argv=None):
     if engine_kind == "corpus":
         if not is_dplr or args.mp:
             ap.error("--engine corpus requires a dplr model (and not --mp)")
-    elif args.topk or args.refresh_demo or args.use_pallas:
-        ap.error("--topk/--refresh-demo/--use-pallas require --engine corpus")
+    elif args.topk or args.refresh_demo or args.use_pallas or args.churn_demo:
+        ap.error("--topk/--refresh-demo/--use-pallas/--churn-demo require "
+                 "--engine corpus")
 
     params = mod.init(jax.random.PRNGKey(args.seed), cfg)
     mgr = None
@@ -139,12 +218,19 @@ def main(argv=None):
                 if jnp.asarray(a).dtype == jnp.bfloat16 else np.asarray(a),
                 tree)
 
-        # static candidate corpus: the item side of a fixed ranking query
+        # initial candidate corpus: the item side of a fixed ranking query,
+        # living in a capacity-padded slab so the catalog can churn.
+        from repro.serving.corpus import next_pow2
+        capacity = args.capacity or next_pow2(
+            2 * args.items if args.churn_demo else args.items)
         corpus = data.ranking_query(args.items, 0)
         engine = CorpusRankingEngine(
             cfg, corpus["item_ids"][0], corpus["item_weights"][0],
-            use_pallas_kernel=args.use_pallas)
+            capacity=capacity, use_pallas_kernel=args.use_pallas)
         engine.refresh(params, step=(mgr.latest_step() if mgr else None))
+
+        if args.churn_demo:
+            return _churn_demo(args, engine, data)
 
         lat, refreshes = [], 0
         demo_pending = False

@@ -145,6 +145,8 @@ def main(argv=None):
 
     pipe = ShardedPipeline(make_batch, prefetch=2).start(from_step=start_step)
     losses = []
+    step_reached = start_step      # last step whose update actually landed
+    last_saved = start_step if start_step else None
     t0 = time.time()
     try:
         for step in range(start_step, args.steps):
@@ -152,8 +154,10 @@ def main(argv=None):
             batch = {k: jnp.asarray(v) for k, v in batch.items()}
             loss, params, opt_state = train_step(params, opt_state, batch)
             losses.append(float(loss))
+            step_reached = step + 1
             if mgr and (step + 1) % args.ckpt_every == 0:
                 mgr.save({"params": params, "opt": opt_state}, step + 1)
+                last_saved = step + 1
             if args.fail_at is not None and step + 1 == args.fail_at:
                 print(f"[simulated preemption at step {step + 1}]", flush=True)
                 import os
@@ -164,10 +168,20 @@ def main(argv=None):
                       f"({rate:.1f} steps/s)", flush=True)
     finally:
         pipe.stop()
+        # save at the step the loop actually REACHED — labeling a partial
+        # run (pipeline error, KeyboardInterrupt) as args.steps would make
+        # --resume restore "past the end" and silently skip the remaining
+        # training.  Skip when nothing new ran or this step is already on
+        # disk.
+        if mgr and step_reached > start_step and step_reached != last_saved:
+            mgr.save({"params": params, "opt": opt_state}, step_reached)
         if mgr:
-            mgr.save({"params": params, "opt": opt_state}, args.steps)
             mgr.wait()
-    print(f"final loss: {losses[-1]:.5f}")
+    if losses:
+        print(f"final loss: {losses[-1]:.5f}")
+    else:
+        print(f"no steps to run: resumed at step {start_step} of "
+              f"{args.steps}")
     return losses
 
 

@@ -1,14 +1,22 @@
 """Corpus-precomputation serving subsystem for DPLR-FwFM.
 
 Extends the paper's context-side caching (Algorithm 1) to the item side:
-the candidate corpus is static between model refreshes, so its rank-space
-projections are precomputed once and every query costs O(rho k) per item.
+rank-space projections of the candidate corpus are precomputed once and
+every query costs O(rho k) per item.  The corpus is MUTABLE: it lives in a
+capacity-padded slab with a validity mask, so live-traffic catalog churn
+(item add/remove/update) is absorbed by O(Δn rho k) in-place row writes —
+no rebuilds, no shape changes, zero retraces of the jitted scorer — and a
+model refresh rebuilds the slab in place with slot assignments preserved.
 
-    corpus.py - ItemCorpusCache + build_corpus_cache (the precompute)
-    engine.py - CorpusRankingEngine (batched scoring, fused top-K,
-                checkpoint-refresh invalidation)
+    corpus.py - ItemCorpusCache + build_corpus_cache + corpus_rows (the
+                precompute; slab/mask invariants documented here)
+    engine.py - CorpusRankingEngine (batched masked scoring, fused top-K,
+                add/remove/update_items, slab doubling, checkpoint-refresh
+                invalidation)
 """
-from repro.serving.corpus import ItemCorpusCache, build_corpus_cache
+from repro.serving.corpus import (ItemCorpusCache, build_corpus_cache,
+                                  corpus_rows)
 from repro.serving.engine import CorpusRankingEngine
 
-__all__ = ["ItemCorpusCache", "build_corpus_cache", "CorpusRankingEngine"]
+__all__ = ["ItemCorpusCache", "build_corpus_cache", "corpus_rows",
+           "CorpusRankingEngine"]

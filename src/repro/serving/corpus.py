@@ -7,9 +7,9 @@ for a candidate corpus that is static between model refreshes the entire
 item-side computation is context-independent and can be hoisted out of the
 query loop:
 
-    Q_I[i]   = U_I @ V_I[i]                      (n, rho, k)
-    t_I[i]   = sum_{f in item fields} d_f ||v_f||^2        (n,)
-    lin_I[i] = <b_item, x_item[i]>                         (n,)
+    Q_I[i]   = U_I @ V_I[i]                      (cap, rho, k)
+    t_I[i]   = sum_{f in item fields} d_f ||v_f||^2        (cap,)
+    lin_I[i] = <b_item, x_item[i]>                         (cap,)
 
 Per query, the scorer then only computes the context cache (P_C, s_C,
 lin_C) and combines:
@@ -21,6 +21,26 @@ dropping per-query per-item work from O(rho m_I k + m_I k) (Algorithm 1:
 gather + project every candidate, every query) to O(rho k) — an
 optimization the dense FwFM baseline structurally cannot do, because its
 context-item term mixes the sides before any square is taken.
+
+Slab/mask invariants (the mutable-corpus contract)
+--------------------------------------------------
+A deployed corpus is never static: ads enter and leave the marketplace
+continuously (Section 5.3).  To absorb that churn without reshaping — and
+therefore without ever retracing a jitted scorer — the cache is a
+**capacity-padded slab**:
+
+  * every array's leading axis is ``capacity`` (a fixed power of two),
+    not the live item count; slot i of every array describes the same item;
+  * ``valid`` (capacity,) bool marks live slots.  Scoring must treat
+    ``valid[i] == False`` slots as score ``-inf`` so they can never win a
+    top-K slot; values in dead slots are unspecified (stale or zero);
+  * slot assignments are STABLE: mutations write only the touched rows and
+    a model refresh rebuilds every row in place, so a corpus index returned
+    to a caller keeps meaning the same item across add/remove/update and
+    across model swaps;
+  * growth is by slab doubling (amortized O(1) per added item); doubling is
+    the only operation that changes shapes, hence the only one that can
+    retrace downstream consumers.
 
 A cache is a pure pytree, so it rebuilds under jit with one dispatch on
 model refresh (the sliding-window retrain mode of Section 5.3) and the
@@ -39,36 +59,44 @@ from repro.embedding.bag import (
     lookup_item_embeddings,
     lookup_linear_terms,
 )
+# Mask fill for dead slots — the ONE definition, shared with the Pallas
+# kernel so the jnp and kernel paths return bit-identical scores for
+# invalid slots.
+from repro.kernels.dplr_corpus_score import NEG_INF
+
+
+def next_pow2(n: int) -> int:
+    """Smallest power of two >= n (>= 1)."""
+    return 1 << max(int(n) - 1, 0).bit_length()
 
 
 class ItemCorpusCache(NamedTuple):
-    """Context-independent per-item precomputations (one model, one corpus)."""
+    """Context-independent per-item precomputations (one model, one corpus).
 
-    Q_I: jax.Array     # (n, rho, k)  rank-space item projections U_I V_I
-    t_I: jax.Array     # (n,)         sum_f d_f ||v_f||^2 (item fields)
-    lin_I: jax.Array   # (n,)         first-order item term
+    Leading axis is the slab ``capacity``; ``valid`` marks live slots.
+    """
+
+    Q_I: jax.Array     # (cap, rho, k)  rank-space item projections U_I V_I
+    t_I: jax.Array     # (cap,)         sum_f d_f ||v_f||^2 (item fields)
+    lin_I: jax.Array   # (cap,)         first-order item term
+    valid: jax.Array   # (cap,)         bool liveness mask
 
     @property
-    def n_items(self) -> int:
+    def capacity(self) -> int:
         return self.Q_I.shape[0]
 
     @property
     def a_I(self) -> jax.Array:
-        """(n,) fused per-item scalar addend: lin_I + 0.5 * t_I."""
+        """(cap,) fused per-item scalar addend: lin_I + 0.5 * t_I."""
         return self.lin_I + 0.5 * self.t_I
 
 
-def build_corpus_cache(params: dict, cfg, item_ids: jax.Array,
-                       item_weights: jax.Array, take_fn=None) -> ItemCorpusCache:
-    """Precompute the item side for a static candidate corpus.
-
-    ``item_ids``/``item_weights``: (n, n_item_slots) local item-side slot
-    ids, exactly the per-candidate rows ``rank_items`` receives per query.
-    Pure and traceable — the engine jits it so a model refresh is one
-    dispatch.  O(n m_I k) once per (corpus, model), amortized over every
-    subsequent query.
-    """
-    assert cfg.interaction == "dplr", "corpus precompute requires DPLR"
+def corpus_rows(params: dict, cfg, item_ids: jax.Array,
+                item_weights: jax.Array, take_fn=None):
+    """(Q_I, t_I, lin_I) rows for a batch of items — the per-row math of
+    ``build_corpus_cache``, shared verbatim by the full build and the
+    engine's delta updates so a scattered row is bit-identical to the same
+    row in a from-scratch rebuild."""
     layout = cfg.layout
     nC = layout.n_context
     p = DPLRParams(params["U"], params["e"])
@@ -81,4 +109,43 @@ def build_corpus_cache(params: dict, cfg, item_ids: jax.Array,
     lin_I = lookup_linear_terms(params["linear"], layout.subset("item"),
                                 item_arena_ids(layout, item_ids),
                                 item_weights, take_fn=take_fn)
-    return ItemCorpusCache(Q_I=Q_I, t_I=t_I, lin_I=lin_I)
+    return Q_I, t_I, lin_I
+
+
+def build_corpus_cache(params: dict, cfg, item_ids: jax.Array,
+                       item_weights: jax.Array, take_fn=None, *,
+                       capacity: int | None = None,
+                       valid: jax.Array | None = None) -> ItemCorpusCache:
+    """Precompute the item side for a candidate-corpus slab.
+
+    ``item_ids``/``item_weights``: (n, n_item_slots) local item-side slot
+    ids, exactly the per-candidate rows ``rank_items`` receives per query.
+
+    ``capacity``: pad the slab's leading axis to this size (rows beyond n
+    are zero-id filler marked invalid).  Default: no padding (capacity=n).
+    ``valid``: (capacity,) liveness mask — pass the engine's mask when
+    rebuilding a churned slab in place so dead slots STAY dead; default
+    marks exactly the first n rows live.
+
+    Pure and traceable — the engine jits it so a model refresh is one
+    dispatch.  O(cap m_I k) once per (corpus, model), amortized over every
+    subsequent query.
+    """
+    assert cfg.interaction == "dplr", "corpus precompute requires DPLR"
+    item_ids = jnp.asarray(item_ids)
+    n = item_ids.shape[0]
+    if capacity is not None:
+        if capacity < n:
+            raise ValueError(f"capacity={capacity} < corpus size n={n}")
+        pad = capacity - n
+        if pad:
+            item_ids = jnp.pad(item_ids, ((0, pad), (0, 0)))
+            item_weights = jnp.pad(jnp.asarray(item_weights),
+                                   ((0, pad), (0, 0)))
+    cap = item_ids.shape[0]
+    if valid is None:
+        valid = jnp.arange(cap) < n
+    Q_I, t_I, lin_I = corpus_rows(params, cfg, item_ids, item_weights,
+                                  take_fn=take_fn)
+    return ItemCorpusCache(Q_I=Q_I, t_I=t_I, lin_I=lin_I,
+                           valid=jnp.asarray(valid))

@@ -1,57 +1,117 @@
 """Batched corpus-cached ranking engine (the serving hot path).
 
-``CorpusRankingEngine`` owns a static candidate corpus and a model snapshot,
-and answers ``(Bq queries x n candidates)`` scoring in ONE jitted dispatch:
-per query only the context cache (P_C, s_C, lin_C) is computed — O(rho m_C k)
-— then every candidate costs O(rho k) against the precomputed item cache
-(``repro.serving.corpus``).  Compare Algorithm 1's per-query O(rho m_I k +
-m_I k) per candidate (gather + project), and the dense FwFM's O(m_I^2 k).
+``CorpusRankingEngine`` owns a MUTABLE candidate corpus and a model
+snapshot, and answers ``(Bq queries x capacity candidates)`` scoring in ONE
+jitted dispatch: per query only the context cache (P_C, s_C, lin_C) is
+computed — O(rho m_C k) — then every candidate costs O(rho k) against the
+precomputed item cache (``repro.serving.corpus``).  Compare Algorithm 1's
+per-query O(rho m_I k + m_I k) per candidate (gather + project), and the
+dense FwFM's O(m_I^2 k).
+
+Mutable corpus (capacity-padded slab + validity mask)
+-----------------------------------------------------
+The deployed corpus churns continuously (ads enter/leave the marketplace,
+Section 5.3), so the corpus lives in a slab padded to a power-of-two
+``capacity`` with a ``valid`` mask and a free-list:
+
+  * ``add_items`` / ``update_items`` / ``remove_items`` write only the
+    touched slot rows — one small jitted scatter dispatch of O(Δn rho k)
+    work (Δn bucketed to a power of two, out-of-range filler indices
+    dropped), never a rebuild;
+  * every jitted shape is a function of ``capacity`` alone, so arbitrary
+    churn causes ZERO retraces; masked scoring pins dead slots to ``-inf``
+    so they can never win a top-K slot;
+  * slot assignments are stable: returned corpus indices keep meaning the
+    same item across churn AND across model refreshes (``refresh`` rebuilds
+    every slab row in place);
+  * when the free-list runs dry the slab doubles (amortized O(1) per add);
+    doubling is the only shape change and therefore the only operation
+    after which the scorer re-traces — once per doubling.
 
 Model refresh (the sliding-window retrain deployment of Section 5.3) swaps
 the parameter arrays and rebuilds the corpus cache WITHOUT retracing the
 jitted scorer: shapes are refresh-invariant, so the swap is two dispatches
 (cache rebuild + next score) — no recompilation stall in the query loop.
 ``maybe_refresh`` polls a ``CheckpointManager`` and performs the swap when a
-newer step lands, which is the invalidation hook ``launch/serve.py`` uses.
+newer step lands, which is the invalidation hook ``launch/serve.py`` uses;
+it tracks the last *polled* step signature so a corrupt newest checkpoint
+(restore falls back to an older valid step) costs one restore attempt
+total, not a re-restore + cache rebuild on every poll — while a later
+re-save of that step number is still picked up.
 
 Scoring backends:
   * jnp (default)  — fused broadcast form, XLA-compiled; also serves top-K
     via ``jax.lax.top_k`` so only (Bq, K) leaves the scorer.
   * Pallas         — ``kernels.ops.dplr_corpus_score``: one HBM pass over
-    (n, rho, k) with an optional in-kernel running top-K (interpret mode on
-    CPU, Mosaic on TPU).
+    (capacity, rho, k) with an optional in-kernel running top-K that takes
+    the validity mask into the merge (interpret mode on CPU, Mosaic on
+    TPU).
 """
 from __future__ import annotations
 
-import functools
+import heapq
+
+import numpy as np
 
 import jax
 import jax.numpy as jnp
 
 from repro.core import ranking as rk
 from repro.core.dplr import DPLRParams
-from repro.serving.corpus import ItemCorpusCache, build_corpus_cache
+from repro.serving.corpus import (
+    NEG_INF,
+    ItemCorpusCache,
+    build_corpus_cache,
+    corpus_rows,
+    next_pow2,
+)
 
 
 class CorpusRankingEngine:
-    """Scores a static item corpus for batches of query contexts."""
+    """Scores a mutable, capacity-padded item corpus for batches of query
+    contexts."""
 
     def __init__(self, cfg, item_ids, item_weights=None, *,
+                 capacity: int | None = None,
                  use_pallas_kernel: bool = False, block_n: int = 2048):
         if cfg.interaction != "dplr":
             raise ValueError("CorpusRankingEngine requires interaction='dplr'")
         self.cfg = cfg
-        self.item_ids = jnp.asarray(item_ids)
-        self.item_weights = (jnp.ones(self.item_ids.shape, jnp.float32)
-                             if item_weights is None
-                             else jnp.asarray(item_weights))
-        self.n_items = int(self.item_ids.shape[0])
+        self._wdtype = cfg.dtype   # weights follow the serving dtype — a
+        # stray f32 default here silently promotes the whole bf16 path.
+
+        ids = np.asarray(item_ids, np.int32)
+        n0 = int(ids.shape[0])
+        w = (np.ones(ids.shape, np.float32) if item_weights is None
+             else np.asarray(item_weights, np.float32))
+        self.capacity = next_pow2(max(n0, 1)) if capacity is None \
+            else int(capacity)
+        if self.capacity < n0:
+            raise ValueError(f"capacity={self.capacity} < initial corpus "
+                             f"size n={n0}")
+        if self.capacity & (self.capacity - 1):
+            raise ValueError(f"capacity must be a power of two, "
+                             f"got {self.capacity}")
+
+        # host-side slab (source of truth for ids/weights/liveness); the
+        # device-side cache mirrors it through jitted writes.
+        self._slab_ids = np.zeros((self.capacity, ids.shape[1]), np.int32)
+        self._slab_w = np.ones((self.capacity, ids.shape[1]), np.float32)
+        self._slab_ids[:n0] = ids
+        self._slab_w[:n0] = w
+        self._valid_np = np.zeros(self.capacity, bool)
+        self._valid_np[:n0] = True
+        # free slots as a min-heap: lowest-numbered slot handed out first,
+        # O(log cap) per op (a sort per removal would be O(cap log cap))
+        self._free = list(range(n0, self.capacity))
+
         self.use_pallas_kernel = use_pallas_kernel
         self.block_n = block_n
 
         self.params: dict | None = None
         self.cache: ItemCorpusCache | None = None
         self.model_step: int | None = None
+        self._last_polled_sig: tuple | None = None
         self.refresh_count = 0
         self.trace_count = 0      # incremented only when the scorer retraces
 
@@ -59,12 +119,59 @@ class CorpusRankingEngine:
         self._score = jax.jit(self._score_impl)
         self._topk = jax.jit(self._topk_impl, static_argnames=("K",))
         self._context = jax.jit(self._context_impl)
+        self._kernel_score = jax.jit(self._kernel_score_impl,
+                                     static_argnames=("K",))
+        self._rows = jax.jit(self._rows_impl)
+        self._write = jax.jit(self._write_impl)
+        self._drop = jax.jit(self._drop_impl)
+
+    # -- corpus introspection -----------------------------------------------
+
+    @property
+    def n_items(self) -> int:
+        """Live (valid) item count — NOT the slab capacity.  O(1): the
+        free-list holds exactly the dead slots (this sits on the per-query
+        top-K range check)."""
+        return self.capacity - len(self._free)
+
+    @property
+    def valid_slots(self) -> np.ndarray:
+        """(n_items,) ascending corpus indices of the live slots."""
+        return np.flatnonzero(self._valid_np)
+
+    def is_live(self, indices) -> np.ndarray:
+        """Elementwise liveness of corpus slot indices (out-of-range =>
+        False) — the public check callers should use on returned top-K
+        indices across churn."""
+        idx = np.asarray(indices, np.int64).reshape(-1)
+        ok = (0 <= idx) & (idx < self.capacity)
+        out = np.zeros(idx.shape, bool)
+        out[ok] = self._valid_np[idx[ok]]
+        return out.reshape(np.shape(indices))
 
     # -- jitted bodies ------------------------------------------------------
 
-    def _build_impl(self, params):
-        return build_corpus_cache(params, self.cfg, self.item_ids,
-                                  self.item_weights)
+    def _build_impl(self, params, slab_ids, slab_w, valid):
+        return build_corpus_cache(params, self.cfg, slab_ids, slab_w,
+                                  valid=valid)
+
+    def _rows_impl(self, params, ids, w):
+        return corpus_rows(params, self.cfg, ids, w)
+
+    def _write_impl(self, cache, Q, t, lin, idx):
+        """Scatter Δn precomputed rows into the slab and mark them live.
+        ``idx`` is bucket-padded with ``capacity`` (out of range => dropped),
+        so one trace serves every Δn in the bucket."""
+        return ItemCorpusCache(
+            Q_I=cache.Q_I.at[idx].set(Q, mode="drop"),
+            t_I=cache.t_I.at[idx].set(t, mode="drop"),
+            lin_I=cache.lin_I.at[idx].set(lin, mode="drop"),
+            valid=cache.valid.at[idx].set(True, mode="drop"),
+        )
+
+    def _drop_impl(self, cache, idx):
+        return cache._replace(valid=cache.valid.at[idx].set(False,
+                                                            mode="drop"))
 
     def _context_impl(self, params, ctx_ids, ctx_w):
         """Per-query context cache: P_C (Bq, rho, k), s_C (Bq,), lin_C (Bq,)."""
@@ -79,23 +186,155 @@ class CorpusRankingEngine:
         P_C, s_C, lin_C = self._context_impl(params, ctx_ids, ctx_w)
         # direct fused form — same reduction order as rank_items, so the
         # corpus-cached path is float32-epsilon-close to the per-query path.
-        P = P_C[:, None] + cache.Q_I[None]                 # (Bq, n, rho, k)
+        P = P_C[:, None] + cache.Q_I[None]                 # (Bq, cap, rho, k)
         term_e = jnp.einsum("qnrk,r->qn", P * P, params["e"])
         pw = 0.5 * (s_C[:, None] + cache.t_I[None, :] + term_e)
-        return params["bias"] + lin_C[:, None] + cache.lin_I[None, :] + pw
+        s = params["bias"] + lin_C[:, None] + cache.lin_I[None, :] + pw
+        # dead slots pinned to -inf: they can never win a top-K slot, and
+        # the fill matches the Pallas kernel's padding sentinel bit-for-bit.
+        return jnp.where(cache.valid[None, :], s, NEG_INF)
 
     def _topk_impl(self, params, cache, ctx_ids, ctx_w, *, K):
         scores = self._score_impl(params, cache, ctx_ids, ctx_w)
         return jax.lax.top_k(scores, K)
 
+    def _kernel_score_impl(self, params, cache, ctx_ids, ctx_w, *, K=None):
+        """Pallas-backed scorer entry point — jitted at THIS level so
+        ``trace_count`` tracks kernel-path retraces exactly like the jnp
+        path (a retrace here <=> a shape/static change for the kernel)."""
+        self.trace_count += 1     # python side effect: runs at trace time only
+        from repro.kernels import ops as kops
+        P_C, s_C, lin_C = self._context_impl(params, ctx_ids, ctx_w)
+        a_C = params["bias"] + lin_C + 0.5 * s_C
+        return kops.dplr_corpus_score(cache.Q_I, cache.a_I, params["e"],
+                                      P_C, a_C, valid=cache.valid, topk=K,
+                                      block_n=self.block_n)
+
+    # -- corpus mutation (the churn path) -----------------------------------
+
+    def _pad_slots(self, slots):
+        """Pad a Δn slot vector to the next power-of-two bucket so the
+        jitted scatter traces O(log capacity) times total, not once per
+        Δn.  Filler entries get slot index ``capacity`` => dropped."""
+        pad = next_pow2(max(len(slots), 1)) - len(slots)
+        if pad:
+            slots = np.concatenate([slots,
+                                    np.full(pad, self.capacity, np.int32)])
+        return slots
+
+    def _bucket(self, slots, ids, w):
+        """Bucket-pad a Δn row write (slots via ``_pad_slots``; filler rows
+        are zero-id weight-one placeholders whose scatter is dropped)."""
+        dn = len(slots)
+        slots = self._pad_slots(slots)
+        pad = len(slots) - dn
+        if pad:
+            ids = np.concatenate([ids, np.zeros((pad, ids.shape[1]),
+                                                np.int32)])
+            w = np.concatenate([w, np.ones((pad, w.shape[1]), np.float32)])
+        return slots, ids, w
+
+    def _scatter_rows(self, slots, ids, w):
+        self._slab_ids[slots] = ids
+        self._slab_w[slots] = w
+        self._valid_np[slots] = True
+        slots_p, ids_p, w_p = self._bucket(slots, ids, w)
+        Q, t, lin = self._rows(self.params, jnp.asarray(ids_p),
+                               jnp.asarray(w_p, self._wdtype))
+        self.cache = self._write(self.cache, Q, t, lin,
+                                 jnp.asarray(slots_p))
+
+    def _payload(self, ids, weights, op, n_expected=None):
+        """Normalize + validate a (Δn, n_item_slots) ids/weights payload;
+        a short payload must raise, not silently numpy-broadcast one row
+        into every targeted slot."""
+        ids = np.atleast_2d(np.asarray(ids, np.int32))
+        if n_expected is not None and ids.shape[0] != n_expected:
+            raise ValueError(
+                f"{op}: {n_expected} slots but {ids.shape[0]} item rows")
+        w = (np.ones(ids.shape, np.float32) if weights is None
+             else np.atleast_2d(np.asarray(weights, np.float32)))
+        if w.shape != ids.shape:
+            raise ValueError(f"{op}: weights shape {w.shape} != ids shape "
+                             f"{ids.shape}")
+        return ids, w
+
+    def add_items(self, ids, weights=None) -> np.ndarray:
+        """Insert Δn items; returns their (Δn,) corpus slot indices (stable
+        until removed).  O(Δn rho k) — one row-compute + one scatter
+        dispatch; doubles the slab first if the free-list runs dry."""
+        self._require_ready()
+        ids, w = self._payload(ids, weights, "add_items")
+        dn = ids.shape[0]
+        if dn > len(self._free):
+            self._grow(dn - len(self._free))
+        slots = np.asarray([heapq.heappop(self._free) for _ in range(dn)],
+                           np.int32)
+        self._scatter_rows(slots, ids, w)
+        return slots
+
+    def update_items(self, indices, ids, weights=None) -> None:
+        """Rewrite the items at the given live slots in place (same cost
+        shape as ``add_items``); slot assignments are unchanged."""
+        self._require_ready()
+        slots = np.asarray(indices, np.int32).reshape(-1)
+        self._check_live(slots, "update_items")
+        ids, w = self._payload(ids, weights, "update_items",
+                               n_expected=slots.size)
+        self._scatter_rows(slots, ids, w)
+
+    def remove_items(self, indices) -> None:
+        """Invalidate the given live slots (their rows become free; masked
+        scoring pins them to -inf immediately).  One scatter dispatch."""
+        self._require_ready()
+        slots = np.asarray(indices, np.int32).reshape(-1)
+        self._check_live(slots, "remove_items")
+        self._valid_np[slots] = False
+        for s in slots:
+            heapq.heappush(self._free, int(s))
+        self.cache = self._drop(self.cache, jnp.asarray(self._pad_slots(slots)))
+
+    def _check_live(self, slots, op):
+        if len(np.unique(slots)) != len(slots):
+            raise ValueError(f"{op}: duplicate slot indices")
+        if slots.size and not (
+                (0 <= slots).all() and (slots < self.capacity).all()
+                and self._valid_np[slots].all()):
+            raise ValueError(f"{op}: slot indices must be live corpus slots")
+
+    def _grow(self, min_extra: int) -> None:
+        """Double the slab (at least) so >= min_extra slots are free.  The
+        ONLY shape-changing operation: the next score/build traces once for
+        the new capacity, amortized O(1) per added item."""
+        old = self.capacity
+        new = max(old * 2, next_pow2(old + min_extra))
+        extra = new - old
+        self._slab_ids = np.pad(self._slab_ids, ((0, extra), (0, 0)))
+        self._slab_w = np.pad(self._slab_w, ((0, extra), (0, 0)),
+                              constant_values=1.0)
+        self._valid_np = np.pad(self._valid_np, (0, extra))
+        # every new slot is > every existing free slot, so a plain extend
+        # preserves the min-heap invariant
+        self._free.extend(range(old, new))
+        self.capacity = new
+        if self.cache is not None:
+            self.cache = ItemCorpusCache(
+                Q_I=jnp.pad(self.cache.Q_I, ((0, extra), (0, 0), (0, 0))),
+                t_I=jnp.pad(self.cache.t_I, (0, extra)),
+                lin_I=jnp.pad(self.cache.lin_I, (0, extra)),
+                valid=jnp.pad(self.cache.valid, (0, extra)),
+            )
+
     # -- corpus/model lifecycle --------------------------------------------
 
     def refresh(self, params: dict, step: int | None = None) -> None:
-        """Install a model snapshot: rebuild the item-corpus cache (one
-        jitted dispatch), keep the scorer's jit cache intact."""
+        """Install a model snapshot: rebuild every slab row IN PLACE (one
+        jitted dispatch, slot assignments preserved), keep the scorer's jit
+        cache intact."""
         self.params = params
-        self.cache = self._build(params)
-        self._a_I = self.cache.a_I     # fused addend for the kernel path
+        self.cache = self._build(params, jnp.asarray(self._slab_ids),
+                                 jnp.asarray(self._slab_w, self._wdtype),
+                                 jnp.asarray(self._valid_np))
         self.model_step = step
         self.refresh_count += 1
 
@@ -103,16 +342,31 @@ class CorpusRankingEngine:
         """CheckpointManager invalidation hook: if a newer checkpoint step
         exists, restore it and rebuild the corpus cache.  ``template`` is
         the pytree structure passed to ``manager.restore``; ``select``
-        extracts the model params from the restored tree."""
+        extracts the model params from the restored tree.
+
+        Poison-safe: the newest step's SIGNATURE (step + manifest mtime) is
+        recorded BEFORE restoring, and a restore that falls back to an
+        older/current valid step (corrupt newest checkpoint) is a no-op —
+        so a poisoned checkpoint costs one restore attempt total, not a
+        restore + full cache rebuild per poll, while a later RE-SAVE of
+        the same step number (new mtime) is still picked up.
+        """
         # cheap name-only poll: no checksum pass over retained checkpoints
         # in the serving loop; restore() below validates what it loads.
         step = manager.latest_step(validate=False)
         if step is None or step == self.model_step:
             return False
-        restored, step = manager.restore(template)
+        sig = manager.step_signature(step)
+        if sig == self._last_polled_sig:
+            return False
+        self._last_polled_sig = sig
+        restored, rstep = manager.restore(template)
         if restored is None:
             return False
-        self.refresh(select(restored), step=step)
+        if (self.model_step is not None and rstep is not None
+                and rstep <= self.model_step):
+            return False      # fell back to an already-installed snapshot
+        self.refresh(select(restored), step=rstep)
         return True
 
     # -- public scoring API -------------------------------------------------
@@ -123,38 +377,32 @@ class CorpusRankingEngine:
 
     def _ctx_arrays(self, context_ids, context_weights):
         ids = jnp.asarray(context_ids)
-        w = (jnp.ones(ids.shape, jnp.float32) if context_weights is None
-             else jnp.asarray(context_weights))
+        w = (jnp.ones(ids.shape, self._wdtype) if context_weights is None
+             else jnp.asarray(context_weights, self._wdtype))
         return ids, w
 
     def score(self, context_ids, context_weights=None) -> jax.Array:
-        """(Bq, n_items) scores for a batch of query contexts."""
+        """(Bq, capacity) scores for a batch of query contexts; dead slots
+        score exactly ``NEG_INF``."""
         self._require_ready()
         ids, w = self._ctx_arrays(context_ids, context_weights)
         if self.use_pallas_kernel:
-            from repro.kernels import ops as kops
-            P_C, s_C, lin_C = self._context(self.params, ids, w)
-            a_C = self.params["bias"] + lin_C + 0.5 * s_C
-            return kops.dplr_corpus_score(
-                self.cache.Q_I, self._a_I, self.params["e"], P_C, a_C,
-                block_n=self.block_n)
+            return self._kernel_score(self.params, self.cache, ids, w)
         return self._score(self.params, self.cache, ids, w)
 
     def topk(self, context_ids, K: int, context_weights=None):
-        """((Bq, K) scores, (Bq, K) int32 corpus indices) — only the winners
-        leave the scorer, not the (Bq, n) logit matrix."""
+        """((Bq, K) scores, (Bq, K) int32 corpus slot indices) — only the
+        winners leave the scorer, not the (Bq, capacity) logit matrix.
+        Masked: a dead slot can never be returned (K is checked against the
+        LIVE item count, not the slab capacity)."""
         self._require_ready()
         if not 0 < K <= self.n_items:
             raise ValueError(
-                f"topk K={K} out of range for corpus of {self.n_items} items")
+                f"topk K={K} out of range for corpus of {self.n_items} "
+                f"live items")
         ids, w = self._ctx_arrays(context_ids, context_weights)
         if self.use_pallas_kernel:
-            from repro.kernels import ops as kops
-            P_C, s_C, lin_C = self._context(self.params, ids, w)
-            a_C = self.params["bias"] + lin_C + 0.5 * s_C
-            return kops.dplr_corpus_score(
-                self.cache.Q_I, self._a_I, self.params["e"], P_C, a_C,
-                topk=K, block_n=self.block_n)
+            return self._kernel_score(self.params, self.cache, ids, w, K=K)
         return self._topk(self.params, self.cache, ids, w, K=K)
 
     def score_query(self, query: dict) -> jax.Array:

@@ -1,6 +1,9 @@
 """Corpus-precomputation serving engine + dplr_corpus_score kernel:
 numeric parity (atol 1e-5) against the per-query Algorithm 1 path, fused
-top-K vs argsort, checkpoint-refresh without scorer retrace."""
+top-K vs argsort, checkpoint-refresh without scorer retrace, and the
+mutable-corpus churn suite (add/remove/update vs from-scratch rebuild
+oracle — bit-exact; masked top-K never surfaces a dead slot; zero scorer
+retraces across churn + refresh; corrupt-newest-checkpoint regression)."""
 import numpy as np
 import pytest
 
@@ -69,8 +72,12 @@ def test_engine_score_equals_rank_items(Bq):
     engine = CorpusRankingEngine(cfg, q["item_ids"][0], q["item_weights"][0])
     engine.refresh(params, step=0)
     got = engine.score(qb["context_ids"], qb["context_weights"])
-    assert got.shape == (Bq, 37)
-    np.testing.assert_allclose(got, want, atol=1e-5)
+    # slab rounds 37 items up to a power-of-two capacity; padding slots are
+    # dead and pinned to exactly the mask sentinel
+    assert engine.capacity == 64 and engine.n_items == 37
+    assert got.shape == (Bq, 64)
+    np.testing.assert_allclose(got[:, :37], want, atol=1e-5)
+    assert np.all(np.asarray(got)[:, 37:] == -1e30)
 
 
 @pytest.mark.parametrize("Bq", [1, 2])
@@ -83,7 +90,8 @@ def test_engine_pallas_kernel_equals_rank_items(Bq):
                                  use_pallas_kernel=True, block_n=16)
     engine.refresh(params)
     got = engine.score(qb["context_ids"], qb["context_weights"])
-    np.testing.assert_allclose(got, want, atol=1e-5)
+    np.testing.assert_allclose(got[:, :37], want, atol=1e-5)
+    assert np.all(np.asarray(got)[:, 37:] == -1e30)
 
 
 def test_engine_topk_matches_full_scores():
@@ -91,7 +99,8 @@ def test_engine_topk_matches_full_scores():
     qb = _batched_query(data, q, 2, 37)
     engine = CorpusRankingEngine(cfg, q["item_ids"][0], q["item_weights"][0])
     engine.refresh(params)
-    full = np.asarray(engine.score(qb["context_ids"], qb["context_weights"]))
+    full = np.asarray(engine.score(qb["context_ids"],
+                                   qb["context_weights"]))[:, :37]
     vals, idx = engine.topk(qb["context_ids"], 5, qb["context_weights"])
     want_idx = np.argsort(-full, axis=1)[:, :5]
     np.testing.assert_array_equal(np.asarray(idx), want_idx)
@@ -186,6 +195,282 @@ def test_engine_checkpoint_refresh_no_retrace(tmp_path):
     # idempotent: same step -> no refresh
     assert not engine.maybe_refresh(mgr, {"params": params},
                                     select=lambda t: t["params"])
+
+
+# ---------------------------------------------------------------------------
+# Mutable corpus: churn parity vs from-scratch rebuild oracle (bit-exact),
+# masked top-K, zero retraces, slab doubling
+# ---------------------------------------------------------------------------
+
+def _churned_engine(cfg, params, data, q, **kw):
+    """Engine after a representative add/remove/update sequence."""
+    engine = CorpusRankingEngine(cfg, q["item_ids"][0], q["item_weights"][0],
+                                 capacity=32, **kw)
+    engine.refresh(params, step=0)
+    added = engine.add_items(data.ranking_query(7, 90)["item_ids"][0])
+    engine.remove_items([1, 3, 5, int(added[0]), int(added[3])])
+    upd = data.ranking_query(4, 91)
+    engine.update_items([0, 2, int(added[1]), int(added[6])],
+                        upd["item_ids"][0], upd["item_weights"][0])
+    engine.add_items(data.ranking_query(3, 92)["item_ids"][0])
+    return engine
+
+
+def _rebuild_oracle(cfg, params, engine, **kw):
+    """From-scratch engine over exactly the live items, in slot order."""
+    live = engine.valid_slots
+    oracle = CorpusRankingEngine(cfg, engine._slab_ids[live],
+                                 engine._slab_w[live],
+                                 capacity=engine.capacity, **kw)
+    oracle.refresh(params, step=0)
+    return live, oracle
+
+
+@pytest.mark.parametrize("use_pallas", [False, True])
+def test_churn_matches_rebuild_oracle_bit_exact(use_pallas):
+    _, cfg, params, data, q = _setup(n=20)
+    kw = dict(use_pallas_kernel=use_pallas, block_n=8) if use_pallas else {}
+    engine = _churned_engine(cfg, params, data, q, **kw)
+    live, oracle = _rebuild_oracle(cfg, params, engine, **kw)
+    got = np.asarray(engine.score(q["context_ids"], q["context_weights"]))
+    want = np.asarray(oracle.score(q["context_ids"], q["context_weights"]))
+    # delta-scattered rows == from-scratch rows, BIT-exact (same jitted row
+    # math, corpus.corpus_rows, reached through a different batch shape)
+    np.testing.assert_array_equal(got[:, live], want[:, :len(live)])
+    # dead slots are pinned to exactly the mask sentinel
+    dead = ~engine._valid_np
+    assert np.all(got[:, dead] == -1e30)
+
+
+@pytest.mark.parametrize("use_pallas", [False, True])
+def test_masked_topk_never_returns_dead_slot(use_pallas):
+    _, cfg, params, data, q = _setup(n=20)
+    kw = dict(use_pallas_kernel=use_pallas, block_n=8) if use_pallas else {}
+    engine = _churned_engine(cfg, params, data, q, **kw)
+    live, oracle = _rebuild_oracle(cfg, params, engine, **kw)
+    K = engine.n_items          # every live item — the hardest mask case
+    vals, idx = engine.topk(q["context_ids"], K, q["context_weights"])
+    idx = np.asarray(idx)
+    assert engine._valid_np[idx.ravel()].all(), "top-K surfaced a dead slot"
+    # matches the oracle's top-K item-for-item, bit-exact values
+    ov, oi = oracle.topk(q["context_ids"], K, q["context_weights"])
+    np.testing.assert_array_equal(np.asarray(vals), np.asarray(ov))
+    for row in idx:                 # each row is a permutation of live
+        np.testing.assert_array_equal(np.sort(row), live)
+    # K beyond the live count must be refused (would have to surface a
+    # dead slot)
+    with pytest.raises(ValueError):
+        engine.topk(q["context_ids"], engine.n_items + 1,
+                    q["context_weights"])
+
+
+@pytest.mark.parametrize("use_pallas", [False, True])
+def test_slab_doubling_preserves_slots_and_parity(use_pallas):
+    _, cfg, params, data, q = _setup(n=20)
+    kw = dict(use_pallas_kernel=use_pallas, block_n=8) if use_pallas else {}
+    engine = CorpusRankingEngine(cfg, q["item_ids"][0], q["item_weights"][0],
+                                 capacity=32, **kw)
+    engine.refresh(params, step=0)
+    s_before = np.asarray(engine.score(q["context_ids"],
+                                       q["context_weights"]))
+    slots = engine.add_items(data.ranking_query(20, 77)["item_ids"][0])
+    assert engine.capacity == 64 and engine.n_items == 40
+    assert list(slots[:12]) == list(range(20, 32))   # filled the old slab
+    got = np.asarray(engine.score(q["context_ids"], q["context_weights"]))
+    # pre-existing slots kept their rows bit-for-bit across the doubling
+    np.testing.assert_array_equal(got[:, :20], s_before[:, :20])
+    live, oracle = _rebuild_oracle(cfg, params, engine, **kw)
+    want = np.asarray(oracle.score(q["context_ids"], q["context_weights"]))
+    np.testing.assert_array_equal(got[:, live], want[:, :len(live)])
+    vals, idx = engine.topk(q["context_ids"], 40, q["context_weights"])
+    assert engine._valid_np[np.asarray(idx).ravel()].all()
+
+
+def test_trace_count_flat_across_churn_and_refresh(tmp_path):
+    from repro.checkpoint import CheckpointManager
+
+    _, cfg, params, data, q = _setup(n=20)
+    engine = CorpusRankingEngine(cfg, q["item_ids"][0], q["item_weights"][0],
+                                 capacity=64)
+    engine.refresh(params, step=0)
+    engine.score(q["context_ids"], q["context_weights"])
+    assert engine.trace_count == 1
+    rng = np.random.default_rng(0)
+    for s in range(30):
+        kind = s % 3
+        if kind == 0 and engine.n_items + 4 <= engine.capacity:
+            engine.add_items(data.ranking_query(4, 200 + s)["item_ids"][0])
+        elif kind == 1 and engine.n_items > 10:
+            engine.remove_items(rng.choice(engine.valid_slots, 3,
+                                           replace=False))
+        else:
+            upd = data.ranking_query(2, 300 + s)
+            engine.update_items(rng.choice(engine.valid_slots, 2,
+                                           replace=False),
+                                upd["item_ids"][0], upd["item_weights"][0])
+        engine.score(q["context_ids"], q["context_weights"])
+    # mid-stream model refresh: in-place rebuild, slots preserved
+    mgr = CheckpointManager(str(tmp_path))
+    bumped = dict(params)
+    bumped["bias"] = params["bias"] + 1.0
+    mgr.save({"params": bumped}, step=1, blocking=True)
+    assert engine.maybe_refresh(mgr, {"params": params},
+                                select=lambda t: t["params"])
+    engine.score(q["context_ids"], q["context_weights"])
+    assert engine.trace_count == 1, \
+        f"scorer retraced under churn/refresh ({engine.trace_count})"
+
+
+def test_mutation_argument_validation():
+    _, cfg, params, data, q = _setup(n=20)
+    engine = CorpusRankingEngine(cfg, q["item_ids"][0], q["item_weights"][0],
+                                 capacity=32)
+    with pytest.raises(RuntimeError):     # no model installed yet
+        engine.add_items(q["item_ids"][0][:1])
+    engine.refresh(params)
+    with pytest.raises(ValueError):       # slot 25 was never filled
+        engine.remove_items([25])
+    engine.remove_items([4])
+    with pytest.raises(ValueError):       # already dead
+        engine.update_items([4], q["item_ids"][0][:1])
+    with pytest.raises(ValueError):       # duplicate slots
+        engine.remove_items([2, 2])
+    with pytest.raises(ValueError):       # 2 slots, 1 payload row: would
+        engine.update_items([1, 2], q["item_ids"][0][:1])  # broadcast
+    with pytest.raises(ValueError):       # 2 id rows, 1 weight row
+        engine.update_items([1, 2], q["item_ids"][0][:2],
+                            q["item_weights"][0][:1])
+    with pytest.raises(ValueError):       # same for add_items
+        engine.add_items(q["item_ids"][0][:2], q["item_weights"][0][:1])
+
+
+# ---------------------------------------------------------------------------
+# Masked kernel vs oracle (standalone shapes, random mask)
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("topk", [None, 7])
+def test_corpus_score_kernel_masked_vs_ref(rng, topk):
+    n, rho, k, Bq, block_n = 100, 3, 8, 2, 32
+    Q = jnp.asarray(rng.standard_normal((n, rho, k), dtype=np.float32))
+    a_I = jnp.asarray(rng.standard_normal(n).astype(np.float32))
+    e = jnp.asarray(rng.standard_normal(rho).astype(np.float32))
+    PC = jnp.asarray(rng.standard_normal((Bq, rho, k), dtype=np.float32))
+    a_C = jnp.asarray(rng.standard_normal(Bq).astype(np.float32))
+    valid = jnp.asarray(rng.random(n) > 0.4)
+    if topk is None:
+        out = ops.dplr_corpus_score(Q, a_I, e, PC, a_C, valid,
+                                    block_n=block_n)
+        want = ref.dplr_corpus_score_ref(Q, a_I, e, PC, a_C, valid)
+        np.testing.assert_allclose(out, want, atol=1e-5, rtol=1e-5)
+        assert np.all(np.asarray(out)[:, ~np.asarray(valid)] == -1e30)
+    else:
+        vals, idx = ops.dplr_corpus_score(Q, a_I, e, PC, a_C, valid,
+                                          topk=topk, block_n=block_n)
+        assert np.asarray(valid)[np.asarray(idx).ravel()].all()
+        want_v, want_i = ref.dplr_corpus_topk_ref(Q, a_I, e, PC, a_C, topk,
+                                                  valid)
+        np.testing.assert_allclose(vals, want_v, atol=1e-5, rtol=1e-5)
+        np.testing.assert_array_equal(np.asarray(idx), np.asarray(want_i))
+
+
+# ---------------------------------------------------------------------------
+# maybe_refresh regression: a corrupt NEWEST checkpoint must cost one
+# restore attempt total, not a restore + full cache rebuild per poll
+# ---------------------------------------------------------------------------
+
+def test_maybe_refresh_corrupt_newest_no_rebuild_storm(tmp_path):
+    import os
+    from repro.checkpoint import CheckpointManager
+
+    _, cfg, params, data, q = _setup(n=20)
+    engine = CorpusRankingEngine(cfg, q["item_ids"][0], q["item_weights"][0])
+    mgr = CheckpointManager(str(tmp_path))
+    sel = lambda t: t["params"]
+    mgr.save({"params": params}, step=1, blocking=True)
+    assert engine.maybe_refresh(mgr, {"params": params}, select=sel)
+    assert engine.model_step == 1 and engine.refresh_count == 1
+
+    # a newer checkpoint lands CORRUPT: latest_step(validate=False) sees 2
+    # but restore() falls back to valid step 1
+    bumped = dict(params)
+    bumped["bias"] = params["bias"] + 1.0
+    mgr.save({"params": bumped}, step=2, blocking=True)
+    newest = os.path.join(str(tmp_path), "step_00000002")
+    with open(os.path.join(newest, "arrays.npz"), "wb") as f:
+        f.write(b"garbage")
+
+    restores = 0
+    orig_restore = mgr.restore
+
+    def counting_restore(*a, **k):
+        nonlocal restores
+        restores += 1
+        return orig_restore(*a, **k)
+
+    mgr.restore = counting_restore
+    for _ in range(5):
+        assert not engine.maybe_refresh(mgr, {"params": params}, select=sel)
+    assert restores == 1, f"rebuild storm: {restores} restores for 5 polls"
+    assert engine.refresh_count == 1 and engine.model_step == 1
+
+    # a restarted trainer RE-SAVES the same step number, now valid: the
+    # new manifest mtime changes the step signature, so it must land
+    mgr.save({"params": bumped}, step=2, blocking=True)
+    assert engine.maybe_refresh(mgr, {"params": params}, select=sel)
+    assert engine.model_step == 2 and engine.refresh_count == 2
+
+    # a later VALID step still lands normally
+    mgr.save({"params": bumped}, step=3, blocking=True)
+    assert engine.maybe_refresh(mgr, {"params": params}, select=sel)
+    assert engine.model_step == 3 and engine.refresh_count == 3
+
+
+def test_maybe_refresh_corrupt_newest_does_not_block_lower_valid_step(
+        tmp_path):
+    """Corrupt step 7 persists on disk while a restarted trainer lands a
+    VALID step 6: the poll signature (which includes the checkpoint
+    directory mtime) must change, so step 6 is installed rather than the
+    engine serving stale params forever."""
+    import os
+    from repro.checkpoint import CheckpointManager
+
+    _, cfg, params, data, q = _setup(n=16)
+    engine = CorpusRankingEngine(cfg, q["item_ids"][0], q["item_weights"][0])
+    mgr = CheckpointManager(str(tmp_path), keep=5)
+    sel = lambda t: t["params"]
+    mgr.save({"params": params}, step=5, blocking=True)
+    assert engine.maybe_refresh(mgr, {"params": params}, select=sel)
+
+    bumped = dict(params)
+    bumped["bias"] = params["bias"] + 1.0
+    mgr.save({"params": bumped}, step=7, blocking=True)
+    with open(os.path.join(str(tmp_path), "step_00000007", "arrays.npz"),
+              "wb") as f:
+        f.write(b"garbage")
+    assert not engine.maybe_refresh(mgr, {"params": params}, select=sel)
+    assert not engine.maybe_refresh(mgr, {"params": params}, select=sel)
+    assert engine.model_step == 5
+
+    mgr.save({"params": bumped}, step=6, blocking=True)   # valid, < 7
+    assert engine.maybe_refresh(mgr, {"params": params}, select=sel)
+    assert engine.model_step == 6
+
+
+def test_engine_bf16_weights_follow_cfg_dtype():
+    """The satellite dtype fix: default context/item weights must follow
+    cfg.dtype so a bf16 serving path is not silently promoted to f32."""
+    import dataclasses
+    _, cfg, params, data, q = _setup(n=16)
+    cfg16 = dataclasses.replace(cfg, dtype=jnp.bfloat16)
+    p16 = jax.tree.map(
+        lambda a: a.astype(jnp.bfloat16) if a.dtype == jnp.float32 else a,
+        params)
+    engine = CorpusRankingEngine(cfg16, q["item_ids"][0])
+    engine.refresh(p16, step=0)
+    assert engine.cache.Q_I.dtype == jnp.bfloat16
+    s = engine.score(q["context_ids"])
+    assert s.dtype == jnp.bfloat16
+    assert engine._ctx_arrays(q["context_ids"], None)[1].dtype == jnp.bfloat16
 
 
 # ---------------------------------------------------------------------------
