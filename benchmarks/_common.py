@@ -72,6 +72,19 @@ def evaluate_fwfm(params, cfg, data: SyntheticCTR, pruned_mask=None,
     return auc(b["label"], logits), logloss(b["label"], logits)
 
 
+def time_stream(fn, reps: int) -> float:
+    """Mean ms per call of ``fn(r)`` for r in range(reps), after two
+    compile/warmup calls; blocks on every result.  The streaming-workload
+    counterpart of ``time_fn`` (per-rep inputs vary, so jit compiles once
+    and the loop measures steady-state dispatch + compute)."""
+    jax.block_until_ready(fn(0))          # compile + warmup
+    jax.block_until_ready(fn(0))
+    t0 = time.perf_counter()
+    for r in range(reps):
+        jax.block_until_ready(fn(r))
+    return (time.perf_counter() - t0) * 1e3 / reps
+
+
 def time_fn(fn, *args, repeats: int = 30, warmup: int = 3) -> tuple[float, float]:
     """(mean_us, p95_us) per call, blocking on results."""
     for _ in range(warmup):

@@ -1,0 +1,134 @@
+"""Sharded-corpus weak scaling + top-K merge overhead (the PR-3 claim).
+
+The sharded slab's promise is that corpus CAPACITY scales with the mesh
+while per-query cost does not: each of D devices scores its own
+capacity/D slice — O(n rho k / D) FLOPs and bytes per device — and the
+only cross-device step is the merge of D·K top-K candidates, O(D·K)
+traffic regardless of corpus size.
+
+This benchmark measures both on the paper's deployed geometry (63 fields /
+38 item-side, k=16, rho=3), weak-scaling style: devices and capacity grow
+TOGETHER at a fixed capacity-per-shard, so flat latency across rows means
+capacity scaled for free.  Each mesh size runs in a subprocess with
+``XLA_FLAGS=--xla_force_host_platform_device_count=D`` (device count is
+locked at backend init, so it cannot vary in-process); every run also
+checks the merged top-K is BIT-exact vs a single-device engine over the
+same corpus.
+
+Output lines:
+    shard: <D>,<capacity>,<K>,<topk_ms>,<score_ms>,<parity>
+
+Caveat: on this CPU container the D "devices" are host threads sharing
+one socket, so weak scaling here demonstrates flat per-device WORK (and
+exercises the real mesh code path); flat wall-clock needs real devices.
+"""
+from __future__ import annotations
+
+import os
+import re
+import subprocess
+import sys
+
+import numpy as np
+
+REPO = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+
+
+def worker(devices: int, per_shard: int, ks: list[int], reps: int) -> None:
+    import jax
+    import jax.numpy as jnp
+
+    from benchmarks._common import time_stream
+    from repro.core.fields import uniform_layout
+    from repro.data.synthetic_ctr import SyntheticCTR
+    from repro.launch.mesh import make_host_mesh
+    from repro.models.recsys import fwfm
+    from repro.serving import CorpusRankingEngine
+
+    assert jax.device_count() == devices, \
+        f"forced device count failed: {jax.device_count()} != {devices}"
+    capacity = per_shard * devices
+    n = capacity * 3 // 4                 # realistic partially-full slab
+    layout = uniform_layout(25, 38, 1000)
+    cfg = fwfm.FwFMConfig(layout=layout, embed_dim=16, interaction="dplr",
+                          rank=3)
+    params = fwfm.init(jax.random.PRNGKey(0), cfg)
+    data = SyntheticCTR(layout, embed_dim=8, seed=0)
+    corpus = data.ranking_query(n, 0)
+    mesh = make_host_mesh(model=devices)
+
+    eng = CorpusRankingEngine(cfg, corpus["item_ids"][0],
+                              corpus["item_weights"][0],
+                              capacity=capacity, mesh=mesh)
+    eng.refresh(params, step=0)
+    ref = CorpusRankingEngine(cfg, corpus["item_ids"][0],
+                              corpus["item_weights"][0], capacity=capacity)
+    ref.refresh(params, step=0)
+
+    queries = [data.context_query(100 + r) for r in range(reps)]
+    ctxs = [(jnp.asarray(q["context_ids"]), jnp.asarray(q["context_weights"]))
+            for q in queries]
+
+    def score(r):
+        c, w = ctxs[r % reps]
+        return eng.score(c, w)
+
+    score_ms = time_stream(score, reps)
+
+    for K in ks:
+        def topk(r):
+            c, w = ctxs[r % reps]
+            return eng.topk(c, K, w)
+
+        topk_ms = time_stream(topk, reps)
+        c, w = ctxs[0]
+        gv, gi = (np.asarray(x) for x in eng.topk(c, K, w))
+        wv, wi = (np.asarray(x) for x in ref.topk(c, K, w))
+        parity = "ok" if ((gv == wv).all() and (gi == wi).all()) else "FAIL"
+        print(f"shard: {devices},{capacity},{K},{topk_ms:.3f},"
+              f"{score_ms:.3f},{parity}", flush=True)
+        if parity != "ok":
+            raise SystemExit(f"sharded top-K diverged from single-device "
+                             f"at D={devices}, K={K}")
+
+
+def main(quick: bool = False) -> None:
+    mesh_sizes = [1, 4] if quick else [1, 2, 4]
+    per_shard = 1024 if quick else 4096
+    ks = [8, 64] if quick else [8, 64, 256]
+    reps = 5 if quick else 10
+    for d in mesh_sizes:
+        env = dict(os.environ)
+        # strip any caller-set forced device count (XLA parses the LAST
+        # occurrence, so merely prepending ours would lose to it)
+        inherited = re.sub(r"--xla_force_host_platform_device_count=\d+",
+                           "", env.get("XLA_FLAGS", ""))
+        env["XLA_FLAGS"] = (f"{inherited} "
+                            f"--xla_force_host_platform_device_count={d}"
+                            ).strip()
+        env["PYTHONPATH"] = (os.path.join(REPO, "src") + os.pathsep
+                             + env.get("PYTHONPATH", ""))
+        cmd = [sys.executable, "-m", "benchmarks.corpus_shard", "--worker",
+               str(d), "--per-shard", str(per_shard), "--reps", str(reps),
+               "--ks", ",".join(map(str, ks))]
+        r = subprocess.run(cmd, cwd=REPO, env=env, text=True,
+                           capture_output=True, timeout=1800)
+        sys.stdout.write(r.stdout)
+        if r.returncode != 0:
+            sys.stderr.write(r.stderr[-4000:])
+            raise RuntimeError(f"corpus_shard worker D={d} failed")
+
+
+if __name__ == "__main__":
+    if "--worker" in sys.argv:
+        import argparse
+        ap = argparse.ArgumentParser()
+        ap.add_argument("--worker", type=int, required=True)
+        ap.add_argument("--per-shard", type=int, default=1024)
+        ap.add_argument("--reps", type=int, default=5)
+        ap.add_argument("--ks", default="8,64")
+        a = ap.parse_args()
+        worker(a.worker, a.per_shard, [int(k) for k in a.ks.split(",")],
+               a.reps)
+    else:
+        main(quick="--quick" in sys.argv)

@@ -17,9 +17,10 @@ def main() -> None:
                     help="run a single benchmark module by name")
     args = ap.parse_args()
 
-    from benchmarks import (corpus_churn, fig1_latency, fig2_posthoc,
-                            roofline, serving_engine, table1_accuracy,
-                            table2_proprietary, table3_serving)
+    from benchmarks import (corpus_churn, corpus_shard, fig1_latency,
+                            fig2_posthoc, roofline, serving_engine,
+                            table1_accuracy, table2_proprietary,
+                            table3_serving)
 
     modules = {
         "table1": table1_accuracy,
@@ -30,6 +31,7 @@ def main() -> None:
         "roofline": roofline,
         "serving": serving_engine,
         "churn": corpus_churn,
+        "shard": corpus_shard,
     }
     if args.only:
         modules = {args.only: modules[args.only]}

@@ -18,26 +18,16 @@ Bq * base(1).)
 """
 from __future__ import annotations
 
-import time
-
 import numpy as np
 
 import jax
 import jax.numpy as jnp
 
+from benchmarks._common import time_stream as _time
 from repro.core.fields import uniform_layout
 from repro.data.synthetic_ctr import SyntheticCTR
 from repro.models.recsys import fwfm
 from repro.serving import CorpusRankingEngine
-
-
-def _time(fn, reps: int) -> float:
-    jax.block_until_ready(fn(0))          # compile + warmup
-    jax.block_until_ready(fn(0))
-    t0 = time.perf_counter()
-    for r in range(reps):
-        jax.block_until_ready(fn(r))
-    return (time.perf_counter() - t0) * 1e3 / reps
 
 
 def main(quick: bool = False) -> None:

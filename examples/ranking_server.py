@@ -8,8 +8,8 @@ Four paths, in increasing order of precomputation:
   1. per-call Algorithm 1 (``fwfm.rank_items``): the context cache is
      computed once per query, but every candidate is re-gathered and
      re-projected — O(rho m_I k + m_I k) per item per query.
-  2. corpus engine (``repro.serving.CorpusRankingEngine``): the candidate
-     corpus is static, so ``Q_I = U_I V_I`` (n, rho, k), ``t_I`` and
+  2. corpus engine (``repro.serving.CorpusRankingEngine``): the item side
+     is context-independent, so ``Q_I = U_I V_I`` (n, rho, k), ``t_I`` and
      ``lin_I`` are precomputed once per model refresh; a query then costs
      O(rho m_C k) + O(rho k) per item — the paper's caching argument
      (Prop. 1) extended from the context side to the item side.

@@ -1,8 +1,9 @@
 """Pallas TPU kernel for corpus-precomputed DPLR-FwFM scoring (+ fused top-K).
 
-This is the serving-engine hot op.  The item corpus is static between model
-refreshes, so everything item-side is PRECOMPUTED once per corpus
-(``repro.serving.corpus``):
+This is the serving-engine hot op.  Everything item-side is context-
+independent, so it is PRECOMPUTED into the mutable corpus slab
+(``repro.serving.corpus``) — once per model refresh for the full slab,
+per-row for churn deltas:
 
     Q_I[i] = U_I @ V_I[i]                  (rho, k)   rank-space projection
     a_I[i] = lin_I[i] + 0.5 * t_I[i]       ()         per-item scalar addend
@@ -34,6 +35,16 @@ mask and pins dead slots to exactly ``NEG_INF`` inside each tile — before
 the running top-K merge — so a dead (or phantom-padding) slot can never win
 a top-K slot.  Padding: n is padded up to a block multiple with
 ``valid = 0`` phantom rows; the full mode slices them off.
+
+Shard-local semantics: when the slab is sharded across a device mesh
+(``repro.serving.sharded``), each shard calls this kernel on its LOCAL
+(n/D, rho, k) slice with its LOCAL validity mask — masking is a per-shard
+concern and needs no cross-device view.  The top-K indices the kernel
+emits, however, must be mesh-GLOBAL so the D-way candidate merge can
+compare them; ``index_offset``/``index_stride`` relabel row ``i`` of the
+local slice as ``index_offset + index_stride * i`` inside the running
+top-K (striped slot ownership uses ``offset=shard, stride=D``; the
+single-device engine keeps the identity labeling 0,1,2,...).
 """
 from __future__ import annotations
 
@@ -64,8 +75,9 @@ def _kernel_full(q_ref, a_ref, e_ref, pc_ref, ac_ref, m_ref, out_ref):
         m_ref[:, 0])
 
 
-def _kernel_topk(q_ref, a_ref, e_ref, pc_ref, ac_ref, m_ref, val_ref,
-                 idx_ref, *, block_n: int, topk: int):
+def _kernel_topk(q_ref, a_ref, e_ref, pc_ref, ac_ref, m_ref, off_ref,
+                 val_ref, idx_ref, *, block_n: int, topk: int,
+                 index_stride: int):
     i = pl.program_id(0)
 
     @pl.when(i == 0)
@@ -76,8 +88,10 @@ def _kernel_topk(q_ref, a_ref, e_ref, pc_ref, ac_ref, m_ref, val_ref,
     scores = _tile_scores(
         q_ref[...], a_ref[:, 0], e_ref[:, 0], pc_ref[...], ac_ref[:, 0],
         m_ref[:, 0])
-    tile_idx = i * block_n + jax.lax.broadcasted_iota(
-        jnp.int32, scores.shape, 1)
+    # row r of this tile is local slot i*block_n + r; the emitted index is
+    # its caller-defined global label off + stride * local.
+    tile_idx = off_ref[0, 0] + index_stride * (
+        i * block_n + jax.lax.broadcasted_iota(jnp.int32, scores.shape, 1))
     cat_v = jnp.concatenate([val_ref[...], scores], axis=1)
     cat_i = jnp.concatenate([idx_ref[...], tile_idx], axis=1)
     top_v, top_pos = jax.lax.top_k(cat_v, topk)
@@ -86,7 +100,8 @@ def _kernel_topk(q_ref, a_ref, e_ref, pc_ref, ac_ref, m_ref, val_ref,
 
 
 @functools.partial(jax.jit,
-                   static_argnames=("topk", "block_n", "interpret"))
+                   static_argnames=("topk", "block_n", "interpret",
+                                    "index_stride"))
 def dplr_corpus_score(
     Q_I: jax.Array,    # (n, rho, k)  precomputed item projections
     a_I: jax.Array,    # (n,)         per-item scalar (lin_I + 0.5 * t_I)
@@ -98,10 +113,18 @@ def dplr_corpus_score(
     topk: int | None = None,
     block_n: int = 2048,
     interpret: bool = False,
+    index_offset: jax.Array | int = 0,
+    index_stride: int = 1,
 ):
     """Corpus-cached batched scorer.  Returns ``(Bq, n)`` scores (dead
     slots exactly ``NEG_INF``), or with ``topk=K`` the fused ``((Bq, K)
-    scores, (Bq, K) int32 indices)`` over LIVE slots only."""
+    scores, (Bq, K) int32 indices)`` over LIVE slots only.
+
+    ``index_offset``/``index_stride`` relabel the top-K indices: local row
+    ``i`` reports as ``index_offset + index_stride * i`` (used by the
+    sharded slab, whose shard ``s`` of ``D`` owns the striped global slots
+    ``s, s + D, s + 2D, ...``).  ``index_offset`` may be traced (e.g. an
+    ``axis_index`` inside ``shard_map``); the stride is static."""
     n, rho, k = Q_I.shape
     Bq = P_C.shape[0]
     Q_I = Q_I.astype(jnp.float32)
@@ -143,7 +166,11 @@ def dplr_corpus_score(
 
     if not 0 < topk <= n:
         raise ValueError(f"topk={topk} out of range for n={n}")
-    kernel = functools.partial(_kernel_topk, block_n=block_n, topk=topk)
+    off = jnp.asarray(index_offset, jnp.int32).reshape(1, 1)
+    in_specs = in_specs + [pl.BlockSpec((1, 1), lambda i: (0, 0))]
+    args = args + (off,)
+    kernel = functools.partial(_kernel_topk, block_n=block_n, topk=topk,
+                               index_stride=index_stride)
     return pl.pallas_call(
         kernel,
         grid=grid,

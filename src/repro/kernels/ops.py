@@ -29,11 +29,14 @@ def dplr_score_items(V_I, U_I, e, d_I, P_C, s_C, *, block_n: int = 1024,
 
 
 def dplr_corpus_score(Q_I, a_I, e, P_C, a_C, valid=None, *, topk=None,
-                      block_n: int = 2048, interpret: bool | None = None):
+                      block_n: int = 2048, interpret: bool | None = None,
+                      index_offset=0, index_stride: int = 1):
     interp = (not _on_tpu()) if interpret is None else interpret
     return _corpus.dplr_corpus_score(Q_I, a_I, e, P_C, a_C, valid,
                                      topk=topk, block_n=block_n,
-                                     interpret=interp)
+                                     interpret=interp,
+                                     index_offset=index_offset,
+                                     index_stride=index_stride)
 
 
 def fwfm_pairwise(V, R, *, block_b: int = 512, interpret: bool | None = None):

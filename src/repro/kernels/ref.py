@@ -28,11 +28,17 @@ def dplr_corpus_score_ref(Q_I, a_I, e, P_C, a_C, valid=None):
     return s
 
 
-def dplr_corpus_topk_ref(Q_I, a_I, e, P_C, a_C, topk, valid=None):
-    """argsort-based top-K oracle: ((Bq, K) scores, (Bq, K) indices)."""
+def dplr_corpus_topk_ref(Q_I, a_I, e, P_C, a_C, topk, valid=None,
+                         index_offset=0, index_stride=1):
+    """argsort-based top-K oracle: ((Bq, K) scores, (Bq, K) indices).
+
+    ``index_offset``/``index_stride`` relabel local row ``i`` as
+    ``offset + stride * i`` — the sharded slab's striped global slot ids
+    (mirrors the kernel's shard-local index semantics)."""
     s = dplr_corpus_score_ref(Q_I, a_I, e, P_C, a_C, valid)
     idx = jnp.argsort(-s, axis=1)[:, :topk].astype(jnp.int32)
-    return jnp.take_along_axis(s, idx, axis=1), idx
+    vals = jnp.take_along_axis(s, idx, axis=1)
+    return vals, index_offset + index_stride * idx
 
 
 def fwfm_pairwise_ref(V, R):

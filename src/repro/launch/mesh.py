@@ -23,7 +23,11 @@ def make_production_mesh(*, multi_pod: bool = False):
     return jax.make_mesh(shape, axes)
 
 
-def make_host_mesh():
-    """1-device mesh with the production axis names — lets the same pjit
-    code paths run in smoke tests / examples on this CPU container."""
-    return jax.make_mesh((1, 1), ("data", "model"))
+def make_host_mesh(model: int | None = None):
+    """Host-sized mesh with the production axis names — lets the same
+    pjit/shard_map code paths run in smoke tests / examples on this CPU
+    container.  ``model`` widens the model axis (e.g. the corpus-shard
+    tests run ``model=4`` under
+    ``XLA_FLAGS=--xla_force_host_platform_device_count=4``); default is
+    the classic 1-device (1, 1) mesh."""
+    return jax.make_mesh((1, model or 1), ("data", "model"))

@@ -8,9 +8,10 @@
 Serving engine
 --------------
 The default ``--engine corpus`` path serves through
-``repro.serving.CorpusRankingEngine``: the candidate corpus is static
-between model refreshes, so the item side (``Q_I = U_I V_I``, ``t_I``,
-``lin_I``) is precomputed ONCE per (corpus, model) and each query costs
+``repro.serving.CorpusRankingEngine``: the item side (``Q_I = U_I V_I``,
+``t_I``, ``lin_I``) is context-independent, so it is precomputed ONCE per
+(corpus, model) — per-row deltas absorb catalog churn — and each query
+costs
 
     O(rho m_C k)            context cache (once per query)
     O(rho k) per item       combine with the precomputed Q_I
@@ -33,6 +34,16 @@ with O(Δn rho k) in-place writes.  ``--churn-demo`` interleaves
 asserts the jitted scorer NEVER retraces (the recompilation stall the slab
 design removes) and that masked top-K never surfaces a dead slot.
 
+Sharded corpus: ``--mesh host`` shards the slab over every local device's
+model axis (CI runs this under
+``XLA_FLAGS=--xla_force_host_platform_device_count=4``), so corpus
+capacity scales with the device count; churn deltas route to their owning
+shard and top-K merges the device-local winners (bit-exact vs unsharded).
+``--mesh prod`` / ``--mesh prod-mp`` build the production (16, 16) /
+(2, 16, 16) mesh shapes — usable under a dry-run-style forced device
+count.  All other flags compose: churn/refresh demos, --topk,
+--use-pallas all run sharded.
+
 ``--mp`` switches to the model-parallel DPLR scorer (EXPERIMENTS.md §Perf
 cell 3) — on this 1-device container it exercises the same shard_map code
 path the production mesh runs; ``--bf16`` serves bf16 tables.
@@ -51,9 +62,21 @@ from jax.sharding import PartitionSpec as P
 from repro.checkpoint import CheckpointManager
 from repro.configs import REGISTRY
 from repro.data.synthetic_ctr import SyntheticCTR
-from repro.launch.mesh import make_host_mesh
+from repro.launch.mesh import make_host_mesh, make_production_mesh
 from repro.models.recsys import fwfm
 from repro.serving import CorpusRankingEngine
+
+
+def _corpus_mesh(kind: str):
+    """Mesh carrying the corpus slab.  ``host`` spans every local device
+    (1 on a plain CPU run; N under a forced host-platform device count);
+    ``prod``/``prod-mp`` are the production shapes from launch/mesh.py and
+    need the matching (dry-run-forced) device count."""
+    if kind == "none":
+        return None
+    if kind == "host":
+        return make_host_mesh(model=jax.device_count())
+    return make_production_mesh(multi_pod=(kind == "prod-mp"))
 
 
 def _report(tag: str, lat: np.ndarray, queries: int, items: int) -> None:
@@ -152,6 +175,11 @@ def main(argv=None):
     ap.add_argument("--refresh-demo", action="store_true",
                     help="write a perturbed checkpoint mid-stream and "
                          "verify the corpus engine hot-swaps it")
+    ap.add_argument("--mesh", default="none",
+                    choices=["none", "host", "prod", "prod-mp"],
+                    help="shard the corpus slab over this mesh's model "
+                         "axis (host = all local devices; prod[-mp] = the "
+                         "production shapes, dry-run device counts only)")
     ap.add_argument("--capacity", type=int, default=0,
                     help="corpus slab capacity (power of two; 0 = auto: "
                          "items rounded up, 2x items under --churn-demo)")
@@ -177,9 +205,10 @@ def main(argv=None):
     if engine_kind == "corpus":
         if not is_dplr or args.mp:
             ap.error("--engine corpus requires a dplr model (and not --mp)")
-    elif args.topk or args.refresh_demo or args.use_pallas or args.churn_demo:
-        ap.error("--topk/--refresh-demo/--use-pallas/--churn-demo require "
-                 "--engine corpus")
+    elif (args.topk or args.refresh_demo or args.use_pallas
+          or args.churn_demo or args.mesh != "none"):
+        ap.error("--topk/--refresh-demo/--use-pallas/--churn-demo/--mesh "
+                 "require --engine corpus")
 
     params = mod.init(jax.random.PRNGKey(args.seed), cfg)
     mgr = None
@@ -221,12 +250,21 @@ def main(argv=None):
         # initial candidate corpus: the item side of a fixed ranking query,
         # living in a capacity-padded slab so the catalog can churn.
         from repro.serving.corpus import next_pow2
+        corpus_mesh = _corpus_mesh(args.mesh)
+        n_shards = 1 if corpus_mesh is None \
+            else int(corpus_mesh.shape["model"])
         capacity = args.capacity or next_pow2(
             2 * args.items if args.churn_demo else args.items)
+        capacity = max(capacity, n_shards)
         corpus = data.ranking_query(args.items, 0)
         engine = CorpusRankingEngine(
             cfg, corpus["item_ids"][0], corpus["item_weights"][0],
-            capacity=capacity, use_pallas_kernel=args.use_pallas)
+            capacity=capacity, mesh=corpus_mesh,
+            use_pallas_kernel=args.use_pallas)
+        if corpus_mesh is not None:
+            print(f"corpus sharded {n_shards}-way: "
+                  f"{engine.local_capacity}/{engine.capacity} slots per "
+                  f"device")
         engine.refresh(params, step=(mgr.latest_step() if mgr else None))
 
         if args.churn_demo:
@@ -270,6 +308,7 @@ def main(argv=None):
                     print(f"query 0: top-3 of {args.items} candidates -> {top}")
         tag = (f"corpus{', pallas' if args.use_pallas else ''}"
                f"{f', top{args.topk}' if args.topk else ''}"
+               f"{f', {n_shards} shards' if n_shards > 1 else ''}"
                f"{', bf16' if args.bf16 else ''}")
         _report(tag, np.asarray(lat[2:]), args.queries, args.items)
         if args.refresh_demo:

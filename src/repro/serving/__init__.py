@@ -7,16 +7,23 @@ capacity-padded slab with a validity mask, so live-traffic catalog churn
 (item add/remove/update) is absorbed by O(Δn rho k) in-place row writes —
 no rebuilds, no shape changes, zero retraces of the jitted scorer — and a
 model refresh rebuilds the slab in place with slot assignments preserved.
+The slab optionally SHARDS across the mesh's model axis (pass ``mesh=`` to
+the engine): D devices each hold capacity/D slots, churn deltas route to
+their owning shard, and top-K merges D device-local top-Ks with O(D·K)
+traffic — corpus capacity then scales with the mesh, not one device's HBM.
 
-    corpus.py - ItemCorpusCache + build_corpus_cache + corpus_rows (the
-                precompute; slab/mask invariants documented here)
-    engine.py - CorpusRankingEngine (batched masked scoring, fused top-K,
-                add/remove/update_items, slab doubling, checkpoint-refresh
-                invalidation)
+    corpus.py  - ItemCorpusCache + build_corpus_cache + corpus_rows +
+                 masked_slab_scores (the precompute and scoring math;
+                 slab/mask invariants documented here)
+    engine.py  - CorpusRankingEngine (batched masked scoring, fused top-K,
+                 add/remove/update_items, slab doubling, checkpoint-refresh
+                 invalidation; same API sharded or not)
+    sharded.py - shard_map implementations of build/write/score/topk
+                 (striped slot ownership, bit-exact candidate merge)
 """
 from repro.serving.corpus import (ItemCorpusCache, build_corpus_cache,
-                                  corpus_rows)
+                                  corpus_rows, masked_slab_scores)
 from repro.serving.engine import CorpusRankingEngine
 
 __all__ = ["ItemCorpusCache", "build_corpus_cache", "corpus_rows",
-           "CorpusRankingEngine"]
+           "masked_slab_scores", "CorpusRankingEngine"]

@@ -3,9 +3,9 @@
 The paper's Algorithm 1 caches the CONTEXT side per query; this module
 extends the same caching argument to the ITEM side, across queries.  The
 Proposition-1 projection ``P = U V`` is linear in the field embeddings, so
-for a candidate corpus that is static between model refreshes the entire
-item-side computation is context-independent and can be hoisted out of the
-query loop:
+the entire item-side computation is context-independent and can be hoisted
+out of the query loop — computed once per row per model refresh, and
+re-computed for just the touched rows when the catalog churns:
 
     Q_I[i]   = U_I @ V_I[i]                      (cap, rho, k)
     t_I[i]   = sum_{f in item fields} d_f ||v_f||^2        (cap,)
@@ -45,6 +45,13 @@ therefore without ever retracing a jitted scorer — the cache is a
 A cache is a pure pytree, so it rebuilds under jit with one dispatch on
 model refresh (the sliding-window retrain mode of Section 5.3) and the
 engine's jitted scorer never retraces: only the array *values* change.
+
+Sharded layout: when the engine runs with a mesh, every leaf's leading
+``capacity`` axis is stored in the physical ``(capacity / D, D)`` view of
+``repro.serving.sharded`` — global slot ``g`` at ``[g // D, g % D]``,
+axis 1 sharded over the model axis — and ALL of the invariants above hold
+per shard (the validity mask is shard-local, growth pads the local axis,
+slot ids never renumber).
 """
 from __future__ import annotations
 
@@ -110,6 +117,23 @@ def corpus_rows(params: dict, cfg, item_ids: jax.Array,
                                 item_arena_ids(layout, item_ids),
                                 item_weights, take_fn=take_fn)
     return Q_I, t_I, lin_I
+
+
+def masked_slab_scores(params: dict, Q_I, t_I, lin_I, valid,
+                       P_C, s_C, lin_C) -> jax.Array:
+    """(Bq, n) fused masked scores for a slab slice against a batch of
+    context caches — the ONE definition of the jnp scoring math, shared by
+    the single-device engine (full slab) and every shard of the sharded
+    engine (its local slice), so the two paths are bit-identical per slot:
+    the reduction runs over (rho, k) only, which splitting the ITEM axis
+    across shards cannot perturb."""
+    P = P_C[:, None] + Q_I[None]                       # (Bq, n, rho, k)
+    term_e = jnp.einsum("qnrk,r->qn", P * P, params["e"])
+    pw = 0.5 * (s_C[:, None] + t_I[None, :] + term_e)
+    s = params["bias"] + lin_C[:, None] + lin_I[None, :] + pw
+    # dead slots pinned to -inf: they can never win a top-K slot, and the
+    # fill matches the Pallas kernel's padding sentinel bit-for-bit.
+    return jnp.where(valid[None, :], s, NEG_INF)
 
 
 def build_corpus_cache(params: dict, cfg, item_ids: jax.Array,

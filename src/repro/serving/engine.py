@@ -46,6 +46,22 @@ Scoring backends:
     (capacity, rho, k) with an optional in-kernel running top-K that takes
     the validity mask into the merge (interpret mode on CPU, Mosaic on
     TPU).
+
+Sharded slab (capacity scales with the mesh)
+--------------------------------------------
+Pass ``mesh=`` (axes from ``launch/mesh.py``) and the slab shards across
+the ``model`` axis: D devices each hold a capacity/D slice of the cache,
+so corpus capacity is bounded by the mesh's aggregate HBM instead of one
+device's.  Global slot ``g`` is owned by shard ``g % D`` at local row
+``g // D`` (striped, so slab doubling never renumbers a slot — see
+``repro.serving.sharded``); churn deltas route to their owning shard by
+that arithmetic inside one ``shard_map`` scatter; ``topk`` merges the D
+device-local top-Ks with O(D·K) traffic and is BIT-exact vs the unsharded
+engine, ties included.  Every public method keeps identical semantics and
+slot numbering either way — ``mesh=None`` (the default) is simply D=1 on
+the local device.  Free slots are tracked per shard so allocation stays
+O(log capacity) while handing out the same lowest-free-slot order as the
+unsharded engine.
 """
 from __future__ import annotations
 
@@ -59,51 +75,74 @@ import jax.numpy as jnp
 from repro.core import ranking as rk
 from repro.core.dplr import DPLRParams
 from repro.serving.corpus import (
-    NEG_INF,
     ItemCorpusCache,
     build_corpus_cache,
     corpus_rows,
+    masked_slab_scores,
     next_pow2,
 )
 
 
 class CorpusRankingEngine:
     """Scores a mutable, capacity-padded item corpus for batches of query
-    contexts."""
+    contexts.  With ``mesh=`` the slab shards across the model axis and
+    capacity scales with the device count (see module docstring)."""
 
     def __init__(self, cfg, item_ids, item_weights=None, *,
-                 capacity: int | None = None,
+                 capacity: int | None = None, mesh=None,
                  use_pallas_kernel: bool = False, block_n: int = 2048):
         if cfg.interaction != "dplr":
             raise ValueError("CorpusRankingEngine requires interaction='dplr'")
         self.cfg = cfg
         self._wdtype = cfg.dtype   # weights follow the serving dtype — a
         # stray f32 default here silently promotes the whole bf16 path.
+        self.mesh = mesh
+        if mesh is None:
+            self._D = 1
+        else:
+            from repro.serving import sharded
+            self._D = sharded.shard_count(mesh)
+            if self._D & (self._D - 1):
+                # capacity must be a power of two AND divisible by D, so a
+                # non-power-of-two shard count admits NO valid capacity —
+                # fail here with the real reason, not downstream
+                raise ValueError(
+                    f"corpus shard count must be a power of two, got a "
+                    f"{self._D}-wide model axis")
 
         ids = np.asarray(item_ids, np.int32)
         n0 = int(ids.shape[0])
         w = (np.ones(ids.shape, np.float32) if item_weights is None
              else np.asarray(item_weights, np.float32))
-        self.capacity = next_pow2(max(n0, 1)) if capacity is None \
-            else int(capacity)
+        self.capacity = max(next_pow2(max(n0, 1)), self._D) \
+            if capacity is None else int(capacity)
         if self.capacity < n0:
             raise ValueError(f"capacity={self.capacity} < initial corpus "
                              f"size n={n0}")
         if self.capacity & (self.capacity - 1):
             raise ValueError(f"capacity must be a power of two, "
                              f"got {self.capacity}")
+        if self.capacity % self._D:
+            raise ValueError(f"capacity={self.capacity} not divisible by "
+                             f"the {self._D}-way corpus shard axis")
 
-        # host-side slab (source of truth for ids/weights/liveness); the
-        # device-side cache mirrors it through jitted writes.
+        # host-side slab (source of truth for ids/weights/liveness), in
+        # GLOBAL slot order; the device-side cache mirrors it through
+        # jitted writes (physical (local, D) view when sharded).
         self._slab_ids = np.zeros((self.capacity, ids.shape[1]), np.int32)
         self._slab_w = np.ones((self.capacity, ids.shape[1]), np.float32)
         self._slab_ids[:n0] = ids
         self._slab_w[:n0] = w
         self._valid_np = np.zeros(self.capacity, bool)
         self._valid_np[:n0] = True
-        # free slots as a min-heap: lowest-numbered slot handed out first,
-        # O(log cap) per op (a sort per removal would be O(cap log cap))
-        self._free = list(range(n0, self.capacity))
+        # free slots as one min-heap of LOCAL rows per shard (shard of
+        # slot g is g % D; D=1 degenerates to the classic single heap):
+        # lowest-numbered GLOBAL slot is handed out first, O(D + log cap)
+        # per op, and striping makes that order spread across shards.
+        self._free = [[] for _ in range(self._D)]
+        for g in range(n0, self.capacity):
+            self._free[g % self._D].append(g // self._D)
+        self._n_free = self.capacity - n0
 
         self.use_pallas_kernel = use_pallas_kernel
         self.block_n = block_n
@@ -115,24 +154,77 @@ class CorpusRankingEngine:
         self.refresh_count = 0
         self.trace_count = 0      # incremented only when the scorer retraces
 
-        self._build = jax.jit(self._build_impl)
-        self._score = jax.jit(self._score_impl)
-        self._topk = jax.jit(self._topk_impl, static_argnames=("K",))
         self._context = jax.jit(self._context_impl)
-        self._kernel_score = jax.jit(self._kernel_score_impl,
-                                     static_argnames=("K",))
         self._rows = jax.jit(self._rows_impl)
-        self._write = jax.jit(self._write_impl)
-        self._drop = jax.jit(self._drop_impl)
+        if mesh is None:
+            self._build = jax.jit(self._build_impl)
+            self._score = jax.jit(self._score_impl)
+            self._topk = jax.jit(self._topk_impl, static_argnames=("K",))
+            self._kernel_score = jax.jit(self._kernel_score_impl,
+                                         static_argnames=("K",))
+            self._write = jax.jit(self._write_impl)
+            self._drop = jax.jit(self._drop_impl)
+        else:
+            self._init_sharded(mesh)
+
+    def _init_sharded(self, mesh):
+        """Swap the device-side ops for their shard_map versions.  Call
+        signatures and semantics are identical — churn idx stay GLOBAL
+        slots (the write body routes them), score/topk outputs stay in
+        global slot order — only the cache layout changes to the physical
+        (local, D, ...) view of ``repro.serving.sharded``."""
+        from repro.serving import sharded
+
+        self._build = jax.jit(sharded.make_build(self.cfg, mesh))
+        self._write = jax.jit(sharded.make_write(mesh))
+        self._drop = jax.jit(sharded.make_drop(mesh))
+        score = sharded.make_score(self.cfg, mesh, self._context_impl)
+        topk = sharded.make_topk(self.cfg, mesh, self._context_impl)
+        kscore = sharded.make_score(self.cfg, mesh, self._context_impl,
+                                    use_kernel=True, block_n=self.block_n)
+        ktopk = sharded.make_topk(self.cfg, mesh, self._context_impl,
+                                  use_kernel=True, block_n=self.block_n)
+
+        def _score_impl(params, cache, ctx_ids, ctx_w):
+            self.trace_count += 1    # python side effect: trace time only
+            return score(params, cache, ctx_ids, ctx_w)
+
+        def _topk_impl(params, cache, ctx_ids, ctx_w, *, K):
+            self.trace_count += 1    # python side effect: trace time only
+            return topk(params, cache, ctx_ids, ctx_w, K=K)
+
+        def _kernel_impl(params, cache, ctx_ids, ctx_w, *, K=None):
+            self.trace_count += 1
+            if K is None:
+                return kscore(params, cache, ctx_ids, ctx_w)
+            return ktopk(params, cache, ctx_ids, ctx_w, K=K)
+
+        self._score = jax.jit(_score_impl)
+        self._topk = jax.jit(_topk_impl, static_argnames=("K",))
+        self._kernel_score = jax.jit(_kernel_impl, static_argnames=("K",))
 
     # -- corpus introspection -----------------------------------------------
 
     @property
     def n_items(self) -> int:
         """Live (valid) item count — NOT the slab capacity.  O(1): the
-        free-list holds exactly the dead slots (this sits on the per-query
+        free-lists hold exactly the dead slots (this sits on the per-query
         top-K range check)."""
-        return self.capacity - len(self._free)
+        return self.capacity - self._n_free
+
+    @property
+    def n_shards(self) -> int:
+        """Corpus shard count D (1 when unsharded)."""
+        return self._D
+
+    @property
+    def local_capacity(self) -> int:
+        """Slots per shard: each device holds capacity/D cache rows."""
+        return self.capacity // self._D
+
+    def shard_of(self, slots) -> np.ndarray:
+        """Owning shard of each global slot id (striped: ``g % D``)."""
+        return np.asarray(slots, np.int64) % self._D
 
     @property
     def valid_slots(self) -> np.ndarray:
@@ -185,14 +277,11 @@ class CorpusRankingEngine:
         self.trace_count += 1     # python side effect: runs at trace time only
         P_C, s_C, lin_C = self._context_impl(params, ctx_ids, ctx_w)
         # direct fused form — same reduction order as rank_items, so the
-        # corpus-cached path is float32-epsilon-close to the per-query path.
-        P = P_C[:, None] + cache.Q_I[None]                 # (Bq, cap, rho, k)
-        term_e = jnp.einsum("qnrk,r->qn", P * P, params["e"])
-        pw = 0.5 * (s_C[:, None] + cache.t_I[None, :] + term_e)
-        s = params["bias"] + lin_C[:, None] + cache.lin_I[None, :] + pw
-        # dead slots pinned to -inf: they can never win a top-K slot, and
-        # the fill matches the Pallas kernel's padding sentinel bit-for-bit.
-        return jnp.where(cache.valid[None, :], s, NEG_INF)
+        # corpus-cached path is float32-epsilon-close to the per-query
+        # path; the math lives in corpus.masked_slab_scores, shared with
+        # the sharded engine so the two are bit-identical per slot.
+        return masked_slab_scores(params, cache.Q_I, cache.t_I, cache.lin_I,
+                                  cache.valid, P_C, s_C, lin_C)
 
     def _topk_impl(self, params, cache, ctx_ids, ctx_w, *, K):
         scores = self._score_impl(params, cache, ctx_ids, ctx_w)
@@ -211,6 +300,25 @@ class CorpusRankingEngine:
                                       block_n=self.block_n)
 
     # -- corpus mutation (the churn path) -----------------------------------
+
+    def _alloc_slot(self) -> int:
+        """Pop the lowest-numbered free GLOBAL slot across the per-shard
+        heaps.  The order is identical to a single global heap (striping:
+        shard s's heap head l encodes global l*D + s), so the sharded and
+        unsharded engines assign the same slots for the same op sequence."""
+        best_s, best_g = -1, -1
+        for s, heap in enumerate(self._free):
+            if heap:
+                g = heap[0] * self._D + s
+                if best_g < 0 or g < best_g:
+                    best_s, best_g = s, g
+        heapq.heappop(self._free[best_s])
+        self._n_free -= 1
+        return best_g
+
+    def _free_slot(self, g: int) -> None:
+        heapq.heappush(self._free[g % self._D], g // self._D)
+        self._n_free += 1
 
     def _pad_slots(self, slots):
         """Pad a Δn slot vector to the next power-of-two bucket so the
@@ -266,10 +374,9 @@ class CorpusRankingEngine:
         self._require_ready()
         ids, w = self._payload(ids, weights, "add_items")
         dn = ids.shape[0]
-        if dn > len(self._free):
-            self._grow(dn - len(self._free))
-        slots = np.asarray([heapq.heappop(self._free) for _ in range(dn)],
-                           np.int32)
+        if dn > self._n_free:
+            self._grow(dn - self._n_free)
+        slots = np.asarray([self._alloc_slot() for _ in range(dn)], np.int32)
         self._scatter_rows(slots, ids, w)
         return slots
 
@@ -291,7 +398,7 @@ class CorpusRankingEngine:
         self._check_live(slots, "remove_items")
         self._valid_np[slots] = False
         for s in slots:
-            heapq.heappush(self._free, int(s))
+            self._free_slot(int(s))
         self.cache = self._drop(self.cache, jnp.asarray(self._pad_slots(slots)))
 
     def _check_live(self, slots, op):
@@ -305,7 +412,12 @@ class CorpusRankingEngine:
     def _grow(self, min_extra: int) -> None:
         """Double the slab (at least) so >= min_extra slots are free.  The
         ONLY shape-changing operation: the next score/build traces once for
-        the new capacity, amortized O(1) per added item."""
+        the new capacity, amortized O(1) per added item.
+
+        Sharded: growth pads the LOCAL axis of every shard's cache slice —
+        striped ownership means the new global slots [old, new) are exactly
+        the new local rows [old/D, new/D) on each shard, and every live
+        slot keeps its (shard, local) address (ids never renumber)."""
         old = self.capacity
         new = max(old * 2, next_pow2(old + min_extra))
         extra = new - old
@@ -313,28 +425,51 @@ class CorpusRankingEngine:
         self._slab_w = np.pad(self._slab_w, ((0, extra), (0, 0)),
                               constant_values=1.0)
         self._valid_np = np.pad(self._valid_np, (0, extra))
-        # every new slot is > every existing free slot, so a plain extend
-        # preserves the min-heap invariant
-        self._free.extend(range(old, new))
+        # every new local row is > every existing free row of its shard,
+        # so a plain append preserves each per-shard min-heap invariant
+        for g in range(old, new):
+            self._free[g % self._D].append(g // self._D)
+        self._n_free += extra
         self.capacity = new
         if self.cache is not None:
-            self.cache = ItemCorpusCache(
-                Q_I=jnp.pad(self.cache.Q_I, ((0, extra), (0, 0), (0, 0))),
-                t_I=jnp.pad(self.cache.t_I, (0, extra)),
-                lin_I=jnp.pad(self.cache.lin_I, (0, extra)),
-                valid=jnp.pad(self.cache.valid, (0, extra)),
-            )
+            if self.mesh is None:
+                self.cache = ItemCorpusCache(
+                    Q_I=jnp.pad(self.cache.Q_I, ((0, extra), (0, 0), (0, 0))),
+                    t_I=jnp.pad(self.cache.t_I, (0, extra)),
+                    lin_I=jnp.pad(self.cache.lin_I, (0, extra)),
+                    valid=jnp.pad(self.cache.valid, (0, extra)),
+                )
+            else:
+                ex = extra // self._D        # per-shard local rows added
+                self.cache = ItemCorpusCache(
+                    Q_I=jnp.pad(self.cache.Q_I,
+                                ((0, ex), (0, 0), (0, 0), (0, 0))),
+                    t_I=jnp.pad(self.cache.t_I, ((0, ex), (0, 0))),
+                    lin_I=jnp.pad(self.cache.lin_I, ((0, ex), (0, 0))),
+                    valid=jnp.pad(self.cache.valid, ((0, ex), (0, 0))),
+                )
 
     # -- corpus/model lifecycle --------------------------------------------
 
     def refresh(self, params: dict, step: int | None = None) -> None:
         """Install a model snapshot: rebuild every slab row IN PLACE (one
         jitted dispatch, slot assignments preserved), keep the scorer's jit
-        cache intact."""
+        cache intact.  Sharded: each device rebuilds only its own
+        capacity/D rows (the global-order host slab reshapes to the
+        physical (local, D) view for free, because ownership is striped)."""
         self.params = params
-        self.cache = self._build(params, jnp.asarray(self._slab_ids),
-                                 jnp.asarray(self._slab_w, self._wdtype),
-                                 jnp.asarray(self._valid_np))
+        if self.mesh is None:
+            self.cache = self._build(params, jnp.asarray(self._slab_ids),
+                                     jnp.asarray(self._slab_w, self._wdtype),
+                                     jnp.asarray(self._valid_np))
+        else:
+            lc = self.local_capacity
+            ids = self._slab_ids.reshape(lc, self._D, -1)
+            w = self._slab_w.reshape(lc, self._D, -1)
+            self.cache = self._build(params, jnp.asarray(ids),
+                                     jnp.asarray(w, self._wdtype),
+                                     jnp.asarray(
+                                         self._valid_np.reshape(lc, self._D)))
         self.model_step = step
         self.refresh_count += 1
 

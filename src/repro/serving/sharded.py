@@ -1,0 +1,291 @@
+"""Mesh-sharded item-corpus slab: capacity scales with devices.
+
+The single-device engine bounds corpus capacity by ONE device's HBM: the
+whole (capacity, rho, k) cache must fit next to the model.  This module
+shards the capacity-padded slab across the ``model`` mesh axis
+(``repro.sharding.rules.corpus_slab_axis``): with D shards each device
+holds a capacity/D slice of every ``ItemCorpusCache`` leaf, so aggregate
+corpus capacity grows linearly with the mesh while per-device memory and
+per-query FLOPs stay O(capacity/D · rho · k).
+
+Striped slot ownership (the growth-stable layout)
+-------------------------------------------------
+Global slot ``g`` is owned by shard ``g % D`` at local row ``g // D`` —
+slots are striped round-robin, NOT block-contiguous.  Two reasons:
+
+  * **slab doubling never renumbers a slot.**  Growth appends local rows
+    to every shard; with striping the new rows are exactly the new global
+    ids ``capacity .. 2*capacity - 1`` and every live id keeps its
+    ``(shard, local)`` address.  A block layout would remap every id on
+    the first doubling, breaking the engine's slot-stability contract.
+  * **allocation balances itself.**  The engine hands out the lowest free
+    global id (same order as the single-device engine, so slot
+    assignments are identical across the two); consecutive ids land on
+    consecutive shards.
+
+The device arrays store the PHYSICAL view of this layout: leading axis
+``capacity`` reshaped to ``(local, D)`` — pure ``reshape``, because
+``arr.reshape(local, D)[l, s] == arr[l * D + s]`` — with axis 1 sharded
+over the model axis (``repro.sharding.rules.corpus_cache_specs``).  Axis 0
+is the shard-local slot, so growth is a pad of the UNsharded axis.
+
+Churn routing
+-------------
+Mutations arrive as (global slot, row) pairs.  Inside ``shard_map`` each
+shard computes ``mine = g % D == axis_index`` and scatters only its own
+rows (foreign and bucket-filler rows get local index ``local_cap`` and are
+dropped) — delta routing is pure arithmetic, zero cross-device traffic,
+and the power-of-two delta bucketing is unchanged, so churn still causes
+zero scorer retraces.
+
+Top-K merge
+-----------
+``topk`` runs the masked top-K device-locally over the local slice — the
+jnp path via ``jax.lax.top_k``, the Pallas path via the running-top-K mode
+of ``kernels.dplr_corpus_score`` with ``index_offset=shard``/
+``index_stride=D`` so the kernel emits mesh-global ids.  Each shard
+contributes ``k_loc = min(K, local_cap)`` candidates; the merge gathers
+the D·k_loc candidates (O(D·K) traffic — never O(n)), sorts them by
+global slot id, and takes the final top-K.  The sort makes the merge's
+tie-breaking identical to a single ``lax.top_k`` over the unsharded slab
+(lowest global index wins), so the sharded engine is BIT-exact vs the
+single-device engine, ties included.  Correctness of the candidate union:
+any slot in the true global top-K is within its own shard's top-``k_loc``
+(if ``k_loc < K`` then ``k_loc = local_cap`` and the shard contributes
+everything), and with ``K <= n_items`` live candidates always outrank the
+``NEG_INF`` dead-slot fillers a sparse shard may contribute.
+"""
+from __future__ import annotations
+
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+
+from repro.serving.corpus import (ItemCorpusCache, corpus_rows,
+                                  masked_slab_scores)
+from repro.sharding import (corpus_cache_specs, corpus_slab_axis,
+                            corpus_slab_spec, shard_map, shard_map_norep)
+
+
+def shard_count(mesh) -> int:
+    return int(mesh.shape[corpus_slab_axis()])
+
+
+def _squeeze_cache(cache: ItemCorpusCache) -> ItemCorpusCache:
+    """Inside shard_map a block has axis 1 == 1 (this shard); drop it."""
+    return ItemCorpusCache(Q_I=cache.Q_I[:, 0], t_I=cache.t_I[:, 0],
+                           lin_I=cache.lin_I[:, 0], valid=cache.valid[:, 0])
+
+
+# ---------------------------------------------------------------------------
+# Build (model refresh): every shard rebuilds its local rows in place
+# ---------------------------------------------------------------------------
+
+def make_build(cfg, mesh):
+    """impl(params, ids_phys, w_phys, valid_phys) -> physical cache.
+
+    Inputs are the host slab in physical (local, D, ...) view; each shard
+    runs ``corpus_rows`` over its OWN local slice only, so the per-device
+    build cost is O(capacity/D · m_I · k) — the build weak-scales with
+    the slab."""
+    ax = corpus_slab_axis()
+    specs = corpus_cache_specs(mesh)
+    slab = corpus_slab_spec(mesh)
+
+    def body(params, ids, w, valid):
+        Q, t, lin = corpus_rows(params, cfg, ids[:, 0], w[:, 0])
+        return ItemCorpusCache(Q_I=Q[:, None], t_I=t[:, None],
+                               lin_I=lin[:, None], valid=valid)
+
+    sm = shard_map(body, mesh=mesh,
+                   in_specs=(P(), slab, slab, P(None, ax)),
+                   out_specs=specs)
+
+    def impl(params, ids_phys, w_phys, valid_phys):
+        return sm(params, ids_phys, w_phys, valid_phys)
+
+    return impl
+
+
+# ---------------------------------------------------------------------------
+# Churn writes: shard-routed scatters (zero cross-device traffic)
+# ---------------------------------------------------------------------------
+
+def _route(gidx, local_cap: int, D: int, ax: str):
+    """(Δ,) global slots -> (Δ,) local rows on THIS shard; foreign and
+    bucket-filler slots (g == capacity) map to ``local_cap`` => dropped."""
+    mine = (gidx % D) == jax.lax.axis_index(ax)
+    return jnp.where(mine, gidx // D, local_cap)
+
+
+def make_write(mesh):
+    """impl(cache, Q, t, lin, gidx) — scatter Δn precomputed rows at their
+    owning shards and mark them live.  The delta rows are replicated (they
+    are O(Δn), tiny); each shard keeps only what it owns."""
+    ax = corpus_slab_axis()
+    D = shard_count(mesh)
+    specs = corpus_cache_specs(mesh)
+
+    def body(cache, Q, t, lin, gidx):
+        li = _route(gidx, cache.Q_I.shape[0], D, ax)
+        return ItemCorpusCache(
+            Q_I=cache.Q_I.at[li, 0].set(Q, mode="drop"),
+            t_I=cache.t_I.at[li, 0].set(t, mode="drop"),
+            lin_I=cache.lin_I.at[li, 0].set(lin, mode="drop"),
+            valid=cache.valid.at[li, 0].set(True, mode="drop"),
+        )
+
+    sm = shard_map(body, mesh=mesh,
+                   in_specs=(specs, P(None, None, None), P(None), P(None),
+                             P(None)),
+                   out_specs=specs)
+    return sm
+
+
+def make_drop(mesh):
+    """impl(cache, gidx) — invalidate slots at their owning shards."""
+    ax = corpus_slab_axis()
+    D = shard_count(mesh)
+    specs = corpus_cache_specs(mesh)
+
+    def body(cache, gidx):
+        li = _route(gidx, cache.Q_I.shape[0], D, ax)
+        return cache._replace(
+            valid=cache.valid.at[li, 0].set(False, mode="drop"))
+
+    return shard_map(body, mesh=mesh, in_specs=(specs, P(None)),
+                     out_specs=specs)
+
+
+# ---------------------------------------------------------------------------
+# Scoring: device-local masked scores, global-order full matrix
+# ---------------------------------------------------------------------------
+
+def make_score(cfg, mesh, context_fn, *, use_kernel: bool = False,
+               block_n: int = 2048):
+    """impl(params, cache, ctx_ids, ctx_w) -> (Bq, capacity) scores in
+    GLOBAL slot order (identical to the single-device engine).  The
+    context cache is computed once (replicated — O(rho m_C k), independent
+    of the corpus); each shard scores its local slice."""
+    ax = corpus_slab_axis()
+    specs = corpus_cache_specs(mesh)
+
+    if use_kernel:
+        from repro.kernels import ops as kops
+
+        def body(params, cache, P_C, a_C):
+            c = _squeeze_cache(cache)
+            s = kops.dplr_corpus_score(c.Q_I, c.lin_I + 0.5 * c.t_I,
+                                       params["e"], P_C, a_C,
+                                       valid=c.valid, block_n=block_n)
+            return s[:, :, None]                    # (Bq, local, 1)
+
+        sm = shard_map_norep(body, mesh=mesh,
+                             in_specs=(P(), specs, P(None, None, None),
+                                       P(None)),
+                             out_specs=P(None, None, ax))
+
+        def impl(params, cache, ctx_ids, ctx_w):
+            P_C, s_C, lin_C = context_fn(params, ctx_ids, ctx_w)
+            a_C = params["bias"] + lin_C + 0.5 * s_C
+            out = sm(params, cache, P_C, a_C)       # (Bq, local, D)
+            # physical (local, D) flattens to l*D+s == the global slot id
+            return out.reshape(out.shape[0], -1)
+
+        return impl
+
+    def body(params, cache, P_C, s_C, lin_C):
+        c = _squeeze_cache(cache)
+        s = masked_slab_scores(params, c.Q_I, c.t_I, c.lin_I, c.valid,
+                               P_C, s_C, lin_C)
+        return s[:, :, None]                        # (Bq, local, 1)
+
+    sm = shard_map(body, mesh=mesh,
+                   in_specs=(P(), specs, P(None, None, None), P(None),
+                             P(None)),
+                   out_specs=P(None, None, ax))
+
+    def impl(params, cache, ctx_ids, ctx_w):
+        P_C, s_C, lin_C = context_fn(params, ctx_ids, ctx_w)
+        out = sm(params, cache, P_C, s_C, lin_C)
+        return out.reshape(out.shape[0], -1)
+
+    return impl
+
+
+# ---------------------------------------------------------------------------
+# Top-K: device-local top-k_loc, then one D·k_loc candidate merge
+# ---------------------------------------------------------------------------
+
+def merge_topk(cand_vals: jax.Array, cand_idx: jax.Array, K: int):
+    """Merge (D, Bq, k_loc) per-shard candidates into the global top-K.
+
+    Candidates are sorted by GLOBAL slot id before the final ``top_k`` so
+    ties break by lowest global index — exactly ``lax.top_k``'s rule on
+    the unsharded slab — making the merge bit-exact vs the single-device
+    engine.  Consuming the shard-stacked candidates here is the single
+    all-gather of the design: O(D·K) values + ids, never O(n)."""
+    Bq = cand_vals.shape[1]
+    cv = jnp.transpose(cand_vals, (1, 0, 2)).reshape(Bq, -1)
+    ci = jnp.transpose(cand_idx, (1, 0, 2)).reshape(Bq, -1)
+    ci_s, cv_s = jax.lax.sort((ci, cv), dimension=1, num_keys=1)
+    vals, pos = jax.lax.top_k(cv_s, K)
+    return vals, jnp.take_along_axis(ci_s, pos, axis=1)
+
+
+def make_topk(cfg, mesh, context_fn, *, use_kernel: bool = False,
+              block_n: int = 2048):
+    """impl(params, cache, ctx_ids, ctx_w, *, K) -> ((Bq, K) values,
+    (Bq, K) int32 GLOBAL slot ids), bit-exact vs the single-device
+    engine's ``topk`` (see ``merge_topk``)."""
+    ax = corpus_slab_axis()
+    D = shard_count(mesh)
+    specs = corpus_cache_specs(mesh)
+
+    if use_kernel:
+        from repro.kernels import ops as kops
+
+        def body(params, cache, P_C, a_C, *, k_loc):
+            c = _squeeze_cache(cache)
+            # the kernel's running top-K carries mesh-global ids directly:
+            # local row i on shard s is global slot s + D*i (striping)
+            vals, gi = kops.dplr_corpus_score(
+                c.Q_I, c.lin_I + 0.5 * c.t_I, params["e"], P_C, a_C,
+                valid=c.valid, topk=k_loc, block_n=block_n,
+                index_offset=jax.lax.axis_index(ax), index_stride=D)
+            return vals[None], gi[None]             # (1, Bq, k_loc)
+
+        def impl(params, cache, ctx_ids, ctx_w, *, K):
+            k_loc = min(K, cache.Q_I.shape[0])
+            P_C, s_C, lin_C = context_fn(params, ctx_ids, ctx_w)
+            a_C = params["bias"] + lin_C + 0.5 * s_C
+            sm = shard_map_norep(
+                partial(body, k_loc=k_loc), mesh=mesh,
+                in_specs=(P(), specs, P(None, None, None), P(None)),
+                out_specs=(P(ax, None, None), P(ax, None, None)))
+            cv, ci = sm(params, cache, P_C, a_C)    # (D, Bq, k_loc)
+            return merge_topk(cv, ci, K)
+
+        return impl
+
+    def body(params, cache, P_C, s_C, lin_C, *, k_loc):
+        c = _squeeze_cache(cache)
+        s = masked_slab_scores(params, c.Q_I, c.t_I, c.lin_I, c.valid,
+                               P_C, s_C, lin_C)
+        vals, li = jax.lax.top_k(s, k_loc)
+        gi = li * D + jax.lax.axis_index(ax)        # striped global ids
+        return vals[None], gi[None]                 # (1, Bq, k_loc)
+
+    def impl(params, cache, ctx_ids, ctx_w, *, K):
+        k_loc = min(K, cache.Q_I.shape[0])
+        P_C, s_C, lin_C = context_fn(params, ctx_ids, ctx_w)
+        sm = shard_map(partial(body, k_loc=k_loc), mesh=mesh,
+                       in_specs=(P(), specs, P(None, None, None), P(None),
+                                 P(None)),
+                       out_specs=(P(ax, None, None), P(ax, None, None)))
+        cv, ci = sm(params, cache, P_C, s_C, lin_C)
+        return merge_topk(cv, ci, K)
+
+    return impl

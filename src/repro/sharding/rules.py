@@ -112,6 +112,45 @@ def recsys_param_specs(params_shape: dict, mesh) -> dict:
 
 
 # ---------------------------------------------------------------------------
+# Serving corpus (the mutable item slab)
+# ---------------------------------------------------------------------------
+
+def corpus_slab_axis() -> str:
+    """Mesh axis that carries corpus-slab shards.  The slab rides the
+    ``model`` axis: serving replicas scale over ``data``/``pod`` (every
+    replica holds the full corpus), while ``model`` scales the corpus
+    CAPACITY — each device owns capacity/D slots, so total corpus size is
+    bounded by the mesh's aggregate HBM, not one device's."""
+    return "model"
+
+
+def corpus_cache_specs(mesh) -> "object":
+    """PartitionSpec pytree for a sharded ``ItemCorpusCache``.
+
+    The sharded cache stores every leaf in the PHYSICAL (local, D, ...)
+    layout of ``repro.serving.sharded``: axis 0 is the shard-local slot,
+    axis 1 the owning shard.  Global slot ``g`` lives at
+    ``(g // D, g % D)`` — slots are STRIPED round-robin across shards so
+    that slab doubling (which grows axis 0 only) never renumbers a live
+    slot.  Axis 1 shards over the model axis; axis 0 and the trailing
+    (rho, k) dims stay local.
+    """
+    from repro.serving.corpus import ItemCorpusCache
+    ax = corpus_slab_axis()
+    return ItemCorpusCache(
+        Q_I=P(None, ax, None, None),    # (local, D, rho, k)
+        t_I=P(None, ax),                # (local, D)
+        lin_I=P(None, ax),              # (local, D)
+        valid=P(None, ax),              # (local, D)
+    )
+
+
+def corpus_slab_spec(mesh) -> P:
+    """Spec for the physical-layout id/weight slabs (local, D, n_slots)."""
+    return P(None, corpus_slab_axis(), None)
+
+
+# ---------------------------------------------------------------------------
 # GNN family
 # ---------------------------------------------------------------------------
 

@@ -1,0 +1,124 @@
+"""Docs health checks (the CI docs job).
+
+Two checks, both rooted at the repo top level:
+
+  --links       every intra-repo markdown link ([text](path) with a
+                relative target) must resolve to an existing file, and
+                same-file anchor links (#heading) must match a heading.
+  --quickstart  extract the ```bash fenced block(s) from README.md's
+                "Quickstart" section and EXECUTE each command — the
+                README's commands are green by construction, not by
+                promise.  Backslash-continued lines are joined; comment
+                and blank lines are skipped.
+
+    python tools/check_docs.py --links --quickstart
+"""
+from __future__ import annotations
+
+import argparse
+import os
+import re
+import subprocess
+import sys
+
+REPO = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+
+DOC_FILES = ["README.md", "ROADMAP.md", "PAPER.md", "PAPERS.md",
+             "CHANGES.md", "ISSUE.md"]
+
+LINK_RE = re.compile(r"\[[^\]]*\]\(([^)\s]+)\)")
+HEADING_RE = re.compile(r"^#{1,6}\s+(.*)$", re.MULTILINE)
+
+
+def _doc_paths() -> list[str]:
+    out = [p for p in DOC_FILES if os.path.exists(os.path.join(REPO, p))]
+    docs_dir = os.path.join(REPO, "docs")
+    if os.path.isdir(docs_dir):
+        out += [os.path.join("docs", f) for f in sorted(os.listdir(docs_dir))
+                if f.endswith(".md")]
+    return out
+
+
+def _anchor(heading: str) -> str:
+    """GitHub-style anchor: lowercase, strip punctuation, dashes."""
+    h = re.sub(r"[`*_,()§:/·—’'\".?!+]", "", heading.strip().lower())
+    return re.sub(r"\s+", "-", h).strip("-")
+
+
+def check_links() -> int:
+    failures = 0
+    for rel in _doc_paths():
+        path = os.path.join(REPO, rel)
+        text = open(path, encoding="utf-8").read()
+        # fenced code blocks are neither prose links nor headings (a
+        # '# comment' line in a bash block is not an anchor on GitHub)
+        prose = re.sub(r"```.*?```", "", text, flags=re.DOTALL)
+        anchors = {_anchor(h) for h in HEADING_RE.findall(prose)}
+        for target in LINK_RE.findall(prose):
+            if target.startswith(("http://", "https://", "mailto:")):
+                continue
+            if target.startswith("#"):
+                if target[1:] not in anchors:
+                    print(f"BROKEN ANCHOR  {rel}: {target}")
+                    failures += 1
+                continue
+            file_part = target.split("#", 1)[0]
+            resolved = os.path.normpath(
+                os.path.join(os.path.dirname(path), file_part))
+            if not os.path.exists(resolved):
+                print(f"BROKEN LINK    {rel}: {target}")
+                failures += 1
+    print(f"links: {'FAIL' if failures else 'ok'} "
+          f"({len(_doc_paths())} files checked)")
+    return failures
+
+
+def quickstart_commands() -> list[str]:
+    text = open(os.path.join(REPO, "README.md"), encoding="utf-8").read()
+    m = re.search(r"^##\s+Quickstart\s*$(.*?)(?=^##\s|\Z)", text,
+                  re.MULTILINE | re.DOTALL)
+    if not m:
+        raise SystemExit("README.md has no '## Quickstart' section")
+    blocks = re.findall(r"```bash\n(.*?)```", m.group(1), re.DOTALL)
+    if not blocks:
+        raise SystemExit("README Quickstart has no ```bash block")
+    cmds = []
+    for block in blocks:
+        joined = block.replace("\\\n", " ")
+        for line in joined.splitlines():
+            line = line.strip()
+            if line and not line.startswith("#"):
+                cmds.append(line)
+    return cmds
+
+
+def check_quickstart() -> int:
+    failures = 0
+    for cmd in quickstart_commands():
+        print(f"$ {cmd}", flush=True)
+        r = subprocess.run(cmd, shell=True, cwd=REPO)
+        if r.returncode != 0:
+            print(f"QUICKSTART COMMAND FAILED ({r.returncode}): {cmd}")
+            failures += 1
+    print(f"quickstart: {'FAIL' if failures else 'ok'}")
+    return failures
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--links", action="store_true")
+    ap.add_argument("--quickstart", action="store_true")
+    args = ap.parse_args()
+    if not (args.links or args.quickstart):
+        args.links = args.quickstart = True
+    failures = 0
+    if args.links:
+        failures += check_links()
+    if args.quickstart:
+        failures += check_quickstart()
+    if failures:
+        sys.exit(1)
+
+
+if __name__ == "__main__":
+    main()
