@@ -1,43 +1,39 @@
-"""Benchmark driver: one module per paper table/figure + the roofline
-report.  ``python -m benchmarks.run [--quick]`` prints one CSV-ish line per
-measurement (prefix identifies the table).
+"""Benchmark driver: one module per paper table/figure plus the serving-
+system benchmarks.  ``python -m benchmarks.run [--quick] [--only NAME]``
+prints one CSV-ish line per measurement (prefix identifies the table).
+
+The benchmark set, its execution order, and the one-line description each
+``--help`` and ``docs/benchmarks.md`` show all come from ONE place:
+``benchmarks.registry.BENCHMARKS`` (the docs CI job asserts the
+descriptions appear verbatim in the methodology page, so code and docs
+cannot drift).  Methodology — what each line means and which paper
+figure/table it reproduces — lives in docs/benchmarks.md.
 """
 from __future__ import annotations
 
 import argparse
+import importlib
 import time
 import traceback
 
+from benchmarks.registry import BENCHMARKS, describe
+
 
 def main() -> None:
-    ap = argparse.ArgumentParser()
+    ap = argparse.ArgumentParser(
+        formatter_class=argparse.RawDescriptionHelpFormatter,
+        epilog="benchmarks (run in this order; see docs/benchmarks.md):\n"
+               + describe())
     ap.add_argument("--quick", action="store_true",
                     help="reduced sizes/steps (CI mode)")
-    ap.add_argument("--only", default=None,
-                    help="run a single benchmark module by name")
+    ap.add_argument("--only", default=None, choices=sorted(BENCHMARKS),
+                    help="run a single benchmark by registry name")
     args = ap.parse_args()
 
-    from benchmarks import (corpus_churn, corpus_shard, fig1_latency,
-                            fig2_posthoc, roofline, serving_engine,
-                            table1_accuracy, table2_proprietary,
-                            table3_serving)
-
-    modules = {
-        "table1": table1_accuracy,
-        "table2": table2_proprietary,
-        "table3": table3_serving,
-        "fig1": fig1_latency,
-        "fig2": fig2_posthoc,
-        "roofline": roofline,
-        "serving": serving_engine,
-        "churn": corpus_churn,
-        "shard": corpus_shard,
-    }
-    if args.only:
-        modules = {args.only: modules[args.only]}
-
+    names = [args.only] if args.only else list(BENCHMARKS)
     failures = 0
-    for name, mod in modules.items():
+    for name in names:
+        mod = importlib.import_module(BENCHMARKS[name][0])
         t0 = time.time()
         print(f"== {name} ==", flush=True)
         try:

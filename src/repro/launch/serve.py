@@ -34,6 +34,17 @@ with O(Δn rho k) in-place writes.  ``--churn-demo`` interleaves
 asserts the jitted scorer NEVER retraces (the recompilation stall the slab
 design removes) and that masked top-K never surfaces a dead slot.
 
+Online frontend: ``--frontend`` replays a Poisson arrival trace (rate
+``--arrival-rate``, 0 = auto-calibrated to ~2x the sync per-query
+capacity) of single-query requests with mixed per-query K through
+``repro.serving.QueryFrontend`` — power-of-two micro-batch coalescing
+(``--fe-batch``, ``--max-wait-ms``) with a depth-``--inflight`` window of
+overlapped async dispatches — AND through sync per-query serving, then
+prints p50/p95/p99 latency + QPS for both.  Asserts zero scorer retraces
+across the mixed workload (including mid-stream churn bursts through the
+writer barrier) and bit-exact reply parity vs one-by-one engine calls.
+Composes with ``--mesh``: the same trace runs against the sharded engine.
+
 Sharded corpus: ``--mesh host`` shards the slab over every local device's
 model axis (CI runs this under
 ``XLA_FLAGS=--xla_force_host_platform_device_count=4``), so corpus
@@ -87,6 +98,125 @@ def _report(tag: str, lat: np.ndarray, queries: int, items: int) -> None:
     print(f"{queries} queries x {items} items ({tag}): "
           f"avg {lat.mean():.2f} ms  P95 {np.percentile(lat, 95):.2f} ms  "
           f"P99 {np.percentile(lat, 99):.2f} ms")
+
+
+def _frontend_demo(args, engine, data) -> None:
+    """Drive a Poisson arrival trace through the micro-batching frontend
+    and through sync per-query serving, and compare latency percentiles
+    and throughput.  Asserts the frontend's contract on the way: zero
+    scorer retraces after warmup (mixed Bq AND mixed K), every reply's
+    slots live at reply time, and bit-exact parity with a one-by-one
+    engine call for a sample of requests."""
+    from repro.serving import QueryFrontend
+    from repro.serving.corpus import next_pow2
+
+    rng = np.random.default_rng(args.seed)
+    max_k = max(args.topk or 10, 1)
+    fe = QueryFrontend(engine, max_batch=args.fe_batch, max_k=max_k,
+                       max_wait=args.max_wait_ms * 1e-3,
+                       inflight=args.inflight)
+    ctx0 = data.context_query(0)["context_ids"]
+    fe.warmup(ctx0)
+    traced = engine.trace_count
+
+    # sync per-query service time -> auto arrival rate (~2x sync capacity,
+    # where coalescing visibly wins and sync visibly queues)
+    k_bucket = next_pow2(max_k)
+    for _ in range(3):
+        jax.block_until_ready(engine.topk(ctx0, k_bucket)[0])
+    t0 = time.perf_counter()
+    for _ in range(10):
+        jax.block_until_ready(engine.topk(ctx0, k_bucket)[0])
+    s1 = (time.perf_counter() - t0) / 10
+    rate = args.arrival_rate or 2.0 / s1
+
+    # one fixed trace served by both paths: Poisson arrivals, mixed K,
+    # a small update-churn burst every 25 requests (through the ENGINE,
+    # to exercise the on_mutate writer barrier mid-stream)
+    n = args.queries
+    arrivals = np.cumsum(rng.exponential(1.0 / rate, n))
+    ks = rng.integers(1, max_k + 1, n)
+    ctxs = [data.context_query(s)["context_ids"] for s in range(n)]
+    churn_at = set(range(25, n, 25))
+
+    def churn(s):
+        upd = data.ranking_query(2, 50_000 + s)
+        fe_slots = rng.choice(engine.valid_slots, 2, replace=False)
+        engine.update_items(fe_slots, upd["item_ids"][0],
+                            upd["item_weights"][0])
+
+    # warm the churn path too (row-compute + scatter trace once), so the
+    # first timed run doesn't pay compilation the second run gets for free
+    churn(-1)
+
+    # -- coalesced (frontend) ----------------------------------------------
+    pend = []
+    t0 = time.perf_counter()
+    for s in range(n):
+        now = time.perf_counter() - t0
+        if arrivals[s] > now:
+            time.sleep(arrivals[s] - now)
+        if s in churn_at:
+            churn(s)
+        pend.append(fe.submit(ctxs[s], k=int(ks[s])))
+    fe.drain()
+    end = time.perf_counter() - t0
+    # completion minus SCHEDULED arrival — symmetric with the sync loop
+    # below, and charges any submit-loop backlog as queueing
+    lat_fe = np.asarray([(p.done_time - t0 - arrivals[s]) * 1e3
+                         for s, p in enumerate(pend)])
+    qps_fe = n / max(end, 1e-9)
+
+    # trace-flat check first: the parity calls below use exact (unbucketed)
+    # Ks on purpose and would add baseline traces of their own
+    assert engine.trace_count == traced, \
+        (f"frontend retraced the scorer: {engine.trace_count} != {traced}")
+    for s in range(n):
+        assert engine.is_live(pend[s].result()[1]).all(), \
+            "frontend surfaced a dead slot"
+    # bit-exact parity vs a fresh one-by-one call is checkable for the
+    # requests scored against the FINAL corpus state, i.e. those
+    # submitted after the last churn burst (earlier replies were
+    # correctly computed on the pre-churn snapshot their batch saw)
+    for s in range((max(churn_at) + 1) if churn_at else 0, n):
+        sc, sl = pend[s].result()
+        wv, wi = engine.topk(np.asarray(ctxs[s]).reshape(1, -1), int(ks[s]))
+        assert np.array_equal(sc, np.asarray(wv)[0]) and \
+            np.array_equal(sl, np.asarray(wi)[0]), \
+            "coalesced reply != one-by-one engine call (must be bit-exact)"
+
+    # -- sync per-query baseline (same trace, no coalescing) ---------------
+    lat_sync = np.empty(n)
+    t0 = time.perf_counter()
+    for s in range(n):
+        now = time.perf_counter() - t0
+        if arrivals[s] > now:
+            time.sleep(arrivals[s] - now)
+        if s in churn_at:
+            churn(s)
+        jax.block_until_ready(
+            engine.topk(ctxs[s], int(next_pow2(int(ks[s]))))[0])
+        lat_sync[s] = (time.perf_counter() - t0 - arrivals[s]) * 1e3
+    qps_sync = n / max(time.perf_counter() - t0, 1e-9)
+
+    def pct(a):
+        return (np.percentile(a, 50), np.percentile(a, 95),
+                np.percentile(a, 99))
+
+    print(f"frontend demo: {n} requests, Poisson {rate:.0f} qps, "
+          f"K in 1..{max_k}, bucket<= {args.fe_batch}, "
+          f"max-wait {args.max_wait_ms:.1f} ms, inflight {args.inflight}, "
+          f"{len(churn_at)} churn bursts")
+    p50, p95, p99 = pct(lat_fe)
+    print(f"  coalesced : p50 {p50:7.2f}  p95 {p95:7.2f}  "
+          f"p99 {p99:7.2f} ms   {qps_fe:7.0f} qps   "
+          f"occupancy {fe.occupancy:.2f} "
+          f"({fe.stats['dispatches']} dispatches)")
+    p50, p95, p99 = pct(lat_sync)
+    print(f"  sync      : p50 {p50:7.2f}  p95 {p95:7.2f}  "
+          f"p99 {p99:7.2f} ms   {qps_sync:7.0f} qps")
+    print(f"  zero-retrace OK ({traced} traces, incl. warmup), replies "
+          f"bit-exact vs one-by-one, all returned slots live")
 
 
 def _churn_demo(args, engine, data) -> None:
@@ -188,6 +318,22 @@ def main(argv=None):
                          "live corpus and assert zero scorer retraces")
     ap.add_argument("--churn-ops", type=int, default=1000,
                     help="number of interleaved churn/score operations")
+    ap.add_argument("--frontend", action="store_true",
+                    help="drive a Poisson arrival trace through the "
+                         "micro-batching query frontend vs sync per-query "
+                         "serving (p50/p95/p99 + QPS; asserts zero "
+                         "retraces and bit-exact replies)")
+    ap.add_argument("--arrival-rate", type=float, default=0.0,
+                    help="frontend demo offered load in qps "
+                         "(0 = auto: ~2x the sync per-query capacity)")
+    ap.add_argument("--max-wait-ms", type=float, default=2.0,
+                    help="frontend coalescing window: max ms a queued "
+                         "request waits before a partial batch dispatches")
+    ap.add_argument("--fe-batch", type=int, default=16,
+                    help="frontend max micro-batch size (power of two)")
+    ap.add_argument("--inflight", type=int, default=2,
+                    help="frontend in-flight dispatch window depth "
+                         "(2 = double buffering)")
     ap.add_argument("--seed", type=int, default=0)
     args = ap.parse_args(argv)
 
@@ -206,9 +352,9 @@ def main(argv=None):
         if not is_dplr or args.mp:
             ap.error("--engine corpus requires a dplr model (and not --mp)")
     elif (args.topk or args.refresh_demo or args.use_pallas
-          or args.churn_demo or args.mesh != "none"):
-        ap.error("--topk/--refresh-demo/--use-pallas/--churn-demo/--mesh "
-                 "require --engine corpus")
+          or args.churn_demo or args.frontend or args.mesh != "none"):
+        ap.error("--topk/--refresh-demo/--use-pallas/--churn-demo/"
+                 "--frontend/--mesh require --engine corpus")
 
     params = mod.init(jax.random.PRNGKey(args.seed), cfg)
     mgr = None
@@ -267,6 +413,8 @@ def main(argv=None):
                   f"device")
         engine.refresh(params, step=(mgr.latest_step() if mgr else None))
 
+        if args.frontend:
+            return _frontend_demo(args, engine, data)
         if args.churn_demo:
             return _churn_demo(args, engine, data)
 

@@ -12,18 +12,31 @@ the engine): D devices each hold capacity/D slots, churn deltas route to
 their owning shard, and top-K merges D device-local top-Ks with O(D·K)
 traffic — corpus capacity then scales with the mesh, not one device's HBM.
 
-    corpus.py  - ItemCorpusCache + build_corpus_cache + corpus_rows +
-                 masked_slab_scores (the precompute and scoring math;
-                 slab/mask invariants documented here)
-    engine.py  - CorpusRankingEngine (batched masked scoring, fused top-K,
-                 add/remove/update_items, slab doubling, checkpoint-refresh
-                 invalidation; same API sharded or not)
-    sharded.py - shard_map implementations of build/write/score/topk
-                 (striped slot ownership, bit-exact candidate merge)
+On top of the batch engine sits the ONLINE request path: ``QueryFrontend``
+accepts individual ranking requests (context, per-query K, optional
+deadline), coalesces them into power-of-two padded micro-batches so the
+jitted scorer never retraces, and keeps a double-buffered in-flight window
+so host-side batch assembly overlaps with device scoring (JAX async
+dispatch).  Churn is serialized against in-flight reads through the
+engine's ``on_mutate`` writer barrier.
+
+    corpus.py   - ItemCorpusCache + build_corpus_cache + corpus_rows +
+                  masked_slab_scores (the precompute and scoring math;
+                  slab/mask invariants documented here)
+    engine.py   - CorpusRankingEngine (batched masked scoring, fused top-K,
+                  add/remove/update_items, slab doubling, checkpoint-refresh
+                  invalidation; same API sharded or not)
+    sharded.py  - shard_map implementations of build/write/score/topk
+                  (striped slot ownership, bit-exact candidate merge)
+    frontend.py - QueryFrontend (request coalescing, bucketed Bq/K,
+                  overlapped dispatch, deadlines, churn/read serialization)
 """
 from repro.serving.corpus import (ItemCorpusCache, build_corpus_cache,
                                   corpus_rows, masked_slab_scores)
 from repro.serving.engine import CorpusRankingEngine
+from repro.serving.frontend import (DeadlineExceeded, FrontendError,
+                                    PendingQuery, QueryFrontend)
 
 __all__ = ["ItemCorpusCache", "build_corpus_cache", "corpus_rows",
-           "masked_slab_scores", "CorpusRankingEngine"]
+           "masked_slab_scores", "CorpusRankingEngine", "QueryFrontend",
+           "PendingQuery", "DeadlineExceeded", "FrontendError"]

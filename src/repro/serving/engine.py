@@ -8,6 +8,15 @@ precomputed item cache (``repro.serving.corpus``).  Compare Algorithm 1's
 per-query O(rho m_I k + m_I k) per candidate (gather + project), and the
 dense FwFM's O(m_I^2 k).
 
+The engine is the BATCH layer: ``score``/``topk`` take an already-
+assembled (Bq, m_C_slots) context batch and are non-blocking (they return
+device arrays under JAX async dispatch; reading a result blocks).  Online
+traffic — one request at a time, each with its own K and deadline — goes
+through ``repro.serving.frontend.QueryFrontend``, which coalesces
+requests into power-of-two micro-batches, overlaps host assembly with
+device scoring, and serializes churn against in-flight reads via the
+``on_mutate`` writer barrier below.
+
 Mutable corpus (capacity-padded slab + validity mask)
 -----------------------------------------------------
 The deployed corpus churns continuously (ads enter/leave the marketplace,
@@ -153,6 +162,11 @@ class CorpusRankingEngine:
         self._last_polled_sig: tuple | None = None
         self.refresh_count = 0
         self.trace_count = 0      # incremented only when the scorer retraces
+        # writer barrier: called before ANY corpus mutation or model
+        # refresh.  A QueryFrontend installs its drain() here so churn is
+        # serialized against in-flight micro-batches (single-writer /
+        # many-reader) — see repro.serving.frontend.
+        self.on_mutate = None
 
         self._context = jax.jit(self._context_impl)
         self._rows = jax.jit(self._rows_impl)
@@ -301,6 +315,15 @@ class CorpusRankingEngine:
 
     # -- corpus mutation (the churn path) -----------------------------------
 
+    def _begin_write(self) -> None:
+        """Run the writer barrier (if installed) before mutating the
+        corpus or swapping the model.  With a ``QueryFrontend`` attached
+        this drains every queued and in-flight micro-batch first, so no
+        reader ever observes a half-applied write and every reply is
+        delivered against the snapshot its batch was dispatched on."""
+        if self.on_mutate is not None:
+            self.on_mutate()
+
     def _alloc_slot(self) -> int:
         """Pop the lowest-numbered free GLOBAL slot across the per-shard
         heaps.  The order is identical to a single global heap (striping:
@@ -370,8 +393,11 @@ class CorpusRankingEngine:
     def add_items(self, ids, weights=None) -> np.ndarray:
         """Insert Δn items; returns their (Δn,) corpus slot indices (stable
         until removed).  O(Δn rho k) — one row-compute + one scatter
-        dispatch; doubles the slab first if the free-list runs dry."""
+        dispatch; doubles the slab first if the free-list runs dry.
+        Blocking behavior: returns after the scatter is *dispatched* (not
+        complete); runs the writer barrier first (see ``_begin_write``)."""
         self._require_ready()
+        self._begin_write()
         ids, w = self._payload(ids, weights, "add_items")
         dn = ids.shape[0]
         if dn > self._n_free:
@@ -384,6 +410,7 @@ class CorpusRankingEngine:
         """Rewrite the items at the given live slots in place (same cost
         shape as ``add_items``); slot assignments are unchanged."""
         self._require_ready()
+        self._begin_write()
         slots = np.asarray(indices, np.int32).reshape(-1)
         self._check_live(slots, "update_items")
         ids, w = self._payload(ids, weights, "update_items",
@@ -394,6 +421,7 @@ class CorpusRankingEngine:
         """Invalidate the given live slots (their rows become free; masked
         scoring pins them to -inf immediately).  One scatter dispatch."""
         self._require_ready()
+        self._begin_write()
         slots = np.asarray(indices, np.int32).reshape(-1)
         self._check_live(slots, "remove_items")
         self._valid_np[slots] = False
@@ -457,6 +485,7 @@ class CorpusRankingEngine:
         cache intact.  Sharded: each device rebuilds only its own
         capacity/D rows (the global-order host slab reshapes to the
         physical (local, D) view for free, because ownership is striped)."""
+        self._begin_write()
         self.params = params
         if self.mesh is None:
             self.cache = self._build(params, jnp.asarray(self._slab_ids),
@@ -518,7 +547,13 @@ class CorpusRankingEngine:
 
     def score(self, context_ids, context_weights=None) -> jax.Array:
         """(Bq, capacity) scores for a batch of query contexts; dead slots
-        score exactly ``NEG_INF``."""
+        score exactly ``NEG_INF``.
+
+        ``context_ids``: (Bq, m_C_slots) int32 local context slot ids;
+        ``context_weights``: matching float (defaults to ones in
+        ``cfg.dtype``).  Output dtype follows ``cfg.dtype``.  Non-
+        blocking: returns a device array under JAX async dispatch —
+        ``np.asarray``/``block_until_ready`` is where the wait happens."""
         self._require_ready()
         ids, w = self._ctx_arrays(context_ids, context_weights)
         if self.use_pallas_kernel:
@@ -529,7 +564,16 @@ class CorpusRankingEngine:
         """((Bq, K) scores, (Bq, K) int32 corpus slot indices) — only the
         winners leave the scorer, not the (Bq, capacity) logit matrix.
         Masked: a dead slot can never be returned (K is checked against the
-        LIVE item count, not the slab capacity)."""
+        LIVE item count, not the slab capacity).
+
+        Rows are sorted best-first with ``lax.top_k`` tie-breaking
+        (lowest slot id wins — preserved bit-exactly by the sharded
+        merge), so truncating a top-``K`` result to any ``K' < K`` IS the
+        top-``K'`` result — the property the frontend's one-max-K-
+        dispatch-per-batch design rests on.  Non-blocking, like
+        ``score``.  K is static under jit: each distinct K traces once
+        (the frontend quantizes K to power-of-two buckets for exactly
+        this reason)."""
         self._require_ready()
         if not 0 < K <= self.n_items:
             raise ValueError(

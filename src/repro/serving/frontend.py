@@ -1,0 +1,454 @@
+"""Async micro-batching query frontend (the online request path).
+
+``CorpusRankingEngine`` scores a *batch* of query contexts in one jitted
+dispatch, but an online service receives queries one at a time, each with
+its own K and latency budget.  ``QueryFrontend`` is the layer in between:
+it accepts individual ranking requests, coalesces them into power-of-two
+padded micro-batches, and keeps a bounded window of dispatched-but-
+unresolved batches in flight so host-side work for batch N+1 overlaps
+with device scoring of batch N.
+
+Request lifecycle (see docs/frontend.md for the full walkthrough):
+
+    submit ──► queue ──► [bucket Bq, pad] ──► dispatch (async) ──► in-flight
+                                                                     │
+    reply  ◄── truncate to per-query K ◄── resolve (block) ◄─────────┘
+
+Coalescing and the retrace invariant
+------------------------------------
+A jitted scorer retraces on every new (Bq, K) shape, so the frontend
+quantizes both:
+
+  * **Bq buckets** — a micro-batch of q queries pads up to the next power
+    of two ``<= max_batch`` by repeating a real context row (padding rows
+    are scored and discarded; per-row scores are independent, so real
+    rows are bit-identical to a lone dispatch of the same context);
+  * **K buckets**  — one dispatch serves every K in the batch: the engine
+    runs top-``K_pad`` where ``K_pad = next_pow2(max K)``, and each reply
+    is the host-side truncation to its own K (exact: ``lax.top_k`` output
+    is sorted, so the first K of top-``K_pad`` IS top-K).
+
+The reachable shape set is therefore the fixed grid (Bq buckets x K
+buckets): ``warmup()`` traces it once, and after that arbitrary arrival
+patterns, batch sizes, and per-query Ks cause ZERO retraces (asserted by
+``tests/test_frontend.py`` and the ``--frontend`` demo).
+
+Overlapped dispatch (the async window)
+--------------------------------------
+``engine.topk`` returns device arrays immediately (JAX async dispatch);
+nothing blocks until a result is *read*.  The frontend exploits that with
+a depth-``inflight`` window (default 2, i.e. double buffering):
+
+    host:    assemble B0 ─ dispatch B0 ─ assemble B1 ─ dispatch B1 ─ resolve B0 …
+    device:               └─ score B0 ──────────────────┘└─ score B1 ─ …
+
+Batch N's replies are materialized (one blocking host sync) only when
+the window is full, the caller asks for a result, or the frontend drains
+— by which time batch N+1's assembly and context transfer already
+happened *under* batch N's device time.
+
+Churn vs in-flight reads (single-writer / many-reader)
+------------------------------------------------------
+Corpus mutations and model refreshes are serialized against in-flight
+queries: constructing a frontend installs ``engine.on_mutate = drain``,
+so ANY writer entry point (``add_items`` / ``remove_items`` /
+``update_items`` / ``refresh``) first flushes queued requests and
+resolves every in-flight batch.  Every reply is therefore computed — and
+delivered — against the corpus snapshot that was live when its batch was
+dispatched, and a returned slot id is live at reply time: churn can
+never surface a dead slot through the frontend (tested).
+
+The ``on_mutate`` hook alone makes this airtight when reads and writes
+share one thread (the event-loop discipline).  A SEPARATE writer thread
+must mutate through the frontend's own ``add_items`` / ``remove_items``
+/ ``update_items`` / ``refresh`` wrappers, which hold the frontend lock
+across the barrier AND the engine write — otherwise a submit could
+dispatch between the drain and the mask update and deliver slots the
+in-progress churn is about to kill.
+
+Deadlines
+---------
+A request may carry an absolute ``deadline`` (frontend-clock seconds).
+A request still queued past its deadline is failed with
+``DeadlineExceeded`` at the next dispatch — a clean error, never a score
+computed against a stale corpus.  Once dispatched, a request is always
+answered (the answer is correct; lateness is the caller's policy).
+
+The frontend is an event-loop-style coalescer, not a thread pool: one
+thread calls ``submit``/``pump``/``result``; a separate churn thread is
+supported via the frontend's writer wrappers (above).  All public entry
+points are non-blocking except ``PendingQuery.result``, ``drain``, and
+the writer wrappers.
+"""
+from __future__ import annotations
+
+import collections
+import threading
+import time
+
+import numpy as np
+
+from repro.serving.corpus import next_pow2
+
+
+class DeadlineExceeded(RuntimeError):
+    """The request's deadline passed while it was still queued."""
+
+
+class FrontendError(RuntimeError):
+    """A micro-batch dispatch failed; carried to every request in it."""
+
+
+class PendingQuery:
+    """Future-like handle for one submitted ranking request.
+
+    ``result()`` returns ``(scores, slots)`` — ``(K,) float`` scores and
+    ``(K,) int32`` corpus slot indices, best first — blocking until the
+    request's micro-batch resolves (and forcing a flush if it is still
+    queued).  ``done()`` never blocks.  ``submit_time``/``done_time`` are
+    frontend-clock stamps for latency accounting.
+    """
+
+    __slots__ = ("k", "deadline", "submit_time", "done_time",
+                 "_frontend", "_ctx", "_w", "_scores", "_slots", "_error")
+
+    def __init__(self, frontend, ctx, w, k, deadline, submit_time):
+        self.k = k
+        self.deadline = deadline
+        self.submit_time = submit_time
+        self.done_time = None
+        self._frontend = frontend
+        self._ctx = ctx
+        self._w = w
+        self._scores = None
+        self._slots = None
+        self._error = None
+
+    def done(self) -> bool:
+        return self.done_time is not None
+
+    def result(self):
+        """((K,) scores, (K,) int32 slot ids).  Blocks: flushes the queue
+        if needed, then resolves in-flight batches up to this one.  Raises
+        ``DeadlineExceeded``/``FrontendError`` if the request failed."""
+        if not self.done():
+            self._frontend._resolve_until(self)
+        if self._error is not None:
+            raise self._error
+        return self._scores, self._slots
+
+    def _finish(self, scores, slots, now):
+        self._scores, self._slots = scores, slots
+        self.done_time = now
+        self._frontend = self._ctx = self._w = None
+
+    def _fail(self, err, now):
+        self._error = err
+        self.done_time = now
+        self._frontend = self._ctx = self._w = None
+
+
+class _InFlight:
+    """One dispatched-but-unresolved micro-batch: the device arrays plus
+    the requests (in row order) awaiting truncation."""
+
+    __slots__ = ("requests", "vals", "idx")
+
+    def __init__(self, requests, vals, idx):
+        self.requests = requests
+        self.vals = vals
+        self.idx = idx
+
+
+class QueryFrontend:
+    """Coalesces individual ranking requests into micro-batched, overlap-
+    dispatched ``engine.topk`` calls.
+
+    Parameters
+    ----------
+    engine : CorpusRankingEngine
+        The scoring backend (single-device or mesh-sharded — the frontend
+        is agnostic; it only calls ``engine.topk``).  The frontend
+        installs itself as ``engine.on_mutate``, so corpus churn and
+        model refresh drain in-flight queries first (one frontend per
+        engine).
+    max_batch : int
+        Largest micro-batch (power of two).  Bq buckets are
+        ``1, 2, 4, …, max_batch``; a full bucket dispatches immediately.
+    max_k : int
+        Largest accepted per-request K.  K buckets are the powers of two
+        up to ``next_pow2(max_k)``.
+    max_wait : float
+        Seconds a queued request may age before the queue is force-
+        dispatched at the next ``pump`` — the latency/occupancy knob.
+    inflight : int
+        Depth of the unresolved-dispatch window (2 = double buffering).
+        Dispatching past the window resolves the oldest batch first.
+    clock : callable
+        Time source (seconds).  Injectable for deterministic tests and
+        trace-replay simulation; defaults to ``time.perf_counter``.
+    """
+
+    def __init__(self, engine, *, max_batch: int = 16, max_k: int = 16,
+                 max_wait: float = 2e-3, inflight: int = 2,
+                 clock=time.perf_counter):
+        if max_batch < 1 or max_batch & (max_batch - 1):
+            raise ValueError(f"max_batch must be a power of two, "
+                             f"got {max_batch}")
+        if max_k < 1:
+            raise ValueError(f"max_k must be >= 1, got {max_k}")
+        if inflight < 1:
+            raise ValueError(f"inflight depth must be >= 1, got {inflight}")
+        self.engine = engine
+        self.max_batch = max_batch
+        self.max_k = max_k
+        self.max_wait = float(max_wait)
+        self.inflight = inflight
+        self.clock = clock
+        self._n_ctx_slots = len(engine.cfg.layout.slots_of("context"))
+        self._queue: collections.deque[PendingQuery] = collections.deque()
+        self._window: collections.deque[_InFlight] = collections.deque()
+        self._lock = threading.RLock()
+        # the writer barrier: any engine mutation drains this frontend
+        # BEFORE touching the corpus (single-writer / many-reader)
+        engine.on_mutate = self.drain
+        self.stats = {"submitted": 0, "completed": 0, "expired": 0,
+                      "failed": 0, "dispatches": 0, "dispatched_rows": 0,
+                      "padded_rows": 0, "drains": 0}
+
+    # -- request ingress ----------------------------------------------------
+
+    def submit(self, context_ids, context_weights=None, *, k: int = 10,
+               deadline: float | None = None) -> PendingQuery:
+        """Enqueue one ranking request; returns its ``PendingQuery``.
+
+        ``context_ids``: (n_context_slots,) int — ONE query's context
+        (a leading unit axis is squeezed).  ``k``: winners wanted,
+        ``1 <= k <= max_k``.  ``deadline``: absolute frontend-clock time
+        after which the request must fail rather than be served late.
+        Non-blocking; runs a ``pump`` so a full bucket dispatches at once.
+        """
+        ctx = np.asarray(context_ids, np.int32).reshape(-1)
+        if ctx.shape[0] != self._n_ctx_slots:
+            raise ValueError(f"context has {ctx.shape[0]} slots, layout "
+                             f"expects {self._n_ctx_slots}")
+        w = (np.ones(ctx.shape, np.float32) if context_weights is None
+             else np.asarray(context_weights, np.float32).reshape(-1))
+        if w.shape != ctx.shape:
+            raise ValueError(f"context_weights shape {w.shape} != "
+                             f"context shape {ctx.shape}")
+        if not 1 <= k <= self.max_k:
+            raise ValueError(f"k={k} outside [1, max_k={self.max_k}]")
+        with self._lock:
+            now = self.clock()
+            req = PendingQuery(self, ctx, w, int(k), deadline, now)
+            self._queue.append(req)
+            self.stats["submitted"] += 1
+            self.pump(now)
+        return req
+
+    # -- batching policy ----------------------------------------------------
+
+    def pump(self, now: float | None = None) -> int:
+        """Advance the frontend: dispatch every full ``max_batch`` bucket,
+        plus the partial tail once its oldest request has aged past
+        ``max_wait``.  Call this from the serving loop on every arrival
+        (and on ticks while idle); non-blocking unless the in-flight
+        window must evict.  Returns the number of batches dispatched."""
+        with self._lock:
+            if now is None:
+                now = self.clock()
+            n = 0
+            while len(self._queue) >= self.max_batch:
+                self._dispatch(self._take(self.max_batch), now)
+                n += 1
+            if self._queue and (
+                    now - self._queue[0].submit_time >= self.max_wait):
+                self._dispatch(self._take(len(self._queue)), now)
+                n += 1
+            return n
+
+    def flush(self) -> int:
+        """Dispatch everything queued regardless of age (still async —
+        does not resolve).  Returns the number of batches dispatched."""
+        with self._lock:
+            now = self.clock()
+            n = 0
+            while self._queue:
+                self._dispatch(self._take(min(len(self._queue),
+                                              self.max_batch)), now)
+                n += 1
+            return n
+
+    def drain(self) -> None:
+        """Flush the queue and resolve EVERY in-flight batch (blocking).
+        This is the writer barrier: the engine calls it (via
+        ``on_mutate``) before any corpus mutation or model refresh."""
+        with self._lock:
+            self.stats["drains"] += 1
+            self.flush()
+            while self._window:
+                self._resolve_oldest()
+
+    # -- writer entry points (atomic barrier + mutation) --------------------
+    #
+    # Calling the engine's mutators directly still drains the frontend
+    # first (the on_mutate hook), which fully serializes churn in the
+    # single-threaded event-loop discipline.  A SEPARATE writer thread
+    # must mutate through these wrappers instead: they hold the frontend
+    # lock across barrier AND mutation, so no submit can slip a dispatch
+    # in between drain and the mask update (which could deliver slots the
+    # in-progress churn is about to kill).
+
+    def add_items(self, ids, weights=None):
+        """``engine.add_items`` under the frontend lock (drain + write
+        atomic vs concurrent submits); returns the new slot indices."""
+        with self._lock:
+            return self.engine.add_items(ids, weights)
+
+    def remove_items(self, indices) -> None:
+        """``engine.remove_items`` under the frontend lock."""
+        with self._lock:
+            self.engine.remove_items(indices)
+
+    def update_items(self, indices, ids, weights=None) -> None:
+        """``engine.update_items`` under the frontend lock."""
+        with self._lock:
+            self.engine.update_items(indices, ids, weights)
+
+    def refresh(self, params, step=None) -> None:
+        """``engine.refresh`` (model hot-swap) under the frontend lock."""
+        with self._lock:
+            self.engine.refresh(params, step=step)
+
+    def maybe_refresh(self, manager, template, select=lambda t: t) -> bool:
+        """``engine.maybe_refresh`` under the frontend lock."""
+        with self._lock:
+            return self.engine.maybe_refresh(manager, template,
+                                             select=select)
+
+    def _take(self, m: int) -> list[PendingQuery]:
+        return [self._queue.popleft() for _ in range(m)]
+
+    # -- dispatch (async) ---------------------------------------------------
+
+    def _k_dispatch(self, reqs) -> int:
+        """Bucketed dispatch K: next_pow2(max requested K), lowered only
+        if the live item count sits below the bucket (rare; may trace).
+        Callers guarantee every request's k <= the live item count."""
+        k_max = max(r.k for r in reqs)
+        k_pad = next_pow2(k_max)
+        n_live = self.engine.n_items
+        while k_pad > n_live:
+            k_pad //= 2
+        return max(k_pad, k_max)
+
+    def _dispatch(self, reqs: list[PendingQuery], now: float) -> None:
+        """Assemble one micro-batch and launch it (async).  Requests
+        fail here — before scoring — individually: past-deadline ones
+        with ``DeadlineExceeded``, ones whose k exceeds the live corpus
+        (churn shrank it since submit) with ``FrontendError``; neither
+        poisons its batchmates."""
+        n_live_items = self.engine.n_items
+        live = []
+        for r in reqs:
+            if r.deadline is not None and now > r.deadline:
+                self.stats["expired"] += 1
+                r._fail(DeadlineExceeded(
+                    f"deadline exceeded after "
+                    f"{(now - r.submit_time) * 1e3:.2f} ms in queue"), now)
+            elif r.k > n_live_items:
+                self.stats["failed"] += 1
+                r._fail(FrontendError(
+                    f"k={r.k} exceeds the live corpus "
+                    f"({n_live_items} items)"), now)
+            else:
+                live.append(r)
+        if not live:
+            return
+        bq = min(next_pow2(len(live)), self.max_batch)
+        pad = bq - len(live)
+        # pad with a REAL context row: per-row scoring is independent, so
+        # real rows stay bit-identical and the filler rows cost no trace
+        ctx = np.stack([r._ctx for r in live] + [live[0]._ctx] * pad)
+        w = np.stack([r._w for r in live] + [live[0]._w] * pad)
+        k_pad = self._k_dispatch(live)
+        try:
+            # async dispatch: engine.topk returns device arrays without
+            # blocking — the device scores while the host assembles the
+            # next micro-batch (the overlap this frontend exists for)
+            vals, idx = self.engine.topk(ctx, k_pad, w)
+        except Exception as e:                    # noqa: BLE001 — carried
+            fail = FrontendError(f"micro-batch dispatch failed: {e}")
+            for r in live:
+                self.stats["failed"] += 1
+                r._fail(fail, now)
+            return
+        self.stats["dispatches"] += 1
+        self.stats["dispatched_rows"] += bq
+        self.stats["padded_rows"] += pad
+        self._window.append(_InFlight(live, vals, idx))
+        while len(self._window) > self.inflight:
+            self._resolve_oldest()
+
+    # -- resolution (the only blocking step) --------------------------------
+
+    def _resolve_oldest(self) -> None:
+        fl = self._window.popleft()
+        vals = np.asarray(fl.vals)     # blocks until the device finishes
+        idx = np.asarray(fl.idx)
+        now = self.clock()
+        for row, r in enumerate(fl.requests):
+            # host-side truncation: top-k_pad is sorted best-first, so
+            # its first k entries ARE the top-k (bit-exact)
+            r._finish(vals[row, :r.k], idx[row, :r.k], now)
+            self.stats["completed"] += 1
+
+    def _resolve_until(self, req: PendingQuery) -> None:
+        with self._lock:
+            if not req.done():
+                self.flush()
+            while not req.done() and self._window:
+                self._resolve_oldest()
+            if not req.done():
+                raise RuntimeError("request neither queued nor in flight")
+
+    # -- warmup -------------------------------------------------------------
+
+    def warmup(self, context_ids, context_weights=None) -> int:
+        """Trace the full reachable (Bq bucket x K bucket) grid once with
+        a representative context, so steady-state traffic — any arrival
+        pattern, any mix of Ks — retraces NOTHING.  Returns the number of
+        warmup dispatches.  Call after ``engine.refresh``."""
+        ctx = np.asarray(context_ids, np.int32).reshape(-1)
+        w = (np.ones(ctx.shape, np.float32) if context_weights is None
+             else np.asarray(context_weights, np.float32).reshape(-1))
+        n = 0
+        bq = 1
+        while bq <= self.max_batch:
+            ids_b = np.broadcast_to(ctx, (bq, ctx.shape[0]))
+            w_b = np.broadcast_to(w, (bq, w.shape[0]))
+            k = 1
+            while k <= min(next_pow2(self.max_k), self.engine.n_items):
+                self.engine.topk(ids_b, k, w_b)
+                n += 1
+                k *= 2
+            bq *= 2
+        return n
+
+    # -- convenience --------------------------------------------------------
+
+    @property
+    def queue_depth(self) -> int:
+        return len(self._queue)
+
+    @property
+    def inflight_depth(self) -> int:
+        return len(self._window)
+
+    @property
+    def occupancy(self) -> float:
+        """Real-request fraction of dispatched micro-batch rows (1.0 =
+        every dispatched row was a live query, no bucket padding)."""
+        rows = self.stats["dispatched_rows"]
+        return 1.0 if rows == 0 else 1.0 - self.stats["padded_rows"] / rows

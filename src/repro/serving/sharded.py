@@ -54,6 +54,24 @@ any slot in the true global top-K is within its own shard's top-``k_loc``
 (if ``k_loc < K`` then ``k_loc = local_cap`` and the shard contributes
 everything), and with ``K <= n_items`` live candidates always outrank the
 ``NEG_INF`` dead-slot fillers a sparse shard may contribute.
+
+Public entry points (all consumed by ``CorpusRankingEngine``; callers —
+including the query frontend — never touch this module directly).  Every
+``make_*`` returns a traceable impl the engine wraps in ``jax.jit``; like
+the rest of the serving stack the impls are non-blocking under JAX async
+dispatch.  Caches use the physical ``(capacity/D, D, ...)`` view:
+
+    make_build(cfg, mesh)(params, ids, w, valid)      -> ItemCorpusCache
+        ids/w: (cap/D, D, m_I_slots) int32/float;  valid: (cap/D, D) bool
+    make_write(mesh)(cache, Q, t, lin, gidx)          -> ItemCorpusCache
+        Q: (Δ, rho, k), t/lin: (Δ,), gidx: (Δ,) GLOBAL slots (pad = cap)
+    make_drop(mesh)(cache, gidx)                      -> ItemCorpusCache
+    make_score(cfg, mesh, context_fn)(params, cache, ctx_ids, ctx_w)
+        -> (Bq, capacity) scores in GLOBAL slot order, dtype = cfg.dtype
+    make_topk(cfg, mesh, context_fn)(params, cache, ctx_ids, ctx_w, K=...)
+        -> ((Bq, K) values, (Bq, K) int32 global slot ids), K static
+    merge_topk(cand_vals, cand_idx, K)
+        (D, Bq, k_loc) per-shard candidates -> the global ((Bq, K) x 2)
 """
 from __future__ import annotations
 

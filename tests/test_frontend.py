@@ -1,0 +1,354 @@
+"""Micro-batching query frontend: bit-exact coalesced-vs-one-by-one
+parity across mixed per-query K, zero scorer retraces across arbitrary
+arrival patterns, churn serialized against in-flight reads (a reply can
+never surface a slot that churn killed before delivery), clean deadline
+errors, and composition with the mesh-sharded engine.
+
+Run under ``XLA_FLAGS=--xla_force_host_platform_device_count=4`` (the CI
+sharded step) the sharded-composition tests exercise a genuinely 4-way
+slab; a plain run covers the D=1 degenerate case of the same code path.
+"""
+import numpy as np
+import pytest
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.fields import uniform_layout
+from repro.data.synthetic_ctr import SyntheticCTR
+from repro.launch.mesh import make_host_mesh
+from repro.models.recsys import fwfm
+from repro.serving import (CorpusRankingEngine, DeadlineExceeded,
+                           FrontendError, QueryFrontend)
+
+
+def _setup(nC=5, nI=4, vocab=50, k=8, rho=2, n=37, seed=0, **engine_kw):
+    layout = uniform_layout(nC, nI, vocab)
+    cfg = fwfm.FwFMConfig(layout=layout, embed_dim=k, interaction="dplr",
+                          rank=rho)
+    params = fwfm.init(jax.random.PRNGKey(seed), cfg)
+    data = SyntheticCTR(layout, embed_dim=4, seed=seed)
+    q = data.ranking_query(n, seed)
+    engine = CorpusRankingEngine(cfg, q["item_ids"][0], q["item_weights"][0],
+                                 **engine_kw)
+    engine.refresh(params, step=0)
+    return cfg, params, data, engine
+
+
+class FakeClock:
+    """Deterministic frontend clock for max-wait/deadline tests."""
+
+    def __init__(self):
+        self.t = 0.0
+
+    def __call__(self) -> float:
+        return self.t
+
+
+def _ctx(data, s):
+    return data.context_query(s)["context_ids"]
+
+
+# ---------------------------------------------------------------------------
+# Parity: coalesced micro-batches == one-by-one engine calls, bit-exact
+# ---------------------------------------------------------------------------
+
+def test_coalesced_bitexact_vs_one_by_one_mixed_k():
+    _, _, data, engine = _setup(n=37)
+    fe = QueryFrontend(engine, max_batch=8, max_k=8, max_wait=1e9)
+    rng = np.random.default_rng(0)
+    reqs = [(fe.submit(_ctx(data, s), k=int(rng.integers(1, 9))))
+            for s in range(23)]          # 2 full buckets + a padded tail
+    fe.drain()
+    assert fe.stats["dispatches"] == 3 and fe.stats["padded_rows"] == 1
+    for s, p in enumerate(reqs):
+        scores, slots = p.result()
+        assert scores.shape == (p.k,) and slots.shape == (p.k,)
+        wv, wi = engine.topk(np.asarray(_ctx(data, s)).reshape(1, -1), p.k)
+        # bucketed-Bq padding and one-max-K-dispatch truncation must be
+        # invisible: BIT-exact against a lone Bq=1 exact-K engine call
+        np.testing.assert_array_equal(scores, np.asarray(wv)[0])
+        np.testing.assert_array_equal(slots, np.asarray(wi)[0])
+
+
+def test_submit_pump_flush_dispatch_policy():
+    _, _, data, engine = _setup(n=37)
+    clock = FakeClock()
+    fe = QueryFrontend(engine, max_batch=4, max_k=4, max_wait=1.0,
+                       clock=clock)
+    a = fe.submit(_ctx(data, 0), k=2)
+    assert fe.queue_depth == 1 and fe.pump() == 0     # young: keeps waiting
+    clock.t = 2.0
+    assert fe.pump() == 1 and fe.queue_depth == 0     # max_wait elapsed
+    assert a.done() or fe.inflight_depth == 1
+    # a full bucket dispatches from submit itself, regardless of age
+    for s in range(4):
+        fe.submit(_ctx(data, s), k=2)
+    assert fe.queue_depth == 0
+    fe.drain()
+    assert a.result()[0].shape == (2,)
+
+
+def test_inflight_window_resolves_oldest():
+    _, _, data, engine = _setup(n=37)
+    fe = QueryFrontend(engine, max_batch=2, max_k=4, max_wait=1e9,
+                       inflight=2)
+    reqs = [fe.submit(_ctx(data, s), k=2) for s in range(6)]
+    # 3 full buckets dispatched; depth-2 window forced batch 0 to resolve
+    assert fe.stats["dispatches"] == 3
+    assert fe.inflight_depth == 2
+    assert reqs[0].done() and reqs[1].done() and not reqs[5].done()
+    fe.drain()
+    assert all(r.done() for r in reqs)
+
+
+# ---------------------------------------------------------------------------
+# Retrace invariant: the warmed (Bq x K) bucket grid covers every arrival
+# ---------------------------------------------------------------------------
+
+def test_zero_retraces_across_arrival_patterns():
+    _, _, data, engine = _setup(n=37)
+    fe = QueryFrontend(engine, max_batch=8, max_k=8, max_wait=1e9)
+    fe.warmup(_ctx(data, 0))
+    traced = engine.trace_count
+    rng = np.random.default_rng(1)
+    # singles, odd bursts, full buckets, overflow bursts — all mixed-K
+    for burst in [1, 3, 8, 5, 23, 2, 16, 7, 1, 11]:
+        pend = [fe.submit(_ctx(data, int(rng.integers(1000))),
+                          k=int(rng.integers(1, 9)))
+                for _ in range(burst)]
+        if burst % 2:
+            fe.drain()                   # alternate drain/flush cadences
+        else:
+            fe.flush()
+        for p in pend:
+            p.result()
+    assert engine.trace_count == traced, \
+        f"frontend retraced: {engine.trace_count} != {traced}"
+    assert fe.stats["completed"] == fe.stats["submitted"] == 77
+
+
+# ---------------------------------------------------------------------------
+# Churn vs in-flight reads: single-writer/many-reader serialization
+# ---------------------------------------------------------------------------
+
+def test_churn_drains_inflight_before_mutating():
+    _, _, data, engine = _setup(n=20, capacity=64)
+    clock = FakeClock()
+    fe = QueryFrontend(engine, max_batch=4, max_k=20, max_wait=1e9,
+                       inflight=8, clock=clock)
+    rng = np.random.default_rng(2)
+    deliveries = []                      # (done_time, slots) per reply
+    for round_ in range(6):
+        pend = [fe.submit(_ctx(data, 10 * round_ + i), k=10)
+                for i in range(5)]       # 1 full bucket + 1 queued
+        clock.t += 1.0
+        assert any(not p.done() for p in pend)   # genuinely in flight
+        # a writer arrives mid-stream: the on_mutate barrier must flush
+        # the queued tail AND resolve every in-flight batch first
+        victims = rng.choice(engine.valid_slots, 2, replace=False)
+        mutation_time = None
+        if round_ % 2:
+            engine.remove_items(victims)
+            upd = data.ranking_query(2, 700 + round_)
+            engine.add_items(upd["item_ids"][0], upd["item_weights"][0])
+        else:
+            upd = data.ranking_query(2, 800 + round_)
+            engine.update_items(victims, upd["item_ids"][0],
+                                upd["item_weights"][0])
+        mutation_time = clock.t
+        for p in pend:
+            assert p.done(), "writer barrier left a request unresolved"
+            assert p.done_time <= mutation_time, \
+                "reply delivered AFTER the churn it should precede"
+            deliveries.append((p.done_time, p.result()[1]))
+    # every reply was delivered against the snapshot its batch saw: a
+    # slot returned at time t was live at time t (churn only ran later),
+    # so no reply ever surfaced a dead slot.  Spot-check the final state:
+    # requests after the last churn see only live slots.
+    tail = fe.submit(_ctx(data, 999), k=10)
+    fe.drain()
+    assert engine.is_live(tail.result()[1]).all()
+    assert fe.stats["drains"] >= 9       # 6 rounds, adds+removes re-enter
+
+
+def test_writer_wrappers_atomic_with_concurrent_submits():
+    """A separate writer thread mutating through the frontend wrappers
+    holds the lock across barrier + write: interleaved submits from the
+    reader thread never surface a dead slot, every reply precedes or
+    follows a whole mutation (never lands in the gap)."""
+    import threading
+
+    _, _, data, engine = _setup(n=24, capacity=64)
+    fe = QueryFrontend(engine, max_batch=4, max_k=8, max_wait=0.0)
+    fe.warmup(_ctx(data, 0))
+    rng = np.random.default_rng(4)
+    stop = threading.Event()
+    errors = []
+
+    def writer():
+        try:
+            for i in range(40):
+                victims = rng.choice(engine.valid_slots, 2, replace=False)
+                fe.remove_items(victims)
+                fresh = data.ranking_query(2, 5000 + i)
+                fe.add_items(fresh["item_ids"][0], fresh["item_weights"][0])
+        except Exception as e:              # pragma: no cover - fail loud
+            errors.append(e)
+        finally:
+            stop.set()
+
+    t = threading.Thread(target=writer)
+    t.start()
+    served = 0
+    while not stop.is_set() or served == 0:
+        p = fe.submit(_ctx(data, served), k=8)
+        scores, slots = p.result()
+        # with the wrappers holding the lock, this resolve ran either
+        # entirely before or entirely after any mutation — the returned
+        # slots were live at delivery.  (We cannot re-check liveness
+        # NOW: the writer may have legitimately churned them since.)
+        assert slots.shape == (8,) and np.isfinite(scores).all()
+        served += 1
+    t.join()
+    assert not errors and served > 0
+    assert fe.stats["completed"] == fe.stats["submitted"]
+
+
+def test_direct_engine_churn_triggers_frontend_barrier():
+    """The hook lives on the ENGINE: even churn that never goes through
+    the frontend drains it first (one frontend per engine)."""
+    _, params, data, engine = _setup(n=20, capacity=32)
+    fe = QueryFrontend(engine, max_batch=8, max_k=4, max_wait=1e9)
+    p = fe.submit(_ctx(data, 0), k=4)
+    assert not p.done()
+    engine.refresh(params, step=1)       # model hot-swap is a writer too
+    assert p.done() and fe.stats["drains"] == 1
+
+
+# ---------------------------------------------------------------------------
+# Deadlines: expired requests fail cleanly, never a stale answer
+# ---------------------------------------------------------------------------
+
+def test_deadline_expired_clean_error():
+    _, _, data, engine = _setup(n=37)
+    clock = FakeClock()
+    fe = QueryFrontend(engine, max_batch=8, max_k=8, max_wait=0.5,
+                       clock=clock)
+    doomed = fe.submit(_ctx(data, 0), k=4, deadline=1.0)
+    alive = fe.submit(_ctx(data, 1), k=4, deadline=50.0)
+    clock.t = 2.0                        # both aged past max_wait; one dead
+    assert fe.pump() == 1
+    with pytest.raises(DeadlineExceeded):
+        doomed.result()
+    assert doomed.done() and fe.stats["expired"] == 1
+    # the survivor got a real answer from the same pump
+    wv, wi = engine.topk(np.asarray(_ctx(data, 1)).reshape(1, -1), 4)
+    np.testing.assert_array_equal(alive.result()[1], np.asarray(wi)[0])
+    # an expired request never reached the scorer: only the survivor row
+    # (padded to bucket 1) was dispatched
+    assert fe.stats["dispatched_rows"] == 1
+
+
+def test_deadline_checked_at_dispatch_not_submit():
+    _, _, data, engine = _setup(n=37)
+    clock = FakeClock()
+    fe = QueryFrontend(engine, max_batch=8, max_k=8, max_wait=1e9,
+                       clock=clock)
+    p = fe.submit(_ctx(data, 0), k=4, deadline=10.0)
+    clock.t = 5.0
+    fe.flush()                           # dispatched before the deadline
+    assert p.result()[0].shape == (4,)   # served even if read later
+
+
+# ---------------------------------------------------------------------------
+# Dispatch-K bucketing under a small live corpus + failure propagation
+# ---------------------------------------------------------------------------
+
+def test_k_bucket_lowers_to_live_count():
+    _, _, data, engine = _setup(n=5)     # 5 live items, capacity 8
+    fe = QueryFrontend(engine, max_batch=4, max_k=5, max_wait=1e9)
+    p = fe.submit(_ctx(data, 0), k=5)    # next_pow2(5)=8 > n_items=5
+    fe.drain()
+    scores, slots = p.result()
+    assert slots.shape == (5,)
+    assert engine.is_live(slots).all()
+    wv, wi = engine.topk(np.asarray(_ctx(data, 0)).reshape(1, -1), 5)
+    np.testing.assert_array_equal(slots, np.asarray(wi)[0])
+
+
+def test_dispatch_failure_propagates_as_frontend_error():
+    _, _, data, engine = _setup(n=5)
+    fe = QueryFrontend(engine, max_batch=4, max_k=64, max_wait=1e9)
+    p = fe.submit(_ctx(data, 0), k=64)   # k <= max_k but > n_items
+    fe.flush()
+    with pytest.raises(FrontendError):
+        p.result()
+    assert fe.stats["failed"] == 1
+
+
+def test_unservable_k_fails_alone_not_its_batchmates():
+    """A request whose k outgrew the live corpus (churn shrank it since
+    submit) fails individually; batchmates with servable k are still
+    answered from the same pump."""
+    _, _, data, engine = _setup(n=12, capacity=16)
+    fe = QueryFrontend(engine, max_batch=4, max_k=10, max_wait=1e9)
+    small = fe.submit(_ctx(data, 0), k=2)
+    big = fe.submit(_ctx(data, 1), k=10)     # servable: n_items=12
+    engine.remove_items([0, 1, 2])           # barrier drains FIRST, so
+    # both were answered pre-churn; resubmit against the shrunk corpus
+    assert small.done() and big.done()
+    small2 = fe.submit(_ctx(data, 0), k=2)
+    big2 = fe.submit(_ctx(data, 1), k=10)    # > n_items=9 at dispatch
+    fe.flush()
+    with pytest.raises(FrontendError, match="live corpus"):
+        big2.result()
+    wv, wi = engine.topk(np.asarray(_ctx(data, 0)).reshape(1, -1), 2)
+    np.testing.assert_array_equal(small2.result()[1], np.asarray(wi)[0])
+
+
+def test_submit_validation():
+    _, _, data, engine = _setup(n=37)
+    fe = QueryFrontend(engine, max_batch=4, max_k=8, max_wait=1e9)
+    with pytest.raises(ValueError, match="max_k"):
+        fe.submit(_ctx(data, 0), k=9)
+    with pytest.raises(ValueError, match="slots"):
+        fe.submit(np.arange(3), k=2)
+    with pytest.raises(ValueError, match="power of two"):
+        QueryFrontend(engine, max_batch=6)
+    with pytest.raises(ValueError, match="inflight"):
+        QueryFrontend(engine, inflight=0)
+
+
+# ---------------------------------------------------------------------------
+# Composition with the mesh-sharded engine (D = jax.device_count())
+# ---------------------------------------------------------------------------
+
+def test_frontend_on_sharded_engine_parity_and_trace_flat():
+    """The frontend only calls ``engine.topk``, so the sharded engine
+    composes unchanged: bit-exact replies (the merged top-K is bit-exact
+    vs single-device), zero retraces, churn barrier intact."""
+    cfg, params, data, engine = _setup(
+        n=20, capacity=32, mesh=make_host_mesh(model=jax.device_count()))
+    fe = QueryFrontend(engine, max_batch=4, max_k=8, max_wait=1e9)
+    fe.warmup(_ctx(data, 0))
+    traced = engine.trace_count
+    rng = np.random.default_rng(3)
+    pend = []
+    for s in range(11):
+        pend.append((s, int(rng.integers(1, 9))))
+        pend[-1] = (fe.submit(_ctx(data, s), k=pend[-1][1]), *pend[-1])
+        if s == 5:
+            upd = data.ranking_query(2, 900)
+            engine.update_items(rng.choice(engine.valid_slots, 2,
+                                           replace=False),
+                                upd["item_ids"][0], upd["item_weights"][0])
+    fe.drain()
+    assert engine.trace_count == traced
+    for p, s, k in pend[6:]:             # scored on the final corpus
+        sc, sl = p.result()
+        wv, wi = engine.topk(np.asarray(_ctx(data, s)).reshape(1, -1), k)
+        np.testing.assert_array_equal(sc, np.asarray(wv)[0])
+        np.testing.assert_array_equal(sl, np.asarray(wi)[0])
+    for p, _, _ in pend[:6]:             # pre-churn replies: delivered
+        assert p.done()                  # before the churn applied

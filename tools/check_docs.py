@@ -1,6 +1,6 @@
 """Docs health checks (the CI docs job).
 
-Two checks, both rooted at the repo top level:
+Four checks, all rooted at the repo top level (default: run all):
 
   --links       every intra-repo markdown link ([text](path) with a
                 relative target) must resolve to an existing file, and
@@ -10,12 +10,23 @@ Two checks, both rooted at the repo top level:
                 README's commands are green by construction, not by
                 promise.  Backslash-continued lines are joined; comment
                 and blank lines are skipped.
+  --exec-docs   same promise for docs/*.md: every fenced ```bash block
+                runs command-by-command (README rules), and every fenced
+                ```python block runs as a script with src/ importable.
+                Non-runnable snippets belong in ```text blocks, which
+                are never executed.
+  --benchmarks  every benchmark in benchmarks/registry.py must have its
+                one-line description VERBATIM (modulo line wrapping) in
+                docs/benchmarks.md — the registry drives
+                ``benchmarks.run --help``, so this pins help text and
+                methodology docs together.
 
-    python tools/check_docs.py --links --quickstart
+    python tools/check_docs.py --links --quickstart --exec-docs --benchmarks
 """
 from __future__ import annotations
 
 import argparse
+import importlib.util
 import os
 import re
 import subprocess
@@ -84,11 +95,7 @@ def quickstart_commands() -> list[str]:
         raise SystemExit("README Quickstart has no ```bash block")
     cmds = []
     for block in blocks:
-        joined = block.replace("\\\n", " ")
-        for line in joined.splitlines():
-            line = line.strip()
-            if line and not line.startswith("#"):
-                cmds.append(line)
+        cmds.extend(_bash_commands(block))
     return cmds
 
 
@@ -104,18 +111,99 @@ def check_quickstart() -> int:
     return failures
 
 
+def _bash_commands(block: str) -> list[str]:
+    """Commands of one ```bash block, README-quickstart rules."""
+    cmds = []
+    for line in block.replace("\\\n", " ").splitlines():
+        line = line.strip()
+        if line and not line.startswith("#"):
+            cmds.append(line)
+    return cmds
+
+
+def check_exec_docs() -> int:
+    """Execute every fenced ```bash / ```python block in docs/*.md."""
+    failures = 0
+    n_blocks = 0
+    docs_dir = os.path.join(REPO, "docs")
+    files = ([f for f in sorted(os.listdir(docs_dir)) if f.endswith(".md")]
+             if os.path.isdir(docs_dir) else [])
+    env = dict(os.environ)
+    env["PYTHONPATH"] = (os.path.join(REPO, "src") + os.pathsep
+                         + env.get("PYTHONPATH", ""))
+    for name in files:
+        rel = os.path.join("docs", name)
+        text = open(os.path.join(REPO, rel), encoding="utf-8").read()
+        for lang, block in re.findall(r"```(bash|python)\n(.*?)```", text,
+                                      re.DOTALL):
+            n_blocks += 1
+            if lang == "bash":
+                for cmd in _bash_commands(block):
+                    print(f"[{rel}] $ {cmd}", flush=True)
+                    r = subprocess.run(cmd, shell=True, cwd=REPO)
+                    if r.returncode != 0:
+                        print(f"DOC COMMAND FAILED ({r.returncode}) "
+                              f"in {rel}: {cmd}")
+                        failures += 1
+            else:
+                print(f"[{rel}] $ python <<'EOF' ...{len(block)}B",
+                      flush=True)
+                r = subprocess.run([sys.executable, "-c", block],
+                                   cwd=REPO, env=env)
+                if r.returncode != 0:
+                    print(f"DOC PYTHON BLOCK FAILED ({r.returncode}) "
+                          f"in {rel}")
+                    failures += 1
+    print(f"exec-docs: {'FAIL' if failures else 'ok'} "
+          f"({n_blocks} blocks in {len(files)} files)")
+    return failures
+
+
+def check_benchmarks() -> int:
+    """Registry one-liners must appear verbatim in docs/benchmarks.md."""
+    spec = importlib.util.spec_from_file_location(
+        "bench_registry", os.path.join(REPO, "benchmarks", "registry.py"))
+    registry = importlib.util.module_from_spec(spec)
+    spec.loader.exec_module(registry)
+    doc_path = os.path.join(REPO, "docs", "benchmarks.md")
+    if not os.path.exists(doc_path):
+        print("BENCHMARK DOCS MISSING: docs/benchmarks.md")
+        print("benchmarks: FAIL")
+        return 1
+    # collapse whitespace on both sides so docs may wrap the one-liners
+    doc = re.sub(r"\s+", " ", open(doc_path, encoding="utf-8").read())
+    failures = 0
+    for name, (module, desc) in registry.BENCHMARKS.items():
+        if re.sub(r"\s+", " ", desc) not in doc:
+            print(f"UNDOCUMENTED BENCHMARK  {name} ({module}): registry "
+                  f"description not found in docs/benchmarks.md:\n"
+                  f"    {desc}")
+            failures += 1
+    print(f"benchmarks: {'FAIL' if failures else 'ok'} "
+          f"({len(registry.BENCHMARKS)} registry entries checked)")
+    return failures
+
+
 def main() -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--links", action="store_true")
     ap.add_argument("--quickstart", action="store_true")
+    ap.add_argument("--exec-docs", action="store_true")
+    ap.add_argument("--benchmarks", action="store_true")
     args = ap.parse_args()
-    if not (args.links or args.quickstart):
+    if not (args.links or args.quickstart or args.exec_docs
+            or args.benchmarks):
         args.links = args.quickstart = True
+        args.exec_docs = args.benchmarks = True
     failures = 0
     if args.links:
         failures += check_links()
+    if args.benchmarks:
+        failures += check_benchmarks()
     if args.quickstart:
         failures += check_quickstart()
+    if args.exec_docs:
+        failures += check_exec_docs()
     if failures:
         sys.exit(1)
 
