@@ -1,0 +1,207 @@
+"""Multi-tenant serving: one ScorerRuntime, T CorpusStates (the PR-5
+claim).
+
+A real ad deployment serves MANY corpora — per-advertiser, per-market,
+per-surface — behind one model.  The naive construction is one engine
+per corpus: T trace caches, T warmup passes, and a recompilation stall
+every time a tenant comes online.  The refactored stack shares ONE
+``ScorerRuntime`` (jit dispatch + trace cache, keyed by shape+dtype)
+across per-tenant ``CorpusState`` slabs behind a tenant-routed
+``QueryFrontend``.  Three claims, each a hard CI gate:
+
+  * **parity** — a tenant on the shared runtime returns bit-exact scores
+    and top-K vs a dedicated single-tenant engine over the same corpus
+    (sharing traces changes nothing);
+  * **flat traces** — going from 1 to 4 to 16 tenants (same capacity)
+    adds ZERO traces: the first tenant's (Bq, K) warmup grid serves every
+    later tenant, so tenant onboarding costs no compilation;
+  * **isolation** — while tenant A sustains a churn storm (an update
+    burst at every arrival, through the frontend's writer wrappers),
+    tenant B's reply p99 stays within 2x its quiet baseline: the
+    PER-TENANT writer barrier drains only A's in-flight batches, so A's
+    churn never force-resolves or flushes B's micro-batches.
+
+Method: fixed arrival pacing at 1.5x the measured Bq=1 dispatch time
+(steady, below saturation), latency = completion minus submit, p99 over
+the full trace; the quiet and storm legs replay the SAME request
+sequence, and the storm leg is bracketed by two quiet legs (compared
+against the WORSE quiet p99) so shared-runner load drift cannot
+manufacture a failure.  Runs in-process on D=1 (the sharded composition
+is covered by tests and benchmarks/corpus_shard.py).
+
+Output lines:
+    multitenant: parity,T=<t>,checked=<n>,<ok|FAIL>
+    multitenant: traces,T=1:<n>;T=4:<n>;T=16:<n>,<flat|RETRACED>
+    multitenant: isolation,quiet_p99_ms=<q>,storm_p99_ms=<s>,ratio=<r>,<ok|FAIL>
+The driver exits nonzero unless every line ends ``ok``/``flat``.
+"""
+from __future__ import annotations
+
+import time
+
+import numpy as np
+
+MAX_K = 16
+
+
+def _mk_state(cfg, params, data, runtime, n, seed, capacity):
+    from repro.serving import CorpusState
+
+    q = data.ranking_query(n, seed)
+    st = CorpusState(cfg, q["item_ids"][0], q["item_weights"][0],
+                     capacity=capacity, runtime=runtime)
+    st.refresh(params, step=0)
+    return st, q
+
+
+def _check_parity(cfg, params, data, states, corpora, capacity, ctxs):
+    """(a) shared-runtime tenants bit-exact vs dedicated engines."""
+    import jax
+
+    from repro.serving import CorpusRankingEngine
+
+    checked = 0
+    ok = True
+    for name in list(states)[:3]:
+        c = corpora[name]
+        ded = CorpusRankingEngine(cfg, c["item_ids"][0],
+                                  c["item_weights"][0], capacity=capacity)
+        ded.refresh(params, step=0)
+        for s in range(0, len(ctxs), max(len(ctxs) // 4, 1)):
+            ctx = np.asarray(ctxs[s]).reshape(1, -1)
+            gs = np.asarray(states[name].score(ctx))
+            ws = np.asarray(ded.score(ctx))
+            gv, gi = jax.tree.map(np.asarray, states[name].topk(ctx, MAX_K))
+            wv, wi = jax.tree.map(np.asarray, ded.topk(ctx, MAX_K))
+            ok &= (np.array_equal(gs, ws) and np.array_equal(gv, wv)
+                   and np.array_equal(gi, wi))
+            checked += 1
+    return checked, ok
+
+
+def main(quick: bool = False) -> None:
+    import jax
+
+    from repro.core.fields import uniform_layout
+    from repro.data.synthetic_ctr import SyntheticCTR
+    from repro.models.recsys import fwfm
+    from repro.serving import QueryFrontend, ScorerRuntime
+    from repro.serving.corpus import next_pow2
+
+    n = 512 if quick else 2048
+    n_req = 120 if quick else 300
+    tiers = (1, 4, 16)
+
+    layout = uniform_layout(25, 38, 1000)
+    cfg = fwfm.FwFMConfig(layout=layout, embed_dim=16, interaction="dplr",
+                          rank=3)
+    params = fwfm.init(jax.random.PRNGKey(0), cfg)
+    data = SyntheticCTR(layout, embed_dim=8, seed=0)
+    capacity = next_pow2(2 * n)
+    rng = np.random.default_rng(0)
+    ctxs = [data.context_query(s)["context_ids"] for s in range(n_req)]
+
+    runtime = ScorerRuntime(cfg)
+    states, corpora = {}, {}
+    states["t0"], corpora["t0"] = _mk_state(cfg, params, data, runtime, n,
+                                            1000, capacity)
+    fe = QueryFrontend(states["t0"], max_batch=8, max_k=MAX_K,
+                       max_wait=1e-3)
+    # rebind as multi-tenant by name (classic single-engine ctor named it
+    # "default"; keep our own naming by re-registering)
+    fe.remove_tenant("default")
+    fe.add_tenant("t0", states["t0"])
+    fe.warmup(ctxs[0], tenant="t0")
+
+    # -- (b) trace count flat from 1 to 16 tenants on one runtime ----------
+    traces = {}
+    for tier in tiers:
+        while len(states) < tier:
+            i = len(states)
+            name = f"t{i}"
+            states[name], corpora[name] = _mk_state(
+                cfg, params, data, runtime, n, 1000 + i, capacity)
+            fe.add_tenant(name, states[name])
+        names = list(states)
+        pend = [fe.submit(ctxs[s % n_req],
+                          k=int(rng.integers(1, MAX_K + 1)),
+                          tenant=names[s % tier])
+                for s in range(4 * tier)]
+        fe.drain()
+        for p in pend:
+            p.result()
+        traces[tier] = runtime.trace_count
+    flat = len(set(traces.values())) == 1
+    print("multitenant: traces,"
+          + ";".join(f"T={t}:{traces[t]}" for t in tiers)
+          + ("," + ("flat" if flat else "RETRACED")), flush=True)
+
+    # -- (a) per-tenant parity vs dedicated engines -------------------------
+    checked, ok = _check_parity(cfg, params, data, states, corpora,
+                                capacity, ctxs)
+    print(f"multitenant: parity,T={min(3, len(states))},checked={checked},"
+          f"{'ok' if ok else 'FAIL'}", flush=True)
+
+    # -- (c) tenant-B p99 isolation under a tenant-A churn storm ------------
+    # pace arrivals at 1.5x the measured Bq=1 dispatch time (steady,
+    # below saturation — queueing noise would swamp the signal); replay
+    # the SAME trace quiet (no churn) and under storm (an update burst on
+    # tenant A at EVERY arrival, via the frontend writer wrapper).  The
+    # storm leg is BRACKETED by two quiet legs and compared against the
+    # worse of them, so background-load drift on a shared CI runner
+    # cannot manufacture an isolation failure on its own.
+    a, b = "t1", "t2"
+    for _ in range(3):
+        jax.block_until_ready(states[b].topk(ctxs[0], MAX_K)[0])
+    t0 = time.perf_counter()
+    for _ in range(10):
+        jax.block_until_ready(states[b].topk(ctxs[0], MAX_K)[0])
+    s1 = (time.perf_counter() - t0) / 10
+    ks = rng.integers(1, MAX_K + 1, n_req)
+
+    def churn(s):
+        upd = data.ranking_query(2, 90_000 + s)
+        slots = rng.choice(states[a].valid_slots, 2, replace=False)
+        fe.update_items(slots, upd["item_ids"][0], upd["item_weights"][0],
+                        tenant=a)
+
+    churn(-1)                                     # warm the churn path
+
+    def run_leg(storm: bool) -> float:
+        gap = 1.5 * s1
+        pend = []
+        t0 = time.perf_counter()
+        for s in range(n_req):
+            target = s * gap
+            now = time.perf_counter() - t0
+            if target > now:
+                time.sleep(target - now)
+            if storm:
+                churn(s)
+            pend.append(fe.submit(ctxs[s], k=int(ks[s]), tenant=b))
+        fe.drain()
+        for p in pend:                            # liveness at delivery
+            assert states[b].is_live(p.result()[1]).all(), \
+                "tenant-B reply surfaced a dead slot under the storm"
+        return float(np.percentile(
+            [(p.done_time - p.submit_time) * 1e3 for p in pend], 99))
+
+    run_leg(storm=False)                          # warm the leg path
+    quiet = max(run_leg(storm=False), 1e-9)
+    storm = run_leg(storm=True)
+    quiet = max(quiet, run_leg(storm=False))      # bracket: worse quiet
+    ratio = storm / quiet
+    iso_ok = storm <= 2.0 * quiet
+    print(f"multitenant: isolation,quiet_p99_ms={quiet:.2f},"
+          f"storm_p99_ms={storm:.2f},ratio={ratio:.2f},"
+          f"{'ok' if iso_ok else 'FAIL'}", flush=True)
+
+    if not (flat and ok and iso_ok):
+        raise SystemExit(
+            "multitenant invariants violated: "
+            f"traces_flat={flat} parity={ok} isolation={iso_ok}")
+
+
+if __name__ == "__main__":
+    import sys
+    main(quick="--quick" in sys.argv)

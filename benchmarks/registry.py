@@ -66,6 +66,13 @@ BENCHMARKS: dict[str, tuple[str, str]] = {
         "Query frontend: p50/p95/p99 latency and QPS of coalesced "
         "micro-batching vs sync per-query serving under Poisson arrivals",
     ),
+    "multitenant": (
+        "benchmarks.multitenant",
+        "Multi-tenant serving: per-tenant bit-exact parity vs dedicated "
+        "engines, flat trace count from 1 to 16 tenants on one shared "
+        "ScorerRuntime, and tenant-B p99 isolation under a tenant-A "
+        "churn storm",
+    ),
 }
 
 

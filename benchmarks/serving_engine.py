@@ -66,7 +66,7 @@ def main(quick: bool = False) -> None:
         from repro.serving import build_corpus_cache
         cache = build_corpus_cache(params, cfg, corpus["item_ids"][0],
                                    jnp.asarray(corpus["item_weights"][0]))
-        eager = engine._score_impl(params, cache, *ctxs[0])
+        eager = engine.runtime._score_impl(params, cache, *ctxs[0])
         maxdiff = float(jnp.abs(eager - fwfm.rank_items(params, cfg,
                                                         full[0])).max())
         jitdiff = float(jnp.abs(

@@ -45,6 +45,19 @@ across the mixed workload (including mid-stream churn bursts through the
 writer barrier) and bit-exact reply parity vs one-by-one engine calls.
 Composes with ``--mesh``: the same trace runs against the sharded engine.
 
+Multi-tenant serving: ``--tenant-demo`` stands up ``--tenants`` N
+per-tenant corpora (one ``CorpusState`` each — the paper's
+many-corpora-behind-one-model ad deployment) on ONE shared
+``ScorerRuntime`` and routes mixed tenant traffic through the
+tenant-routed ``QueryFrontend``.  Asserts the tentpole invariants: after
+warming ONE tenant's (Bq, K) grid, every other tenant serves with ZERO
+retraces (shared trace cache); replies are bit-exact vs a dedicated
+single-tenant engine; churn bursts on tenant 0 never drain other
+tenants' in-flight reads (per-tenant writer barrier); and a 5x
+admission-control burst sheds with fast ``Overloaded`` replies while
+every accepted request is served.  Composes with ``--mesh`` (the tenant
+slabs all shard over the same mesh) and ``--use-pallas``.
+
 Sharded corpus: ``--mesh host`` shards the slab over every local device's
 model axis (CI runs this under
 ``XLA_FLAGS=--xla_force_host_platform_device_count=4``), so corpus
@@ -219,6 +232,131 @@ def _frontend_demo(args, engine, data) -> None:
           f"bit-exact vs one-by-one, all returned slots live")
 
 
+def _tenant_demo(args, cfg, params, data) -> None:
+    """Serve ``--tenants`` N corpora behind ONE ScorerRuntime through the
+    tenant-routed frontend, and assert the multi-tenant contract: zero
+    retraces after one tenant warms the grid, bit-exact per-tenant
+    replies, churn isolation, and fast admission-control shedding."""
+    from repro.serving import (CorpusRankingEngine, CorpusState, Overloaded,
+                               QueryFrontend, ScorerRuntime)
+    from repro.serving.corpus import next_pow2
+
+    rng = np.random.default_rng(args.seed)
+    T = max(args.tenants, 2)
+    corpus_mesh = _corpus_mesh(args.mesh)
+    n_shards = 1 if corpus_mesh is None else int(corpus_mesh.shape["model"])
+    runtime = ScorerRuntime(cfg, mesh=corpus_mesh,
+                            use_pallas_kernel=args.use_pallas)
+    capacity = max(args.capacity or next_pow2(2 * args.items), n_shards)
+    names = [f"t{i}" for i in range(T)]
+    corpora = {n: data.ranking_query(args.items, 1000 + i)
+               for i, n in enumerate(names)}
+    states = {}
+    for name in names:
+        c = corpora[name]
+        states[name] = CorpusState(cfg, c["item_ids"][0],
+                                   c["item_weights"][0],
+                                   capacity=capacity, runtime=runtime)
+        states[name].refresh(params, step=0)
+    max_k = max(args.topk or 10, 1)
+    fe = QueryFrontend(states, max_batch=args.fe_batch, max_k=max_k,
+                       max_wait=args.max_wait_ms * 1e-3,
+                       inflight=args.inflight)
+
+    # ONE tenant warms the (Bq x K) grid; the shared runtime makes every
+    # same-capacity tenant warm with it — the zero-retrace onboarding aha
+    warm_dispatches = fe.warmup(data.context_query(0)["context_ids"],
+                                tenant="t0")
+    traced = runtime.trace_count
+
+    n = args.queries
+    ctxs = [data.context_query(s)["context_ids"] for s in range(n)]
+    ks = rng.integers(1, max_k + 1, n)
+    lanes = [names[int(rng.integers(T))] for _ in range(n)]
+    churn_at = set(range(10, n, 20))         # churn bursts, tenant t0 only
+    pend = []
+    t0 = time.perf_counter()
+    last_churn = -1
+    for s in range(n):
+        if s in churn_at:
+            upd = data.ranking_query(2, 50_000 + s)
+            fe.update_items(
+                rng.choice(states["t0"].valid_slots, 2, replace=False),
+                upd["item_ids"][0], upd["item_weights"][0], tenant="t0")
+            last_churn = s
+        pend.append(fe.submit(ctxs[s], k=int(ks[s]), tenant=lanes[s]))
+    fe.drain()
+    wall = time.perf_counter() - t0
+
+    assert runtime.trace_count == traced, \
+        (f"mixed-tenant traffic retraced the shared runtime: "
+         f"{runtime.trace_count} != {traced}")
+    # every reply live at delivery; bit-exact vs the tenant's own state
+    # for requests scored against its FINAL corpus (non-t0 tenants never
+    # churned, t0 after its last burst)
+    checked = 0
+    for s, p in enumerate(pend):
+        sc, sl = p.result()
+        assert states[lanes[s]].is_live(sl).all(), \
+            f"tenant {lanes[s]} reply surfaced a dead slot"
+        if lanes[s] != "t0" or s > last_churn:
+            wv, wi = states[lanes[s]].topk(
+                np.asarray(ctxs[s]).reshape(1, -1), int(ks[s]))
+            assert np.array_equal(sc, np.asarray(wv)[0]) and \
+                np.array_equal(sl, np.asarray(wi)[0]), \
+                "tenant reply != one-by-one state call (must be bit-exact)"
+            checked += 1
+    # cross-checking one tenant against a DEDICATED single-tenant engine
+    # proves sharing the runtime changed nothing
+    c = corpora["t1"]
+    dedicated = CorpusRankingEngine(cfg, c["item_ids"][0],
+                                    c["item_weights"][0],
+                                    capacity=capacity, mesh=corpus_mesh,
+                                    use_pallas_kernel=args.use_pallas)
+    dedicated.refresh(params, step=0)
+    for s in range(0, n, max(n // 8, 1)):
+        gv, gi = states["t1"].topk(np.asarray(ctxs[s]).reshape(1, -1),
+                                   max_k)
+        wv, wi = dedicated.topk(np.asarray(ctxs[s]).reshape(1, -1), max_k)
+        assert np.array_equal(np.asarray(gv), np.asarray(wv)) and \
+            np.array_equal(np.asarray(gi), np.asarray(wi)), \
+            "shared-runtime tenant != dedicated engine (must be bit-exact)"
+
+    # admission control under a 5x burst: bounded queue, fast sheds, and
+    # every ACCEPTED request still answered
+    fe.auto_pump = False
+    fe.admit_depth = max(args.fe_batch, 4)
+    sheds = accepted = 0
+    for s in range(5 * fe.admit_depth):
+        try:
+            fe.submit(ctxs[s % n], k=int(ks[s % n]), tenant="t1")
+            accepted += 1
+        except Overloaded:
+            sheds += 1
+    fe.drain()
+    assert accepted == fe.admit_depth and sheds == 4 * fe.admit_depth, \
+        f"admission control off: {accepted} accepted, {sheds} shed"
+    assert fe.stats["expired"] == 0
+    fe.auto_pump, fe.admit_depth = True, None
+
+    lat = np.asarray([(p.done_time - p.submit_time) * 1e3 for p in pend])
+    per_tenant = {t: fe.lane_stats(t)["completed"] for t in names}
+    print(f"tenant demo: {T} tenants x {args.items} items "
+          f"(capacity {capacity}"
+          f"{f', {n_shards} shards' if n_shards > 1 else ''}) on ONE "
+          f"ScorerRuntime; {n} mixed requests in {wall * 1e3:.0f} ms, "
+          f"{len(churn_at)} t0 churn bursts")
+    print(f"  traces    : {traced} total ({warm_dispatches} grid warmup "
+          f"dispatches on t0 alone) — 0 added by {T - 1} more tenants + "
+          f"traffic")
+    print(f"  replies   : p50 {np.percentile(lat, 50):.2f}  "
+          f"p95 {np.percentile(lat, 95):.2f} ms; {checked} checked "
+          f"bit-exact (incl. vs a dedicated engine); per-tenant "
+          f"{per_tenant}")
+    print(f"  admission : 5x burst -> {accepted} accepted / {sheds} shed "
+          f"fast (Overloaded), 0 deadline expiries")
+
+
 def _churn_demo(args, engine, data) -> None:
     """Interleave add/remove/update/score on the LIVE engine and prove the
     slab absorbs arbitrary catalog churn with zero scorer retraces."""
@@ -323,6 +461,14 @@ def main(argv=None):
                          "micro-batching query frontend vs sync per-query "
                          "serving (p50/p95/p99 + QPS; asserts zero "
                          "retraces and bit-exact replies)")
+    ap.add_argument("--tenant-demo", action="store_true",
+                    help="serve --tenants per-tenant corpora on ONE "
+                         "shared ScorerRuntime through the tenant-routed "
+                         "frontend (asserts zero cross-tenant retraces, "
+                         "bit-exact replies, churn isolation, admission "
+                         "shedding)")
+    ap.add_argument("--tenants", type=int, default=4,
+                    help="tenant count for --tenant-demo (min 2)")
     ap.add_argument("--arrival-rate", type=float, default=0.0,
                     help="frontend demo offered load in qps "
                          "(0 = auto: ~2x the sync per-query capacity)")
@@ -352,9 +498,10 @@ def main(argv=None):
         if not is_dplr or args.mp:
             ap.error("--engine corpus requires a dplr model (and not --mp)")
     elif (args.topk or args.refresh_demo or args.use_pallas
-          or args.churn_demo or args.frontend or args.mesh != "none"):
+          or args.churn_demo or args.frontend or args.tenant_demo
+          or args.mesh != "none"):
         ap.error("--topk/--refresh-demo/--use-pallas/--churn-demo/"
-                 "--frontend/--mesh require --engine corpus")
+                 "--frontend/--tenant-demo/--mesh require --engine corpus")
 
     params = mod.init(jax.random.PRNGKey(args.seed), cfg)
     mgr = None
@@ -392,6 +539,9 @@ def main(argv=None):
                 lambda a: np.asarray(a, np.float32)
                 if jnp.asarray(a).dtype == jnp.bfloat16 else np.asarray(a),
                 tree)
+
+        if args.tenant_demo:
+            return _tenant_demo(args, cfg, params, data)
 
         # initial candidate corpus: the item side of a fixed ranking query,
         # living in a capacity-padded slab so the catalog can churn.

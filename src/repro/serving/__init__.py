@@ -2,41 +2,57 @@
 
 Extends the paper's context-side caching (Algorithm 1) to the item side:
 rank-space projections of the candidate corpus are precomputed once and
-every query costs O(rho k) per item.  The corpus is MUTABLE: it lives in a
-capacity-padded slab with a validity mask, so live-traffic catalog churn
-(item add/remove/update) is absorbed by O(Δn rho k) in-place row writes —
-no rebuilds, no shape changes, zero retraces of the jitted scorer — and a
-model refresh rebuilds the slab in place with slot assignments preserved.
-The slab optionally SHARDS across the mesh's model axis (pass ``mesh=`` to
-the engine): D devices each hold capacity/D slots, churn deltas route to
-their owning shard, and top-K merges D device-local top-Ks with O(D·K)
-traffic — corpus capacity then scales with the mesh, not one device's HBM.
+every query costs O(rho k) per item.  The stack is three layers — shared
+compute, per-tenant state, shared request routing:
 
-On top of the batch engine sits the ONLINE request path: ``QueryFrontend``
-accepts individual ranking requests (context, per-query K, optional
-deadline), coalesces them into power-of-two padded micro-batches so the
-jitted scorer never retraces, and keeps a double-buffered in-flight window
-so host-side batch assembly overlaps with device scoring (JAX async
-dispatch).  Churn is serialized against in-flight reads through the
-engine's ``on_mutate`` writer barrier.
+  * ``ScorerRuntime`` (SHARED) owns everything corpus-independent: the
+    jitted/Pallas dispatch, mesh/``shard_map`` wiring, kernel selection,
+    and the trace cache.  Keyed purely by shape+dtype, so T tenants
+    share one runtime and a new tenant with an already-warm shape
+    signature comes online with zero retraces.
+  * ``CorpusState`` (PER TENANT) is the mutable corpus: a capacity-padded
+    slab with a validity mask, free-lists, the params snapshot, and the
+    tenant's ``on_mutate`` writer barrier.  Catalog churn is absorbed by
+    O(Δn rho k) in-place row writes (shard-grouped when meshed) — no
+    rebuilds, no shape changes, zero retraces — and a model refresh
+    rebuilds the slab in place with slot assignments preserved.  With a
+    meshed runtime the slab shards across the ``model`` axis: D devices
+    each hold capacity/D slots and top-K merges D device-local top-Ks
+    with O(D·K) traffic.  ``CorpusRankingEngine`` (the historical
+    single-tenant name) is an alias: one CorpusState over a private
+    runtime.
+  * ``QueryFrontend`` (SHARED) is the online request path: per-tenant
+    EDF queues coalescing into power-of-two padded micro-batches,
+    round-robin fairness across tenants into one double-buffered
+    in-flight window (host assembly overlaps device scoring), admission
+    control that sheds with ``Overloaded`` instead of queueing doomed
+    requests, and a per-tenant writer barrier — tenant-A churn never
+    drains tenant-B's in-flight reads.
 
     corpus.py   - ItemCorpusCache + build_corpus_cache + corpus_rows +
                   masked_slab_scores (the precompute and scoring math;
                   slab/mask invariants documented here)
-    engine.py   - CorpusRankingEngine (batched masked scoring, fused top-K,
-                  add/remove/update_items, slab doubling, checkpoint-refresh
-                  invalidation; same API sharded or not)
+    runtime.py  - ScorerRuntime (shared jitted dispatch + trace cache,
+                  warmup grid, host-side churn bucketing/grouping)
+    engine.py   - CorpusState / CorpusRankingEngine (per-tenant slab,
+                  masked scoring, fused top-K, add/remove/update_items,
+                  slab doubling, checkpoint-refresh invalidation)
     sharded.py  - shard_map implementations of build/write/score/topk
-                  (striped slot ownership, bit-exact candidate merge)
-    frontend.py - QueryFrontend (request coalescing, bucketed Bq/K,
-                  overlapped dispatch, deadlines, churn/read serialization)
+                  (striped slot ownership, shard-grouped churn deltas,
+                  bit-exact candidate merge)
+    frontend.py - QueryFrontend (tenant routing, request coalescing,
+                  bucketed Bq/K, EDF + round-robin dispatch, admission
+                  control, overlapped dispatch, deadlines, per-tenant
+                  churn/read serialization)
 """
 from repro.serving.corpus import (ItemCorpusCache, build_corpus_cache,
                                   corpus_rows, masked_slab_scores)
-from repro.serving.engine import CorpusRankingEngine
+from repro.serving.engine import CorpusRankingEngine, CorpusState
 from repro.serving.frontend import (DeadlineExceeded, FrontendError,
-                                    PendingQuery, QueryFrontend)
+                                    Overloaded, PendingQuery, QueryFrontend)
+from repro.serving.runtime import ScorerRuntime
 
 __all__ = ["ItemCorpusCache", "build_corpus_cache", "corpus_rows",
-           "masked_slab_scores", "CorpusRankingEngine", "QueryFrontend",
-           "PendingQuery", "DeadlineExceeded", "FrontendError"]
+           "masked_slab_scores", "ScorerRuntime", "CorpusState",
+           "CorpusRankingEngine", "QueryFrontend", "PendingQuery",
+           "DeadlineExceeded", "FrontendError", "Overloaded"]

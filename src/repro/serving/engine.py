@@ -1,21 +1,35 @@
-"""Batched corpus-cached ranking engine (the serving hot path).
+"""CorpusState: one tenant's mutable corpus behind a shared ScorerRuntime.
 
-``CorpusRankingEngine`` owns a MUTABLE candidate corpus and a model
-snapshot, and answers ``(Bq queries x capacity candidates)`` scoring in ONE
-jitted dispatch: per query only the context cache (P_C, s_C, lin_C) is
-computed — O(rho m_C k) — then every candidate costs O(rho k) against the
-precomputed item cache (``repro.serving.corpus``).  Compare Algorithm 1's
-per-query O(rho m_I k + m_I k) per candidate (gather + project), and the
-dense FwFM's O(m_I^2 k).
+The serving stack is three layers (full design: docs/multitenant.md):
 
-The engine is the BATCH layer: ``score``/``topk`` take an already-
-assembled (Bq, m_C_slots) context batch and are non-blocking (they return
-device arrays under JAX async dispatch; reading a result blocks).  Online
-traffic — one request at a time, each with its own K and deadline — goes
-through ``repro.serving.frontend.QueryFrontend``, which coalesces
-requests into power-of-two micro-batches, overlaps host assembly with
-device scoring, and serializes churn against in-flight reads via the
-``on_mutate`` writer barrier below.
+    ScorerRuntime  (repro.serving.runtime)  — SHARED: jitted/Pallas
+        dispatch, mesh wiring, the trace cache.  Corpus-independent,
+        keyed by shape+dtype: T tenants share ONE runtime and therefore
+        one set of traces.
+    CorpusState    (this module)            — PER TENANT: the capacity-
+        padded slab, validity mask, free-lists, params snapshot,
+        checkpoint signature, and the tenant's ``on_mutate`` writer
+        barrier.  Pure host-side bookkeeping plus the device arrays it
+        mirrors; every compute dispatch goes through the runtime.
+    QueryFrontend  (repro.serving.frontend) — SHARED: tenant-routed
+        request queues, cross-tenant fairness, admission control.
+
+``CorpusRankingEngine`` is an alias of ``CorpusState``: the historical
+single-tenant engine is exactly one CorpusState over a private runtime,
+and the constructor builds that private runtime when ``runtime=`` is not
+passed — existing callers are unchanged.
+
+Scoring semantics (identical to every prior PR): a state answers
+``(Bq queries x capacity candidates)`` in ONE dispatch — per query only
+the context cache (P_C, s_C, lin_C) is computed, O(rho m_C k), then every
+candidate costs O(rho k) against the precomputed item cache
+(``repro.serving.corpus``).  ``score``/``topk`` take an already-assembled
+(Bq, m_C_slots) int32 context batch (weights default to ones in
+``cfg.dtype``) and are NON-blocking: they return device arrays under JAX
+async dispatch — reading a result blocks.  Online traffic goes through
+``QueryFrontend``, which coalesces requests into power-of-two
+micro-batches and serializes churn against in-flight reads via this
+state's ``on_mutate`` hook.
 
 Mutable corpus (capacity-padded slab + validity mask)
 -----------------------------------------------------
@@ -35,42 +49,32 @@ Section 5.3), so the corpus lives in a slab padded to a power-of-two
     every slab row in place);
   * when the free-list runs dry the slab doubles (amortized O(1) per add);
     doubling is the only shape change and therefore the only operation
-    after which the scorer re-traces — once per doubling.
+    after which the scorer re-traces — once per doubling (and only for
+    the FIRST tenant to reach that capacity: the trace then serves every
+    tenant on the shared runtime).
 
 Model refresh (the sliding-window retrain deployment of Section 5.3) swaps
 the parameter arrays and rebuilds the corpus cache WITHOUT retracing the
 jitted scorer: shapes are refresh-invariant, so the swap is two dispatches
 (cache rebuild + next score) — no recompilation stall in the query loop.
-``maybe_refresh`` polls a ``CheckpointManager`` and performs the swap when a
-newer step lands, which is the invalidation hook ``launch/serve.py`` uses;
-it tracks the last *polled* step signature so a corrupt newest checkpoint
-(restore falls back to an older valid step) costs one restore attempt
-total, not a re-restore + cache rebuild on every poll — while a later
-re-save of that step number is still picked up.
-
-Scoring backends:
-  * jnp (default)  — fused broadcast form, XLA-compiled; also serves top-K
-    via ``jax.lax.top_k`` so only (Bq, K) leaves the scorer.
-  * Pallas         — ``kernels.ops.dplr_corpus_score``: one HBM pass over
-    (capacity, rho, k) with an optional in-kernel running top-K that takes
-    the validity mask into the merge (interpret mode on CPU, Mosaic on
-    TPU).
+``maybe_refresh`` polls a ``CheckpointManager`` and performs the swap when
+a newer step lands; it tracks the last *polled* step signature so a
+corrupt newest checkpoint (restore falls back to an older valid step)
+costs one restore attempt total, not a re-restore + cache rebuild on
+every poll — while a later re-save of that step number is still picked up.
 
 Sharded slab (capacity scales with the mesh)
 --------------------------------------------
-Pass ``mesh=`` (axes from ``launch/mesh.py``) and the slab shards across
-the ``model`` axis: D devices each hold a capacity/D slice of the cache,
-so corpus capacity is bounded by the mesh's aggregate HBM instead of one
-device's.  Global slot ``g`` is owned by shard ``g % D`` at local row
-``g // D`` (striped, so slab doubling never renumbers a slot — see
-``repro.serving.sharded``); churn deltas route to their owning shard by
-that arithmetic inside one ``shard_map`` scatter; ``topk`` merges the D
-device-local top-Ks with O(D·K) traffic and is BIT-exact vs the unsharded
-engine, ties included.  Every public method keeps identical semantics and
-slot numbering either way — ``mesh=None`` (the default) is simply D=1 on
-the local device.  Free slots are tracked per shard so allocation stays
-O(log capacity) while handing out the same lowest-free-slot order as the
-unsharded engine.
+Build the runtime with ``mesh=`` (axes from ``launch/mesh.py``) and every
+tenant's slab shards across the ``model`` axis: D devices each hold a
+capacity/D slice of the cache.  Global slot ``g`` is owned by shard
+``g % D`` at local row ``g // D`` (striped, so slab doubling never
+renumbers a slot — see ``repro.serving.sharded``); churn deltas are
+grouped per owning shard host-side and each device computes/scatters only
+its own rows; ``topk`` merges the D device-local top-Ks with O(D·K)
+traffic and is BIT-exact vs the unsharded engine, ties included.  Every
+public method keeps identical semantics and slot numbering either way —
+``mesh=None`` (the default) is simply D=1 on the local device.
 """
 from __future__ import annotations
 
@@ -81,43 +85,35 @@ import numpy as np
 import jax
 import jax.numpy as jnp
 
-from repro.core import ranking as rk
-from repro.core.dplr import DPLRParams
-from repro.serving.corpus import (
-    ItemCorpusCache,
-    build_corpus_cache,
-    corpus_rows,
-    masked_slab_scores,
-    next_pow2,
-)
+from repro.serving.corpus import ItemCorpusCache, next_pow2
+from repro.serving.runtime import ScorerRuntime
 
 
-class CorpusRankingEngine:
-    """Scores a mutable, capacity-padded item corpus for batches of query
-    contexts.  With ``mesh=`` the slab shards across the model axis and
-    capacity scales with the device count (see module docstring)."""
+class CorpusState:
+    """One tenant's mutable, capacity-padded item corpus plus its model
+    snapshot; every compute dispatch runs through a ``ScorerRuntime``
+    (private by default, shared across tenants when passed in)."""
 
     def __init__(self, cfg, item_ids, item_weights=None, *,
                  capacity: int | None = None, mesh=None,
-                 use_pallas_kernel: bool = False, block_n: int = 2048):
-        if cfg.interaction != "dplr":
-            raise ValueError("CorpusRankingEngine requires interaction='dplr'")
-        self.cfg = cfg
-        self._wdtype = cfg.dtype   # weights follow the serving dtype — a
-        # stray f32 default here silently promotes the whole bf16 path.
-        self.mesh = mesh
-        if mesh is None:
-            self._D = 1
+                 use_pallas_kernel: bool = False, block_n: int = 2048,
+                 runtime: ScorerRuntime | None = None):
+        if runtime is None:
+            runtime = ScorerRuntime(cfg, mesh=mesh,
+                                    use_pallas_kernel=use_pallas_kernel,
+                                    block_n=block_n)
         else:
-            from repro.serving import sharded
-            self._D = sharded.shard_count(mesh)
-            if self._D & (self._D - 1):
-                # capacity must be a power of two AND divisible by D, so a
-                # non-power-of-two shard count admits NO valid capacity —
-                # fail here with the real reason, not downstream
+            if cfg is not None and cfg is not runtime.cfg:
                 raise ValueError(
-                    f"corpus shard count must be a power of two, got a "
-                    f"{self._D}-wide model axis")
+                    "CorpusState(cfg=..., runtime=...): the runtime was "
+                    "built for a different config; pass runtime.cfg (or "
+                    "cfg=None)")
+            if mesh is not None and mesh is not runtime.mesh:
+                raise ValueError(
+                    "CorpusState(mesh=..., runtime=...): mesh is a runtime "
+                    "property; build the ScorerRuntime with it instead")
+        self.runtime = runtime
+        self._D = runtime.n_shards
 
         ids = np.asarray(item_ids, np.int32)
         n0 = int(ids.shape[0])
@@ -153,69 +149,42 @@ class CorpusRankingEngine:
             self._free[g % self._D].append(g // self._D)
         self._n_free = self.capacity - n0
 
-        self.use_pallas_kernel = use_pallas_kernel
-        self.block_n = block_n
-
         self.params: dict | None = None
         self.cache: ItemCorpusCache | None = None
         self.model_step: int | None = None
         self._last_polled_sig: tuple | None = None
         self.refresh_count = 0
-        self.trace_count = 0      # incremented only when the scorer retraces
         # writer barrier: called before ANY corpus mutation or model
-        # refresh.  A QueryFrontend installs its drain() here so churn is
-        # serialized against in-flight micro-batches (single-writer /
-        # many-reader) — see repro.serving.frontend.
+        # refresh.  A QueryFrontend installs this tenant's drain here so
+        # churn is serialized against the tenant's OWN in-flight reads
+        # (single-writer / many-reader) without touching other tenants —
+        # see repro.serving.frontend.
         self.on_mutate = None
 
-        self._context = jax.jit(self._context_impl)
-        self._rows = jax.jit(self._rows_impl)
-        if mesh is None:
-            self._build = jax.jit(self._build_impl)
-            self._score = jax.jit(self._score_impl)
-            self._topk = jax.jit(self._topk_impl, static_argnames=("K",))
-            self._kernel_score = jax.jit(self._kernel_score_impl,
-                                         static_argnames=("K",))
-            self._write = jax.jit(self._write_impl)
-            self._drop = jax.jit(self._drop_impl)
-        else:
-            self._init_sharded(mesh)
+    # -- runtime delegation -------------------------------------------------
 
-    def _init_sharded(self, mesh):
-        """Swap the device-side ops for their shard_map versions.  Call
-        signatures and semantics are identical — churn idx stay GLOBAL
-        slots (the write body routes them), score/topk outputs stay in
-        global slot order — only the cache layout changes to the physical
-        (local, D, ...) view of ``repro.serving.sharded``."""
-        from repro.serving import sharded
+    @property
+    def cfg(self):
+        return self.runtime.cfg
 
-        self._build = jax.jit(sharded.make_build(self.cfg, mesh))
-        self._write = jax.jit(sharded.make_write(mesh))
-        self._drop = jax.jit(sharded.make_drop(mesh))
-        score = sharded.make_score(self.cfg, mesh, self._context_impl)
-        topk = sharded.make_topk(self.cfg, mesh, self._context_impl)
-        kscore = sharded.make_score(self.cfg, mesh, self._context_impl,
-                                    use_kernel=True, block_n=self.block_n)
-        ktopk = sharded.make_topk(self.cfg, mesh, self._context_impl,
-                                  use_kernel=True, block_n=self.block_n)
+    @property
+    def mesh(self):
+        return self.runtime.mesh
 
-        def _score_impl(params, cache, ctx_ids, ctx_w):
-            self.trace_count += 1    # python side effect: trace time only
-            return score(params, cache, ctx_ids, ctx_w)
+    @property
+    def use_pallas_kernel(self) -> bool:
+        return self.runtime.use_pallas_kernel
 
-        def _topk_impl(params, cache, ctx_ids, ctx_w, *, K):
-            self.trace_count += 1    # python side effect: trace time only
-            return topk(params, cache, ctx_ids, ctx_w, K=K)
+    @property
+    def _wdtype(self):
+        return self.runtime.wdtype
 
-        def _kernel_impl(params, cache, ctx_ids, ctx_w, *, K=None):
-            self.trace_count += 1
-            if K is None:
-                return kscore(params, cache, ctx_ids, ctx_w)
-            return ktopk(params, cache, ctx_ids, ctx_w, K=K)
-
-        self._score = jax.jit(_score_impl)
-        self._topk = jax.jit(_topk_impl, static_argnames=("K",))
-        self._kernel_score = jax.jit(_kernel_impl, static_argnames=("K",))
+    @property
+    def trace_count(self) -> int:
+        """Scorer traces of the UNDERLYING runtime — shared across every
+        tenant on it, which is exactly what the cross-tenant zero-retrace
+        invariants assert on."""
+        return self.runtime.trace_count
 
     # -- corpus introspection -----------------------------------------------
 
@@ -255,72 +224,15 @@ class CorpusRankingEngine:
         out[ok] = self._valid_np[idx[ok]]
         return out.reshape(np.shape(indices))
 
-    # -- jitted bodies ------------------------------------------------------
-
-    def _build_impl(self, params, slab_ids, slab_w, valid):
-        return build_corpus_cache(params, self.cfg, slab_ids, slab_w,
-                                  valid=valid)
-
-    def _rows_impl(self, params, ids, w):
-        return corpus_rows(params, self.cfg, ids, w)
-
-    def _write_impl(self, cache, Q, t, lin, idx):
-        """Scatter Δn precomputed rows into the slab and mark them live.
-        ``idx`` is bucket-padded with ``capacity`` (out of range => dropped),
-        so one trace serves every Δn in the bucket."""
-        return ItemCorpusCache(
-            Q_I=cache.Q_I.at[idx].set(Q, mode="drop"),
-            t_I=cache.t_I.at[idx].set(t, mode="drop"),
-            lin_I=cache.lin_I.at[idx].set(lin, mode="drop"),
-            valid=cache.valid.at[idx].set(True, mode="drop"),
-        )
-
-    def _drop_impl(self, cache, idx):
-        return cache._replace(valid=cache.valid.at[idx].set(False,
-                                                            mode="drop"))
-
-    def _context_impl(self, params, ctx_ids, ctx_w):
-        """Per-query context cache: P_C (Bq, rho, k), s_C (Bq,), lin_C (Bq,)."""
-        from repro.models.recsys.fwfm import context_inputs
-        V_C, lin_C = context_inputs(params, self.cfg, ctx_ids, ctx_w)
-        p = DPLRParams(params["U"], params["e"])
-        ctx = rk.dplr_context_cache(p, V_C, self.cfg.layout.n_context)
-        return ctx.P_C, ctx.s_C, lin_C
-
-    def _score_impl(self, params, cache, ctx_ids, ctx_w):
-        self.trace_count += 1     # python side effect: runs at trace time only
-        P_C, s_C, lin_C = self._context_impl(params, ctx_ids, ctx_w)
-        # direct fused form — same reduction order as rank_items, so the
-        # corpus-cached path is float32-epsilon-close to the per-query
-        # path; the math lives in corpus.masked_slab_scores, shared with
-        # the sharded engine so the two are bit-identical per slot.
-        return masked_slab_scores(params, cache.Q_I, cache.t_I, cache.lin_I,
-                                  cache.valid, P_C, s_C, lin_C)
-
-    def _topk_impl(self, params, cache, ctx_ids, ctx_w, *, K):
-        scores = self._score_impl(params, cache, ctx_ids, ctx_w)
-        return jax.lax.top_k(scores, K)
-
-    def _kernel_score_impl(self, params, cache, ctx_ids, ctx_w, *, K=None):
-        """Pallas-backed scorer entry point — jitted at THIS level so
-        ``trace_count`` tracks kernel-path retraces exactly like the jnp
-        path (a retrace here <=> a shape/static change for the kernel)."""
-        self.trace_count += 1     # python side effect: runs at trace time only
-        from repro.kernels import ops as kops
-        P_C, s_C, lin_C = self._context_impl(params, ctx_ids, ctx_w)
-        a_C = params["bias"] + lin_C + 0.5 * s_C
-        return kops.dplr_corpus_score(cache.Q_I, cache.a_I, params["e"],
-                                      P_C, a_C, valid=cache.valid, topk=K,
-                                      block_n=self.block_n)
-
     # -- corpus mutation (the churn path) -----------------------------------
 
     def _begin_write(self) -> None:
         """Run the writer barrier (if installed) before mutating the
         corpus or swapping the model.  With a ``QueryFrontend`` attached
-        this drains every queued and in-flight micro-batch first, so no
-        reader ever observes a half-applied write and every reply is
-        delivered against the snapshot its batch was dispatched on."""
+        this drains THIS tenant's queued and in-flight micro-batches
+        first, so no reader ever observes a half-applied write and every
+        reply is delivered against the snapshot its batch was dispatched
+        on — other tenants' reads are untouched."""
         if self.on_mutate is not None:
             self.on_mutate()
 
@@ -343,37 +255,12 @@ class CorpusRankingEngine:
         heapq.heappush(self._free[g % self._D], g // self._D)
         self._n_free += 1
 
-    def _pad_slots(self, slots):
-        """Pad a Δn slot vector to the next power-of-two bucket so the
-        jitted scatter traces O(log capacity) times total, not once per
-        Δn.  Filler entries get slot index ``capacity`` => dropped."""
-        pad = next_pow2(max(len(slots), 1)) - len(slots)
-        if pad:
-            slots = np.concatenate([slots,
-                                    np.full(pad, self.capacity, np.int32)])
-        return slots
-
-    def _bucket(self, slots, ids, w):
-        """Bucket-pad a Δn row write (slots via ``_pad_slots``; filler rows
-        are zero-id weight-one placeholders whose scatter is dropped)."""
-        dn = len(slots)
-        slots = self._pad_slots(slots)
-        pad = len(slots) - dn
-        if pad:
-            ids = np.concatenate([ids, np.zeros((pad, ids.shape[1]),
-                                                np.int32)])
-            w = np.concatenate([w, np.ones((pad, w.shape[1]), np.float32)])
-        return slots, ids, w
-
     def _scatter_rows(self, slots, ids, w):
         self._slab_ids[slots] = ids
         self._slab_w[slots] = w
         self._valid_np[slots] = True
-        slots_p, ids_p, w_p = self._bucket(slots, ids, w)
-        Q, t, lin = self._rows(self.params, jnp.asarray(ids_p),
-                               jnp.asarray(w_p, self._wdtype))
-        self.cache = self._write(self.cache, Q, t, lin,
-                                 jnp.asarray(slots_p))
+        self.cache = self.runtime.write_rows(self.params, self.cache,
+                                             slots, ids, w)
 
     def _payload(self, ids, weights, op, n_expected=None):
         """Normalize + validate a (Δn, n_item_slots) ids/weights payload;
@@ -427,7 +314,7 @@ class CorpusRankingEngine:
         self._valid_np[slots] = False
         for s in slots:
             self._free_slot(int(s))
-        self.cache = self._drop(self.cache, jnp.asarray(self._pad_slots(slots)))
+        self.cache = self.runtime.drop_rows(self.cache, slots)
 
     def _check_live(self, slots, op):
         if len(np.unique(slots)) != len(slots):
@@ -440,7 +327,9 @@ class CorpusRankingEngine:
     def _grow(self, min_extra: int) -> None:
         """Double the slab (at least) so >= min_extra slots are free.  The
         ONLY shape-changing operation: the next score/build traces once for
-        the new capacity, amortized O(1) per added item.
+        the new capacity (once per capacity on the SHARED runtime — a
+        second tenant reaching the same capacity retraces nothing),
+        amortized O(1) per added item.
 
         Sharded: growth pads the LOCAL axis of every shard's cache slice —
         striped ownership means the new global slots [old, new) are exactly
@@ -481,24 +370,24 @@ class CorpusRankingEngine:
 
     def refresh(self, params: dict, step: int | None = None) -> None:
         """Install a model snapshot: rebuild every slab row IN PLACE (one
-        jitted dispatch, slot assignments preserved), keep the scorer's jit
-        cache intact.  Sharded: each device rebuilds only its own
+        jitted dispatch, slot assignments preserved), keep the runtime's
+        jit cache intact.  Sharded: each device rebuilds only its own
         capacity/D rows (the global-order host slab reshapes to the
         physical (local, D) view for free, because ownership is striped)."""
         self._begin_write()
         self.params = params
         if self.mesh is None:
-            self.cache = self._build(params, jnp.asarray(self._slab_ids),
-                                     jnp.asarray(self._slab_w, self._wdtype),
-                                     jnp.asarray(self._valid_np))
+            self.cache = self.runtime.build(
+                params, jnp.asarray(self._slab_ids),
+                jnp.asarray(self._slab_w, self._wdtype),
+                jnp.asarray(self._valid_np))
         else:
             lc = self.local_capacity
             ids = self._slab_ids.reshape(lc, self._D, -1)
             w = self._slab_w.reshape(lc, self._D, -1)
-            self.cache = self._build(params, jnp.asarray(ids),
-                                     jnp.asarray(w, self._wdtype),
-                                     jnp.asarray(
-                                         self._valid_np.reshape(lc, self._D)))
+            self.cache = self.runtime.build(
+                params, jnp.asarray(ids), jnp.asarray(w, self._wdtype),
+                jnp.asarray(self._valid_np.reshape(lc, self._D)))
         self.model_step = step
         self.refresh_count += 1
 
@@ -557,8 +446,8 @@ class CorpusRankingEngine:
         self._require_ready()
         ids, w = self._ctx_arrays(context_ids, context_weights)
         if self.use_pallas_kernel:
-            return self._kernel_score(self.params, self.cache, ids, w)
-        return self._score(self.params, self.cache, ids, w)
+            return self.runtime.kernel_score(self.params, self.cache, ids, w)
+        return self.runtime.score(self.params, self.cache, ids, w)
 
     def topk(self, context_ids, K: int, context_weights=None):
         """((Bq, K) scores, (Bq, K) int32 corpus slot indices) — only the
@@ -572,8 +461,8 @@ class CorpusRankingEngine:
         top-``K'`` result — the property the frontend's one-max-K-
         dispatch-per-batch design rests on.  Non-blocking, like
         ``score``.  K is static under jit: each distinct K traces once
-        (the frontend quantizes K to power-of-two buckets for exactly
-        this reason)."""
+        on the shared runtime (the frontend quantizes K to power-of-two
+        buckets for exactly this reason)."""
         self._require_ready()
         if not 0 < K <= self.n_items:
             raise ValueError(
@@ -581,10 +470,42 @@ class CorpusRankingEngine:
                 f"live items")
         ids, w = self._ctx_arrays(context_ids, context_weights)
         if self.use_pallas_kernel:
-            return self._kernel_score(self.params, self.cache, ids, w, K=K)
-        return self._topk(self.params, self.cache, ids, w, K=K)
+            return self.runtime.kernel_score(self.params, self.cache, ids,
+                                             w, K=K)
+        return self.runtime.topk(self.params, self.cache, ids, w, K=K)
+
+    def warmup_grid(self, context_ids, context_weights=None, *,
+                    max_batch: int = 16, max_k: int = 16) -> int:
+        """Trace the reachable (Bq bucket x K bucket) grid for THIS
+        state's capacity with a representative context; returns the
+        number of dispatches.  On a SHARED runtime the grid is warm for
+        every tenant with the same capacity: warming a second such tenant
+        dispatches the same grid but adds zero traces (the cross-tenant
+        aha the multi-tenant benchmark asserts).  Call after
+        ``refresh``."""
+        ctx = np.asarray(context_ids, np.int32).reshape(-1)
+        w = (np.ones(ctx.shape, np.float32) if context_weights is None
+             else np.asarray(context_weights, np.float32).reshape(-1))
+        n = 0
+        bq = 1
+        while bq <= max_batch:
+            ids_b = np.broadcast_to(ctx, (bq, ctx.shape[0]))
+            w_b = np.broadcast_to(w, (bq, w.shape[0]))
+            k = 1
+            while k <= min(next_pow2(max_k), self.n_items):
+                self.topk(ids_b, k, w_b)
+                n += 1
+                k *= 2
+            bq *= 2
+        return n
 
     def score_query(self, query: dict) -> jax.Array:
         """Convenience for ``rank_items``-style query dicts (item tensors,
         if present, are ignored — the corpus is the engine's)."""
         return self.score(query["context_ids"], query.get("context_weights"))
+
+
+# The historical single-tenant name: one CorpusState over a private
+# runtime.  Kept as a true alias so isinstance checks and imports from
+# every prior PR keep working.
+CorpusRankingEngine = CorpusState

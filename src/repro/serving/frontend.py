@@ -1,18 +1,38 @@
-"""Async micro-batching query frontend (the online request path).
+"""Tenant-routed async micro-batching query frontend (the online path).
 
-``CorpusRankingEngine`` scores a *batch* of query contexts in one jitted
-dispatch, but an online service receives queries one at a time, each with
-its own K and latency budget.  ``QueryFrontend`` is the layer in between:
-it accepts individual ranking requests, coalesces them into power-of-two
-padded micro-batches, and keeps a bounded window of dispatched-but-
-unresolved batches in flight so host-side work for batch N+1 overlaps
-with device scoring of batch N.
+A ``CorpusState`` scores a *batch* of query contexts for ONE corpus in
+one jitted dispatch, but an online service receives queries one at a
+time — each with its own K, deadline, and (in a real ad deployment)
+**tenant**: the per-advertiser / per-market / per-surface corpus it
+ranks against.  ``QueryFrontend`` is the layer in between: it keeps one
+request queue per tenant, coalesces each tenant's requests into
+power-of-two padded micro-batches, round-robins the non-empty tenant
+queues into a SHARED in-flight dispatch window, and sheds load it cannot
+serve in time with a fast ``Overloaded`` error instead of queueing it.
 
-Request lifecycle (see docs/frontend.md for the full walkthrough):
+Request lifecycle (see docs/multitenant.md for the full walkthrough):
 
-    submit ──► queue ──► [bucket Bq, pad] ──► dispatch (async) ──► in-flight
-                                                                     │
-    reply  ◄── truncate to per-query K ◄── resolve (block) ◄─────────┘
+    submit ──► admission ──► per-tenant queue (EDF order)
+                  │                 │   round-robin across tenants
+              Overloaded            ▼
+                         [bucket Bq, pad] ──► dispatch (async) ──► in-flight
+                                                                      │
+    reply  ◄── truncate to per-query K ◄── resolve (block) ◄──────────┘
+
+A reply is ``((k,) scores, (k,) int32 corpus slot ids)`` in the
+engine's dtypes, best first — bit-exact vs a lone ``engine.topk(ctx, k)``
+call on that request's tenant.
+
+Tenants
+-------
+Construct with one engine (single-tenant, exactly the historical API) or
+a ``{name: CorpusState}`` dict; ``add_tenant``/``remove_tenant`` manage
+the set live.  Each tenant keeps its own queue, stats, and writer
+barrier; they share the dispatch window, the (Bq, K) bucket grid, and —
+when their states sit on one ``ScorerRuntime`` — the trace cache, so a
+new tenant with an already-warm shape signature serves with ZERO
+retraces.  A micro-batch never mixes tenants (different corpora), but
+batches from different tenants overlap freely in the in-flight window.
 
 Coalescing and the retrace invariant
 ------------------------------------
@@ -29,42 +49,68 @@ quantizes both:
     is sorted, so the first K of top-``K_pad`` IS top-K).
 
 The reachable shape set is therefore the fixed grid (Bq buckets x K
-buckets): ``warmup()`` traces it once, and after that arbitrary arrival
-patterns, batch sizes, and per-query Ks cause ZERO retraces (asserted by
-``tests/test_frontend.py`` and the ``--frontend`` demo).
+buckets x tenant capacities): ``warmup()`` traces it once per DISTINCT
+capacity, and after that arbitrary arrival patterns, batch sizes,
+per-query Ks, and tenant mixes cause ZERO retraces (asserted by
+``tests/test_frontend.py``, ``tests/test_multitenant.py``, and the
+``--frontend``/``--tenant-demo`` drivers).
+
+Dispatch order: EDF within a tenant, round-robin across tenants
+---------------------------------------------------------------
+Within a tenant's queue, requests that carry deadlines pop
+earliest-deadline-first; deadline-less requests keep FIFO order (and
+sort after any deadlined request) — a tight-deadline late arrival
+overtakes a slack early one (tested).  Across tenants, ``pump`` and
+``flush`` rotate a round-robin cursor over the non-empty queues, taking
+at most one micro-batch per tenant per turn, so one tenant's backlog can
+never starve another's traffic out of the shared window.
+
+Admission control (load shedding)
+---------------------------------
+Two signals, both OFF by default (pass the knob to enable):
+
+  * ``admit_depth`` — a tenant whose queue already holds this many
+    requests sheds new submits with ``Overloaded`` immediately: under
+    sustained overload the queue stays bounded and every accepted
+    request is served, instead of every request timing out.
+  * ``admit_deadlines`` — a deadlined submit whose predicted completion
+    ``now + max_wait + (queued batches + in-flight + 1) · EWMA(batch
+    service time)`` already exceeds its deadline sheds with
+    ``Overloaded`` at submit — a fast reject, not a ``DeadlineExceeded``
+    after the deadline burned in the queue.
+
+Shedding raises from ``submit`` before the request is queued; it never
+affects already-accepted requests (counted in ``stats["shed"]``).
 
 Overlapped dispatch (the async window)
 --------------------------------------
 ``engine.topk`` returns device arrays immediately (JAX async dispatch);
-nothing blocks until a result is *read*.  The frontend exploits that with
-a depth-``inflight`` window (default 2, i.e. double buffering):
+nothing blocks until a result is *read*.  The frontend exploits that
+with a depth-``inflight`` window (default 2, i.e. double buffering)
+SHARED across tenants: batch N's replies are materialized (one blocking
+host sync) only when the window is full, the caller asks for a result,
+or a drain runs — by which time batch N+1's assembly and context
+transfer already happened *under* batch N's device time.
 
-    host:    assemble B0 ─ dispatch B0 ─ assemble B1 ─ dispatch B1 ─ resolve B0 …
-    device:               └─ score B0 ──────────────────┘└─ score B1 ─ …
-
-Batch N's replies are materialized (one blocking host sync) only when
-the window is full, the caller asks for a result, or the frontend drains
-— by which time batch N+1's assembly and context transfer already
-happened *under* batch N's device time.
-
-Churn vs in-flight reads (single-writer / many-reader)
-------------------------------------------------------
+Churn vs in-flight reads (per-tenant writer barrier)
+----------------------------------------------------
 Corpus mutations and model refreshes are serialized against in-flight
-queries: constructing a frontend installs ``engine.on_mutate = drain``,
-so ANY writer entry point (``add_items`` / ``remove_items`` /
-``update_items`` / ``refresh``) first flushes queued requests and
-resolves every in-flight batch.  Every reply is therefore computed — and
-delivered — against the corpus snapshot that was live when its batch was
-dispatched, and a returned slot id is live at reply time: churn can
-never surface a dead slot through the frontend (tested).
+queries PER TENANT: registering tenant T installs ``T.on_mutate =
+drain(T)``, so any writer entry point on T's state (``add_items`` /
+``remove_items`` / ``update_items`` / ``refresh``) first flushes T's
+queued requests and resolves T's in-flight batches — and ONLY T's:
+tenant-A churn never drains tenant-B's in-flight reads (tested).  Every
+reply is computed — and delivered — against the corpus snapshot that was
+live when its batch was dispatched, and a returned slot id is live at
+reply time.
 
-The ``on_mutate`` hook alone makes this airtight when reads and writes
+The per-tenant hook alone makes this airtight when reads and writes
 share one thread (the event-loop discipline).  A SEPARATE writer thread
 must mutate through the frontend's own ``add_items`` / ``remove_items``
-/ ``update_items`` / ``refresh`` wrappers, which hold the frontend lock
-across the barrier AND the engine write — otherwise a submit could
-dispatch between the drain and the mask update and deliver slots the
-in-progress churn is about to kill.
+/ ``update_items`` / ``refresh`` wrappers (``tenant=`` selects the
+lane), which hold the frontend lock across the barrier AND the state
+write — otherwise a submit could dispatch between the drain and the mask
+update and deliver slots the in-progress churn is about to kill.
 
 Deadlines
 ---------
@@ -83,8 +129,11 @@ the writer wrappers.
 from __future__ import annotations
 
 import collections
+import heapq
+import math
 import threading
 import time
+from functools import partial
 
 import numpy as np
 
@@ -99,6 +148,13 @@ class FrontendError(RuntimeError):
     """A micro-batch dispatch failed; carried to every request in it."""
 
 
+class Overloaded(RuntimeError):
+    """Admission control shed this request at submit: the tenant's queue
+    is saturated (``admit_depth``) or the deadline is already infeasible
+    (``admit_deadlines``).  Raised BEFORE the request is queued — the
+    fast reject that keeps accepted requests inside their deadlines."""
+
+
 class PendingQuery:
     """Future-like handle for one submitted ranking request.
 
@@ -106,23 +162,27 @@ class PendingQuery:
     ``(K,) int32`` corpus slot indices, best first — blocking until the
     request's micro-batch resolves (and forcing a flush if it is still
     queued).  ``done()`` never blocks.  ``submit_time``/``done_time`` are
-    frontend-clock stamps for latency accounting.
+    frontend-clock stamps for latency accounting; ``tenant`` names the
+    lane that served it.
     """
 
-    __slots__ = ("k", "deadline", "submit_time", "done_time",
-                 "_frontend", "_ctx", "_w", "_scores", "_slots", "_error")
+    __slots__ = ("k", "deadline", "submit_time", "done_time", "tenant",
+                 "_frontend", "_ctx", "_w", "_scores", "_slots", "_error",
+                 "_taken")
 
-    def __init__(self, frontend, ctx, w, k, deadline, submit_time):
+    def __init__(self, frontend, tenant, ctx, w, k, deadline, submit_time):
         self.k = k
         self.deadline = deadline
         self.submit_time = submit_time
         self.done_time = None
+        self.tenant = tenant
         self._frontend = frontend
         self._ctx = ctx
         self._w = w
         self._scores = None
         self._slots = None
         self._error = None
+        self._taken = False          # popped from its lane's queue
 
     def done(self) -> bool:
         return self.done_time is not None
@@ -131,8 +191,12 @@ class PendingQuery:
         """((K,) scores, (K,) int32 slot ids).  Blocks: flushes the queue
         if needed, then resolves in-flight batches up to this one.  Raises
         ``DeadlineExceeded``/``FrontendError`` if the request failed."""
-        if not self.done():
-            self._frontend._resolve_until(self)
+        # snapshot BEFORE the done() check: a concurrent writer-wrapper
+        # drain may finish this request (clearing _frontend) between the
+        # check and the call; _resolve_until re-checks under the lock
+        fe = self._frontend
+        if not self.done() and fe is not None:
+            fe._resolve_until(self)
         if self._error is not None:
             raise self._error
         return self._scores, self._slots
@@ -150,28 +214,46 @@ class PendingQuery:
 
 class _InFlight:
     """One dispatched-but-unresolved micro-batch: the device arrays plus
-    the requests (in row order) awaiting truncation."""
+    the requests (in row order) awaiting truncation, and the tenant it
+    was scored against."""
 
-    __slots__ = ("requests", "vals", "idx")
+    __slots__ = ("requests", "vals", "idx", "tenant")
 
-    def __init__(self, requests, vals, idx):
+    def __init__(self, requests, vals, idx, tenant):
         self.requests = requests
         self.vals = vals
         self.idx = idx
+        self.tenant = tenant
+
+
+class _TenantLane:
+    """Per-tenant frontend state: the engine (CorpusState), the EDF
+    request queue, and per-tenant counters."""
+
+    __slots__ = ("name", "engine", "heap", "arrivals", "n_ctx", "stats")
+
+    def __init__(self, name, engine):
+        self.name = name
+        self.engine = engine
+        self.heap: list = []                      # (deadline|inf, seq, req)
+        self.arrivals: collections.deque = collections.deque()  # FIFO view
+        self.n_ctx = len(engine.cfg.layout.slots_of("context"))
+        self.stats = {"submitted": 0, "completed": 0, "shed": 0}
 
 
 class QueryFrontend:
     """Coalesces individual ranking requests into micro-batched, overlap-
-    dispatched ``engine.topk`` calls.
+    dispatched ``engine.topk`` calls, routed per tenant.
 
     Parameters
     ----------
-    engine : CorpusRankingEngine
-        The scoring backend (single-device or mesh-sharded — the frontend
-        is agnostic; it only calls ``engine.topk``).  The frontend
-        installs itself as ``engine.on_mutate``, so corpus churn and
-        model refresh drain in-flight queries first (one frontend per
-        engine).
+    engines : CorpusState | dict[str, CorpusState]
+        One scoring state (single-tenant; lane name ``"default"``) or a
+        dict of tenant name -> state.  Each state may be single-device or
+        mesh-sharded; states sharing one ``ScorerRuntime`` share the
+        trace cache.  The frontend installs itself as each state's
+        ``on_mutate``, so corpus churn and model refresh drain THAT
+        tenant's in-flight queries first (one frontend per state).
     max_batch : int
         Largest micro-batch (power of two).  Bq buckets are
         ``1, 2, 4, …, max_batch``; a full bucket dispatches immediately.
@@ -179,18 +261,34 @@ class QueryFrontend:
         Largest accepted per-request K.  K buckets are the powers of two
         up to ``next_pow2(max_k)``.
     max_wait : float
-        Seconds a queued request may age before the queue is force-
-        dispatched at the next ``pump`` — the latency/occupancy knob.
+        Seconds a queued request may age before its lane's partial tail
+        is force-dispatched at the next ``pump`` — the latency/occupancy
+        knob.
     inflight : int
-        Depth of the unresolved-dispatch window (2 = double buffering).
-        Dispatching past the window resolves the oldest batch first.
+        Depth of the unresolved-dispatch window, shared across tenants
+        (2 = double buffering).  Dispatching past the window resolves the
+        oldest batch first.
+    admit_depth : int | None
+        Per-tenant queue-depth admission bound: a submit finding this
+        many requests already queued on its lane sheds with
+        ``Overloaded``.  ``None`` (default) disables depth shedding.
+    admit_deadlines : bool
+        Shed deadlined submits whose predicted completion already
+        exceeds their deadline (EWMA of batch service time; see module
+        docstring).  Default off.
+    auto_pump : bool
+        Run ``pump`` from inside ``submit`` (default).  Event-loop
+        servers that pump on their own tick — and tests that need
+        queues to actually build up — pass ``False``.
     clock : callable
         Time source (seconds).  Injectable for deterministic tests and
         trace-replay simulation; defaults to ``time.perf_counter``.
     """
 
-    def __init__(self, engine, *, max_batch: int = 16, max_k: int = 16,
+    def __init__(self, engines, *, max_batch: int = 16, max_k: int = 16,
                  max_wait: float = 2e-3, inflight: int = 2,
+                 admit_depth: int | None = None,
+                 admit_deadlines: bool = False, auto_pump: bool = True,
                  clock=time.perf_counter):
         if max_batch < 1 or max_batch & (max_batch - 1):
             raise ValueError(f"max_batch must be a power of two, "
@@ -199,157 +297,313 @@ class QueryFrontend:
             raise ValueError(f"max_k must be >= 1, got {max_k}")
         if inflight < 1:
             raise ValueError(f"inflight depth must be >= 1, got {inflight}")
-        self.engine = engine
+        if admit_depth is not None and admit_depth < 1:
+            raise ValueError(f"admit_depth must be >= 1, got {admit_depth}")
         self.max_batch = max_batch
         self.max_k = max_k
         self.max_wait = float(max_wait)
         self.inflight = inflight
+        self.admit_depth = admit_depth
+        self.admit_deadlines = admit_deadlines
+        self.auto_pump = auto_pump
         self.clock = clock
-        self._n_ctx_slots = len(engine.cfg.layout.slots_of("context"))
-        self._queue: collections.deque[PendingQuery] = collections.deque()
+        self._lanes: dict[str, _TenantLane] = {}
+        self._rr = 0                 # round-robin cursor over lane order
+        self._seq = 0                # global FIFO tie-break for EDF
+        self._svc = None             # EWMA batch service time (seconds)
         self._window: collections.deque[_InFlight] = collections.deque()
         self._lock = threading.RLock()
-        # the writer barrier: any engine mutation drains this frontend
-        # BEFORE touching the corpus (single-writer / many-reader)
-        engine.on_mutate = self.drain
         self.stats = {"submitted": 0, "completed": 0, "expired": 0,
-                      "failed": 0, "dispatches": 0, "dispatched_rows": 0,
-                      "padded_rows": 0, "drains": 0}
+                      "failed": 0, "shed": 0, "dispatches": 0,
+                      "dispatched_rows": 0, "padded_rows": 0, "drains": 0}
+        if hasattr(engines, "topk"):         # single engine, classic API
+            engines = {"default": engines}
+        for name, engine in engines.items():
+            self.add_tenant(name, engine)
+
+    # -- tenant management --------------------------------------------------
+
+    def add_tenant(self, name: str, engine) -> None:
+        """Register a tenant lane and install its writer barrier
+        (``engine.on_mutate`` -> drain THIS tenant only).  The new tenant
+        serves with zero retraces if its state's shape signature —
+        runtime + capacity — is already warm."""
+        with self._lock:
+            if name in self._lanes:
+                raise ValueError(f"tenant {name!r} already registered")
+            self._lanes[name] = _TenantLane(name, engine)
+            # the per-tenant writer barrier: any mutation of THIS state
+            # drains THIS lane before touching the corpus — other
+            # tenants' queues and in-flight batches are untouched
+            engine.on_mutate = partial(self._drain_tenant, name)
+
+    def remove_tenant(self, name: str) -> None:
+        """Drain and deregister a tenant (its queued + in-flight requests
+        are answered first; the state's writer barrier is detached)."""
+        with self._lock:
+            self._drain_tenant(name)
+            lane = self._lanes.pop(name)
+            lane.engine.on_mutate = None
+            self._rr = 0
+
+    @property
+    def tenants(self) -> tuple:
+        return tuple(self._lanes)
+
+    def lane_stats(self, tenant: str | None = None) -> dict:
+        """Per-tenant counters: submitted / completed / shed / queued."""
+        lane = self._lane(tenant)
+        return dict(lane.stats, queued=len(lane.heap))
+
+    def _lane(self, tenant: str | None) -> _TenantLane:
+        if tenant is None:
+            if len(self._lanes) != 1:
+                raise ValueError(
+                    f"tenant= required: frontend routes "
+                    f"{len(self._lanes)} tenants {tuple(self._lanes)}")
+            return next(iter(self._lanes.values()))
+        try:
+            return self._lanes[tenant]
+        except KeyError:
+            raise ValueError(f"unknown tenant {tenant!r}; registered: "
+                             f"{tuple(self._lanes)}") from None
 
     # -- request ingress ----------------------------------------------------
 
     def submit(self, context_ids, context_weights=None, *, k: int = 10,
-               deadline: float | None = None) -> PendingQuery:
+               deadline: float | None = None,
+               tenant: str | None = None) -> PendingQuery:
         """Enqueue one ranking request; returns its ``PendingQuery``.
 
         ``context_ids``: (n_context_slots,) int — ONE query's context
         (a leading unit axis is squeezed).  ``k``: winners wanted,
         ``1 <= k <= max_k``.  ``deadline``: absolute frontend-clock time
         after which the request must fail rather than be served late.
-        Non-blocking; runs a ``pump`` so a full bucket dispatches at once.
+        ``tenant``: the lane to rank against (optional when exactly one
+        tenant is registered).  Non-blocking; raises ``Overloaded``
+        instead of queueing when admission control sheds (see module
+        docstring).  With ``auto_pump`` a full bucket dispatches at once.
         """
-        ctx = np.asarray(context_ids, np.int32).reshape(-1)
-        if ctx.shape[0] != self._n_ctx_slots:
-            raise ValueError(f"context has {ctx.shape[0]} slots, layout "
-                             f"expects {self._n_ctx_slots}")
-        w = (np.ones(ctx.shape, np.float32) if context_weights is None
-             else np.asarray(context_weights, np.float32).reshape(-1))
-        if w.shape != ctx.shape:
-            raise ValueError(f"context_weights shape {w.shape} != "
-                             f"context shape {ctx.shape}")
-        if not 1 <= k <= self.max_k:
-            raise ValueError(f"k={k} outside [1, max_k={self.max_k}]")
         with self._lock:
+            lane = self._lane(tenant)
+            ctx = np.asarray(context_ids, np.int32).reshape(-1)
+            if ctx.shape[0] != lane.n_ctx:
+                raise ValueError(f"context has {ctx.shape[0]} slots, "
+                                 f"layout expects {lane.n_ctx}")
+            w = (np.ones(ctx.shape, np.float32) if context_weights is None
+                 else np.asarray(context_weights, np.float32).reshape(-1))
+            if w.shape != ctx.shape:
+                raise ValueError(f"context_weights shape {w.shape} != "
+                                 f"context shape {ctx.shape}")
+            if not 1 <= k <= self.max_k:
+                raise ValueError(f"k={k} outside [1, max_k={self.max_k}]")
             now = self.clock()
-            req = PendingQuery(self, ctx, w, int(k), deadline, now)
-            self._queue.append(req)
+            self._admit(lane, deadline, now)
+            req = PendingQuery(self, lane.name, ctx, w, int(k), deadline,
+                               now)
+            heapq.heappush(lane.heap,
+                           (math.inf if deadline is None else deadline,
+                            self._seq, req))
+            self._seq += 1
+            lane.arrivals.append(req)
+            lane.stats["submitted"] += 1
             self.stats["submitted"] += 1
-            self.pump(now)
+            if self.auto_pump:
+                self.pump(now)
         return req
+
+    def _admit(self, lane, deadline, now) -> None:
+        """Admission control: shed (raise ``Overloaded``) instead of
+        queueing a request the frontend cannot serve in time."""
+        if (self.admit_depth is not None
+                and len(lane.heap) >= self.admit_depth):
+            lane.stats["shed"] += 1
+            self.stats["shed"] += 1
+            raise Overloaded(
+                f"tenant {lane.name!r} queue depth {len(lane.heap)} >= "
+                f"admit_depth {self.admit_depth}")
+        if (self.admit_deadlines and deadline is not None
+                and self._svc is not None):
+            backlog = (len(lane.heap) // self.max_batch
+                       + len(self._window) + 1)
+            eta = now + self.max_wait + backlog * self._svc
+            if eta > deadline:
+                lane.stats["shed"] += 1
+                self.stats["shed"] += 1
+                raise Overloaded(
+                    f"tenant {lane.name!r}: predicted completion "
+                    f"{eta - now:.4f}s out exceeds deadline "
+                    f"{deadline - now:.4f}s out")
 
     # -- batching policy ----------------------------------------------------
 
+    def _rotation(self) -> list[_TenantLane]:
+        lanes = list(self._lanes.values())
+        return lanes[self._rr:] + lanes[:self._rr]
+
+    def _pick(self, pred) -> _TenantLane | None:
+        """Next lane satisfying ``pred`` in round-robin order; advances
+        the cursor past it, so repeated picks rotate across tenants."""
+        lanes = list(self._lanes.values())
+        for i in range(len(lanes)):
+            j = (self._rr + i) % len(lanes)
+            if pred(lanes[j]):
+                self._rr = (j + 1) % len(lanes)
+                return lanes[j]
+        return None
+
+    def _oldest_age(self, lane, now) -> float | None:
+        """Age of the lane's oldest still-queued request (arrival order —
+        independent of the EDF dispatch order)."""
+        while lane.arrivals and lane.arrivals[0]._taken:
+            lane.arrivals.popleft()
+        if not lane.arrivals:
+            return None
+        return now - lane.arrivals[0].submit_time
+
     def pump(self, now: float | None = None) -> int:
-        """Advance the frontend: dispatch every full ``max_batch`` bucket,
-        plus the partial tail once its oldest request has aged past
-        ``max_wait``.  Call this from the serving loop on every arrival
-        (and on ticks while idle); non-blocking unless the in-flight
-        window must evict.  Returns the number of batches dispatched."""
+        """Advance the frontend: dispatch every full ``max_batch`` bucket
+        (round-robin across tenants), plus each lane's partial tail once
+        its oldest request has aged past ``max_wait``.  Call this from
+        the serving loop on every arrival (and on ticks while idle);
+        non-blocking unless the in-flight window must evict.  Returns the
+        number of batches dispatched."""
         with self._lock:
             if now is None:
                 now = self.clock()
             n = 0
-            while len(self._queue) >= self.max_batch:
-                self._dispatch(self._take(self.max_batch), now)
+            while True:
+                lane = self._pick(
+                    lambda l: len(l.heap) >= self.max_batch)
+                if lane is None:
+                    break
+                self._dispatch(lane, self._take(lane, self.max_batch), now)
                 n += 1
-            if self._queue and (
-                    now - self._queue[0].submit_time >= self.max_wait):
-                self._dispatch(self._take(len(self._queue)), now)
-                n += 1
+            for lane in self._rotation():
+                age = self._oldest_age(lane, now)
+                if age is not None and age >= self.max_wait:
+                    self._dispatch(lane, self._take(lane, len(lane.heap)),
+                                   now)
+                    n += 1
             return n
 
     def flush(self) -> int:
-        """Dispatch everything queued regardless of age (still async —
+        """Dispatch everything queued on every tenant regardless of age,
+        one micro-batch per tenant per round-robin turn (still async —
         does not resolve).  Returns the number of batches dispatched."""
         with self._lock:
             now = self.clock()
             n = 0
-            while self._queue:
-                self._dispatch(self._take(min(len(self._queue),
-                                              self.max_batch)), now)
+            while True:
+                lane = self._pick(lambda l: len(l.heap) > 0)
+                if lane is None:
+                    break
+                self._dispatch(
+                    lane,
+                    self._take(lane, min(len(lane.heap), self.max_batch)),
+                    now)
                 n += 1
             return n
 
     def drain(self) -> None:
-        """Flush the queue and resolve EVERY in-flight batch (blocking).
-        This is the writer barrier: the engine calls it (via
-        ``on_mutate``) before any corpus mutation or model refresh."""
+        """Flush and resolve EVERY tenant's queued and in-flight batches
+        (blocking) — the full-stop barrier, e.g. before shutdown."""
+        with self._lock:
+            for name in list(self._lanes):
+                self._drain_tenant(name)
+
+    def _drain_tenant(self, name: str) -> None:
+        """The per-tenant writer barrier: flush THIS lane's queue and
+        resolve THIS lane's in-flight batches (blocking).  The state
+        calls it (via ``on_mutate``) before any corpus mutation or model
+        refresh; other tenants' queues and windows are untouched."""
         with self._lock:
             self.stats["drains"] += 1
-            self.flush()
+            lane = self._lanes[name]
+            now = self.clock()
+            while lane.heap:
+                self._dispatch(
+                    lane,
+                    self._take(lane, min(len(lane.heap), self.max_batch)),
+                    now)
+            keep = collections.deque()
             while self._window:
-                self._resolve_oldest()
+                fl = self._window.popleft()
+                if fl.tenant == name:
+                    self._resolve(fl)
+                else:
+                    keep.append(fl)
+            self._window = keep
 
     # -- writer entry points (atomic barrier + mutation) --------------------
     #
-    # Calling the engine's mutators directly still drains the frontend
-    # first (the on_mutate hook), which fully serializes churn in the
+    # Calling a state's mutators directly still drains its lane first
+    # (the on_mutate hook), which fully serializes churn in the
     # single-threaded event-loop discipline.  A SEPARATE writer thread
     # must mutate through these wrappers instead: they hold the frontend
     # lock across barrier AND mutation, so no submit can slip a dispatch
     # in between drain and the mask update (which could deliver slots the
     # in-progress churn is about to kill).
 
-    def add_items(self, ids, weights=None):
-        """``engine.add_items`` under the frontend lock (drain + write
-        atomic vs concurrent submits); returns the new slot indices."""
+    def add_items(self, ids, weights=None, *, tenant: str | None = None):
+        """``engine.add_items`` on the tenant's state under the frontend
+        lock (drain + write atomic vs concurrent submits); returns the
+        new slot indices."""
         with self._lock:
-            return self.engine.add_items(ids, weights)
+            return self._lane(tenant).engine.add_items(ids, weights)
 
-    def remove_items(self, indices) -> None:
+    def remove_items(self, indices, *, tenant: str | None = None) -> None:
         """``engine.remove_items`` under the frontend lock."""
         with self._lock:
-            self.engine.remove_items(indices)
+            self._lane(tenant).engine.remove_items(indices)
 
-    def update_items(self, indices, ids, weights=None) -> None:
+    def update_items(self, indices, ids, weights=None, *,
+                     tenant: str | None = None) -> None:
         """``engine.update_items`` under the frontend lock."""
         with self._lock:
-            self.engine.update_items(indices, ids, weights)
+            self._lane(tenant).engine.update_items(indices, ids, weights)
 
-    def refresh(self, params, step=None) -> None:
+    def refresh(self, params, step=None, *,
+                tenant: str | None = None) -> None:
         """``engine.refresh`` (model hot-swap) under the frontend lock."""
         with self._lock:
-            self.engine.refresh(params, step=step)
+            self._lane(tenant).engine.refresh(params, step=step)
 
-    def maybe_refresh(self, manager, template, select=lambda t: t) -> bool:
+    def maybe_refresh(self, manager, template, select=lambda t: t, *,
+                      tenant: str | None = None) -> bool:
         """``engine.maybe_refresh`` under the frontend lock."""
         with self._lock:
-            return self.engine.maybe_refresh(manager, template,
-                                             select=select)
+            return self._lane(tenant).engine.maybe_refresh(
+                manager, template, select=select)
 
-    def _take(self, m: int) -> list[PendingQuery]:
-        return [self._queue.popleft() for _ in range(m)]
+    def _take(self, lane, m: int) -> list[PendingQuery]:
+        out = []
+        for _ in range(m):
+            _, _, req = heapq.heappop(lane.heap)
+            req._taken = True
+            out.append(req)
+        return out
 
     # -- dispatch (async) ---------------------------------------------------
 
-    def _k_dispatch(self, reqs) -> int:
+    def _k_dispatch(self, lane, reqs) -> int:
         """Bucketed dispatch K: next_pow2(max requested K), lowered only
-        if the live item count sits below the bucket (rare; may trace).
-        Callers guarantee every request's k <= the live item count."""
+        if the lane's live item count sits below the bucket (rare; may
+        trace).  Callers guarantee every request's k <= the live count."""
         k_max = max(r.k for r in reqs)
         k_pad = next_pow2(k_max)
-        n_live = self.engine.n_items
+        n_live = lane.engine.n_items
         while k_pad > n_live:
             k_pad //= 2
         return max(k_pad, k_max)
 
-    def _dispatch(self, reqs: list[PendingQuery], now: float) -> None:
-        """Assemble one micro-batch and launch it (async).  Requests
-        fail here — before scoring — individually: past-deadline ones
-        with ``DeadlineExceeded``, ones whose k exceeds the live corpus
-        (churn shrank it since submit) with ``FrontendError``; neither
-        poisons its batchmates."""
-        n_live_items = self.engine.n_items
+    def _dispatch(self, lane, reqs: list[PendingQuery], now: float) -> None:
+        """Assemble one micro-batch for ONE tenant and launch it (async).
+        Requests fail here — before scoring — individually: past-deadline
+        ones with ``DeadlineExceeded``, ones whose k exceeds the lane's
+        live corpus (churn shrank it since submit) with ``FrontendError``;
+        neither poisons its batchmates."""
+        n_live_items = lane.engine.n_items
         live = []
         for r in reqs:
             if r.deadline is not None and now > r.deadline:
@@ -360,7 +614,7 @@ class QueryFrontend:
             elif r.k > n_live_items:
                 self.stats["failed"] += 1
                 r._fail(FrontendError(
-                    f"k={r.k} exceeds the live corpus "
+                    f"k={r.k} exceeds tenant {lane.name!r}'s live corpus "
                     f"({n_live_items} items)"), now)
             else:
                 live.append(r)
@@ -372,12 +626,12 @@ class QueryFrontend:
         # real rows stay bit-identical and the filler rows cost no trace
         ctx = np.stack([r._ctx for r in live] + [live[0]._ctx] * pad)
         w = np.stack([r._w for r in live] + [live[0]._w] * pad)
-        k_pad = self._k_dispatch(live)
+        k_pad = self._k_dispatch(lane, live)
         try:
             # async dispatch: engine.topk returns device arrays without
             # blocking — the device scores while the host assembles the
             # next micro-batch (the overlap this frontend exists for)
-            vals, idx = self.engine.topk(ctx, k_pad, w)
+            vals, idx = lane.engine.topk(ctx, k_pad, w)
         except Exception as e:                    # noqa: BLE001 — carried
             fail = FrontendError(f"micro-batch dispatch failed: {e}")
             for r in live:
@@ -387,22 +641,37 @@ class QueryFrontend:
         self.stats["dispatches"] += 1
         self.stats["dispatched_rows"] += bq
         self.stats["padded_rows"] += pad
-        self._window.append(_InFlight(live, vals, idx))
+        self._window.append(_InFlight(live, vals, idx, lane.name))
         while len(self._window) > self.inflight:
             self._resolve_oldest()
 
     # -- resolution (the only blocking step) --------------------------------
 
-    def _resolve_oldest(self) -> None:
-        fl = self._window.popleft()
+    def _resolve(self, fl: _InFlight) -> None:
+        t_read = self.clock()
         vals = np.asarray(fl.vals)     # blocks until the device finishes
         idx = np.asarray(fl.idx)
         now = self.clock()
+        # Admission-control service-time sample: the time this read spent
+        # BLOCKED on the device, not wall time since dispatch — a batch
+        # that sat resolved in a lazy window for 100 ms did not take
+        # 100 ms of service.  Under light load samples are ~0 (device
+        # idle => any sane deadline is feasible); under overload the
+        # window evicts into genuinely-blocking reads and the EWMA tracks
+        # the real per-batch cost — exactly the regime shedding matters.
+        dt = now - t_read
+        self._svc = dt if self._svc is None else 0.3 * dt + 0.7 * self._svc
+        lane = self._lanes.get(fl.tenant)
         for row, r in enumerate(fl.requests):
             # host-side truncation: top-k_pad is sorted best-first, so
             # its first k entries ARE the top-k (bit-exact)
             r._finish(vals[row, :r.k], idx[row, :r.k], now)
             self.stats["completed"] += 1
+            if lane is not None:
+                lane.stats["completed"] += 1
+
+    def _resolve_oldest(self) -> None:
+        self._resolve(self._window.popleft())
 
     def _resolve_until(self, req: PendingQuery) -> None:
         with self._lock:
@@ -415,32 +684,26 @@ class QueryFrontend:
 
     # -- warmup -------------------------------------------------------------
 
-    def warmup(self, context_ids, context_weights=None) -> int:
-        """Trace the full reachable (Bq bucket x K bucket) grid once with
-        a representative context, so steady-state traffic — any arrival
-        pattern, any mix of Ks — retraces NOTHING.  Returns the number of
-        warmup dispatches.  Call after ``engine.refresh``."""
-        ctx = np.asarray(context_ids, np.int32).reshape(-1)
-        w = (np.ones(ctx.shape, np.float32) if context_weights is None
-             else np.asarray(context_weights, np.float32).reshape(-1))
-        n = 0
-        bq = 1
-        while bq <= self.max_batch:
-            ids_b = np.broadcast_to(ctx, (bq, ctx.shape[0]))
-            w_b = np.broadcast_to(w, (bq, w.shape[0]))
-            k = 1
-            while k <= min(next_pow2(self.max_k), self.engine.n_items):
-                self.engine.topk(ids_b, k, w_b)
-                n += 1
-                k *= 2
-            bq *= 2
-        return n
+    def warmup(self, context_ids, context_weights=None,
+               tenant: str | None = None) -> int:
+        """Trace the full reachable (Bq bucket x K bucket) grid once for
+        one tenant's capacity with a representative context, so
+        steady-state traffic — any arrival pattern, any mix of Ks —
+        retraces NOTHING.  Tenants sharing a runtime AND a capacity are
+        warm after any one of them warms (re-warming adds zero traces).
+        Returns the number of warmup dispatches.  Call after the state's
+        ``refresh``."""
+        lane = self._lane(tenant)
+        return lane.engine.warmup_grid(context_ids, context_weights,
+                                       max_batch=self.max_batch,
+                                       max_k=self.max_k)
 
     # -- convenience --------------------------------------------------------
 
     @property
     def queue_depth(self) -> int:
-        return len(self._queue)
+        """Total queued requests across every tenant lane."""
+        return sum(len(lane.heap) for lane in self._lanes.values())
 
     @property
     def inflight_depth(self) -> int:

@@ -29,14 +29,20 @@ The device arrays store the PHYSICAL view of this layout: leading axis
 over the model axis (``repro.sharding.rules.corpus_cache_specs``).  Axis 0
 is the shard-local slot, so growth is a pad of the UNsharded axis.
 
-Churn routing
--------------
-Mutations arrive as (global slot, row) pairs.  Inside ``shard_map`` each
-shard computes ``mine = g % D == axis_index`` and scatters only its own
-rows (foreign and bucket-filler rows get local index ``local_cap`` and are
-dropped) — delta routing is pure arithmetic, zero cross-device traffic,
-and the power-of-two delta bucketing is unchanged, so churn still causes
-zero scorer retraces.
+Churn routing (shard-grouped deltas)
+------------------------------------
+Mutations arrive as (global slot, row) pairs.  ``group_deltas`` reorders
+the Δn delta HOST-side into the physical ``(Δ_loc, D, ...)`` layout —
+shard ``g % D`` receives local row ``g // D`` — padded to the next
+power-of-two per-shard maximum (filler rows get local index ``local_cap``
+and are dropped).  ``make_write_grouped`` then runs ONE ``shard_map``
+scatter in which each device computes ``corpus_rows`` for, and writes,
+only the ``Δ_loc`` rows it owns — O(Δ_loc·rho·k) per device instead of
+replicating the full-delta row compute to every shard.  Routing stays
+pure arithmetic (zero cross-device traffic), per-row math is unchanged
+and row-independent (so grouped writes stay bit-exact vs the unsharded
+engine — tested), and the power-of-two bucketing keeps churn at zero
+scorer retraces.
 
 Top-K merge
 -----------
@@ -55,16 +61,19 @@ any slot in the true global top-K is within its own shard's top-``k_loc``
 everything), and with ``K <= n_items`` live candidates always outrank the
 ``NEG_INF`` dead-slot fillers a sparse shard may contribute.
 
-Public entry points (all consumed by ``CorpusRankingEngine``; callers —
-including the query frontend — never touch this module directly).  Every
-``make_*`` returns a traceable impl the engine wraps in ``jax.jit``; like
-the rest of the serving stack the impls are non-blocking under JAX async
-dispatch.  Caches use the physical ``(capacity/D, D, ...)`` view:
+Public entry points (all consumed by ``ScorerRuntime``; callers —
+including ``CorpusState`` and the query frontend — never touch this
+module directly).  Every ``make_*`` returns a traceable impl the runtime
+wraps in ``jax.jit``; like the rest of the serving stack the impls are
+non-blocking under JAX async dispatch.  Caches use the physical
+``(capacity/D, D, ...)`` view:
 
     make_build(cfg, mesh)(params, ids, w, valid)      -> ItemCorpusCache
         ids/w: (cap/D, D, m_I_slots) int32/float;  valid: (cap/D, D) bool
-    make_write(mesh)(cache, Q, t, lin, gidx)          -> ItemCorpusCache
-        Q: (Δ, rho, k), t/lin: (Δ,), gidx: (Δ,) GLOBAL slots (pad = cap)
+    group_deltas(slots, ids, w, D, local_cap)         -> (li, ids_g, w_g)
+        host-side: (Δ,) global slots -> physical (Δ_loc, D, ...) arrays
+    make_write_grouped(cfg, mesh)(params, cache, ids_g, w_g, li)
+        -> ItemCorpusCache; each shard computes + scatters only its rows
     make_drop(mesh)(cache, gidx)                      -> ItemCorpusCache
     make_score(cfg, mesh, context_fn)(params, cache, ctx_ids, ctx_w)
         -> (Bq, capacity) scores in GLOBAL slot order, dtype = cfg.dtype
@@ -77,12 +86,14 @@ from __future__ import annotations
 
 from functools import partial
 
+import numpy as np
+
 import jax
 import jax.numpy as jnp
 from jax.sharding import PartitionSpec as P
 
 from repro.serving.corpus import (ItemCorpusCache, corpus_rows,
-                                  masked_slab_scores)
+                                  masked_slab_scores, next_pow2)
 from repro.sharding import (corpus_cache_specs, corpus_slab_axis,
                             corpus_slab_spec, shard_map, shard_map_norep)
 
@@ -128,7 +139,8 @@ def make_build(cfg, mesh):
 
 
 # ---------------------------------------------------------------------------
-# Churn writes: shard-routed scatters (zero cross-device traffic)
+# Churn writes: shard-grouped deltas (zero cross-device traffic, and each
+# device computes rows for only the slots it owns)
 # ---------------------------------------------------------------------------
 
 def _route(gidx, local_cap: int, D: int, ax: str):
@@ -138,28 +150,57 @@ def _route(gidx, local_cap: int, D: int, ax: str):
     return jnp.where(mine, gidx // D, local_cap)
 
 
-def make_write(mesh):
-    """impl(cache, Q, t, lin, gidx) — scatter Δn precomputed rows at their
-    owning shards and mark them live.  The delta rows are replicated (they
-    are O(Δn), tiny); each shard keeps only what it owns."""
-    ax = corpus_slab_axis()
-    D = shard_count(mesh)
-    specs = corpus_cache_specs(mesh)
+def group_deltas(slots, ids, w, D: int, local_cap: int):
+    """Host-side: group a (Δn,) global-slot delta per owning shard into
+    the physical ``(Δ_loc, D, ...)`` layout the grouped write consumes.
 
-    def body(cache, Q, t, lin, gidx):
-        li = _route(gidx, cache.Q_I.shape[0], D, ax)
+    ``li[j, s]`` is shard ``s``'s j-th local target row (filler
+    ``local_cap`` => dropped by the scatter), ``ids_g``/``w_g`` the
+    matching item rows (filler: zero-id weight-one placeholders).
+    ``Δ_loc`` is the power-of-two bucket of the BUSIEST shard's delta
+    count, so the jitted write traces O(log local_cap) times total — and
+    each device computes corpus rows for its own ≤ Δ_loc slots only,
+    instead of the replicated full-Δn delta.  Slot assignment is
+    untouched: grouping only reorders the scatter payload."""
+    slots = np.asarray(slots, np.int64)
+    per = [np.flatnonzero(slots % D == s) for s in range(D)]
+    d_loc = next_pow2(max(max((len(p) for p in per), default=0), 1))
+    li = np.full((d_loc, D), local_cap, np.int32)
+    ids_g = np.zeros((d_loc, D, ids.shape[1]), np.int32)
+    w_g = np.ones((d_loc, D, w.shape[1]), np.float32)
+    for s, rows in enumerate(per):
+        m = len(rows)
+        li[:m, s] = slots[rows] // D
+        ids_g[:m, s] = ids[rows]
+        w_g[:m, s] = w[rows]
+    return li, ids_g, w_g
+
+
+def make_write_grouped(cfg, mesh):
+    """impl(params, cache, ids_g, w_g, li) — compute + scatter a shard-
+    grouped churn delta (layout from ``group_deltas``): each device runs
+    ``corpus_rows`` over ITS (Δ_loc, m_I_slots) slice and writes those
+    rows at its local targets, marking them live.  Per-row math is
+    ``corpus_rows`` verbatim and row-independent, so a grouped delta row
+    is bit-identical to the same row in a full rebuild or an unsharded
+    delta write."""
+    specs = corpus_cache_specs(mesh)
+    slab = corpus_slab_spec(mesh)
+    ax = corpus_slab_axis()
+
+    def body(params, cache, ids, w, li):
+        Q, t, lin = corpus_rows(params, cfg, ids[:, 0], w[:, 0])
+        l0 = li[:, 0]
         return ItemCorpusCache(
-            Q_I=cache.Q_I.at[li, 0].set(Q, mode="drop"),
-            t_I=cache.t_I.at[li, 0].set(t, mode="drop"),
-            lin_I=cache.lin_I.at[li, 0].set(lin, mode="drop"),
-            valid=cache.valid.at[li, 0].set(True, mode="drop"),
+            Q_I=cache.Q_I.at[l0, 0].set(Q, mode="drop"),
+            t_I=cache.t_I.at[l0, 0].set(t, mode="drop"),
+            lin_I=cache.lin_I.at[l0, 0].set(lin, mode="drop"),
+            valid=cache.valid.at[l0, 0].set(True, mode="drop"),
         )
 
-    sm = shard_map(body, mesh=mesh,
-                   in_specs=(specs, P(None, None, None), P(None), P(None),
-                             P(None)),
-                   out_specs=specs)
-    return sm
+    return shard_map(body, mesh=mesh,
+                     in_specs=(P(), specs, slab, slab, P(None, ax)),
+                     out_specs=specs)
 
 
 def make_drop(mesh):

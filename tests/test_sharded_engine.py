@@ -150,6 +150,40 @@ def test_churn_lands_on_owning_shard():
                                       np.asarray(sh._valid_np)[s::D])
 
 
+def test_grouped_deltas_layout_and_uneven_shard_parity():
+    """Shard-grouped churn: ``group_deltas`` lays the delta out per owning
+    shard (each device computes/scatters only its own rows), and a delta
+    that lands ENTIRELY on one shard — the maximally uneven grouping,
+    where every other shard receives pure filler — stays bit-exact vs the
+    unsharded engine."""
+    from repro.serving.sharded import group_deltas
+
+    # layout unit check: 3 slots for shard 0 of D=2, 1 for shard 1 =>
+    # bucket to the busiest shard's next_pow2(3) = 4 local rows
+    slots = np.array([0, 2, 3, 4])
+    ids = np.arange(8, dtype=np.int32).reshape(4, 2)
+    w = np.ones((4, 2), np.float32)
+    li, ids_g, w_g = group_deltas(slots, ids, w, D=2, local_cap=16)
+    assert li.shape == (4, 2) and ids_g.shape == (4, 2, 2)
+    np.testing.assert_array_equal(li[:, 0], [0, 1, 2, 16])  # g//D + filler
+    np.testing.assert_array_equal(li[:, 1], [1, 16, 16, 16])
+    np.testing.assert_array_equal(ids_g[:3, 0], ids[[0, 1, 3]])
+    np.testing.assert_array_equal(ids_g[0, 1], ids[2])
+    assert (ids_g[1:, 1] == 0).all() and (w_g[1:, 1] == 1.0).all()
+
+    # end-to-end: every updated slot owned by shard 0 (g % D == 0)
+    _, cfg, params, data, q = _setup(n=20)
+    sh, ref = _pair(cfg, params, q, capacity=32)
+    D = sh.n_shards
+    victims = [g for g in range(0, 20, D)][:4]     # all on shard 0
+    upd = data.ranking_query(len(victims), 55)
+    for e in (sh, ref):
+        e.update_items(victims, upd["item_ids"][0], upd["item_weights"][0])
+    got = np.asarray(sh.score(q["context_ids"], q["context_weights"]))
+    want = np.asarray(ref.score(q["context_ids"], q["context_weights"]))
+    np.testing.assert_array_equal(got, want)
+
+
 # ---------------------------------------------------------------------------
 # Growth: slab doubling is shard-aware and never renumbers a slot
 # ---------------------------------------------------------------------------
