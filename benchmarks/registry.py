@@ -73,6 +73,13 @@ BENCHMARKS: dict[str, tuple[str, str]] = {
         "ScorerRuntime, and tenant-B p99 isolation under a tenant-A "
         "churn storm",
     ),
+    "fault_recovery": (
+        "benchmarks.fault_recovery",
+        "Self-healing serving: every request resolves (result or typed "
+        "error) under a seeded fault storm, survivors bit-exact, p99 "
+        "back within 2x quiet baseline after faults clear, zero "
+        "retraces from any recovery path",
+    ),
 }
 
 

@@ -207,3 +207,11 @@ class CheckpointManager:
             return max(steps, default=None)
         ckpts = list_checkpoints(self.directory)
         return ckpts[-1][0] if ckpts else None
+
+    def step_valid(self, step: int) -> bool:
+        """Full validation (manifest present, checksum matches) of ONE
+        step — what a ``RefreshFailed`` handler calls to triage a bad
+        push without paying ``latest_step(validate=True)``'s pass over
+        every retained checkpoint."""
+        return _valid_checkpoint(
+            os.path.join(self.directory, f"step_{step:08d}"))

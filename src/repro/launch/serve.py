@@ -68,6 +68,18 @@ shard and top-K merges the device-local winners (bit-exact vs unsharded).
 count.  All other flags compose: churn/refresh demos, --topk,
 --use-pallas all run sharded.
 
+Self-healing: ``--chaos-demo`` runs a scripted fault storm through the
+frontend's recovery machinery — a transient dispatch fault retried
+bit-exactly (the SAME assembled batch re-dispatches), a sustained outage
+tripping the per-tenant circuit breaker (fast ``Degraded`` shedding,
+half-open probe, close), a corrupt model push rejected with a typed
+``RefreshFailed`` while the last-good snapshot keeps serving, a failed
+churn write that leaves the corpus untouched, a stalled background pump
+restarted by its watchdog, and a seeded random fault storm in which
+every request resolves with a result or a typed error.  Asserts zero
+scorer retraces across ALL recovery paths.  Composes with ``--mesh``
+and ``--use-pallas`` (which adds the sticky kernel->jnp fallback leg).
+
 ``--mp`` switches to the model-parallel DPLR scorer (EXPERIMENTS.md §Perf
 cell 3) — on this 1-device container it exercises the same shard_map code
 path the production mesh runs; ``--bf16`` serves bf16 tables.
@@ -88,7 +100,7 @@ from repro.configs import REGISTRY
 from repro.data.synthetic_ctr import SyntheticCTR
 from repro.launch.mesh import make_host_mesh, make_production_mesh
 from repro.models.recsys import fwfm
-from repro.serving import CorpusRankingEngine
+from repro.serving import CorpusRankingEngine, RefreshFailed
 
 
 def _corpus_mesh(kind: str):
@@ -420,6 +432,188 @@ def _churn_demo(args, engine, data) -> None:
           f"{engine.trace_count}x after {args.churn_ops} churn ops")
 
 
+def _chaos_demo(args, engine, data, params) -> None:
+    """Scripted fault storm against the self-healing serving stack: a
+    transient dispatch fault retried bit-exactly, a retry-exhaustion
+    outage that trips the per-tenant circuit breaker (fast ``Degraded``
+    shedding, half-open probe, close), a corrupt model push rejected
+    typed while the last-good snapshot keeps serving (then a good push
+    installing cleanly), a failed churn write that leaves the corpus
+    untouched, a stalled pump restarted by the watchdog, and a seeded
+    random fault storm where every request still resolves.  Asserts
+    bit-exact replies on every success and ZERO scorer retraces across
+    all recovery paths."""
+    import tempfile
+
+    from repro.serving import (Degraded, DispatchFailed, FaultInjector,
+                               QueryFrontend, RefreshFailed, ServingError)
+    from repro.serving.corpus import next_pow2
+
+    inj = FaultInjector(seed=args.seed)
+    engine.fault_injector = inj
+    fe = QueryFrontend(engine, max_batch=8, max_k=16,
+                       max_wait=args.max_wait_ms * 1e-3,
+                       retries=2, retry_backoff=1e-4,
+                       breaker_threshold=2, breaker_cooldown=0.05,
+                       fault_injector=inj)
+    ctx0 = data.context_query(0)["context_ids"]
+    fe.warmup(ctx0)
+    traced = engine.trace_count
+    fe.start_pump(interval=1e-3, watchdog=0.25)
+
+    k = 8
+    ctxs = [data.context_query(s)["context_ids"] for s in range(8)]
+    oracle = [tuple(np.asarray(a) for a in
+                    engine.topk(np.asarray(c).reshape(1, -1), k))
+              for c in ctxs]
+
+    def serve(s):
+        got_v, got_i = fe.submit(ctxs[s], k=k).result()
+        ov, oi = oracle[s]
+        assert np.array_equal(got_v, ov[0]) \
+            and np.array_equal(got_i, oi[0]), \
+            f"reply {s} not bit-exact vs the fault-free oracle"
+
+    # 1. transient dispatch fault: bounded retry re-dispatches the SAME
+    #    assembled batch, so the reply is bit-exact — not re-queued
+    inj.arm("dispatch", count=1)
+    serve(0)
+    assert fe.stats["retries"] >= 1
+    print(f"chaos 1: transient dispatch fault retried "
+          f"({fe.stats['retries']} retry), reply bit-exact")
+
+    # 2. sustained outage: two exhausted retry budgets trip the breaker;
+    #    an open breaker sheds SUBMITS fast; the half-open probe closes it
+    for i in (1, 2):
+        inj.arm("dispatch", count=fe.retries + 1)
+        try:
+            fe.submit(ctxs[i], k=k).result()
+            raise AssertionError("outage dispatch unexpectedly succeeded")
+        except DispatchFailed:
+            pass
+    try:
+        fe.submit(ctxs[3], k=k)
+        raise AssertionError("open breaker accepted a submit")
+    except Degraded:
+        print("chaos 2: breaker OPEN after 2 exhausted retry budgets -> "
+              "fast Degraded shed")
+    time.sleep(fe.breaker_cooldown)
+    serve(3)
+    print("chaos 2: half-open probe served -> breaker CLOSED, "
+          "reply bit-exact")
+
+    # 3. corrupt model push: rejected typed ONCE, last-good keeps
+    #    serving; a good push at the next step installs cleanly
+    def to_ckpt(tree):
+        return jax.tree.map(
+            lambda a: np.asarray(a, np.float32)
+            if jnp.asarray(a).dtype == jnp.bfloat16 else np.asarray(a),
+            tree)
+
+    def to_serving(tree):
+        if not args.bf16:
+            return tree["params"]
+        return jax.tree.map(
+            lambda a: jnp.asarray(a).astype(jnp.bfloat16)
+            if jnp.asarray(a).dtype == jnp.float32 else jnp.asarray(a),
+            tree["params"])
+
+    mgr = CheckpointManager(tempfile.mkdtemp(prefix="serve_chaos_"))
+    step0 = engine.model_step          # None when serving unversioned
+    push = (step0 or 0) + 1
+    mgr.save({"params": to_ckpt(params)}, step=push, blocking=True)
+    inj.corrupt_checkpoint(mgr.directory)
+    try:
+        fe.maybe_refresh(mgr, {"params": to_ckpt(params)},
+                         select=to_serving)
+        raise AssertionError("corrupt push was not rejected")
+    except RefreshFailed as e:
+        assert engine.model_step == step0
+        print(f"chaos 3: corrupt push REJECTED typed ({e}); still "
+              f"serving step {step0}")
+    serve(4)
+    mgr.save({"params": to_ckpt(params)}, step=push + 1, blocking=True)
+    assert fe.maybe_refresh(mgr, {"params": to_ckpt(params)},
+                            select=to_serving)
+    print(f"chaos 3: good push installed (step {engine.model_step}), "
+          f"replies bit-exact throughout")
+
+    # 4. failed churn write: device write faults BEFORE any host state
+    #    moves, so the corpus stays exactly as it was
+    upd = data.ranking_query(2, 70_000)
+    inj.arm("write", count=1)
+    landed = True
+    try:
+        fe.update_items(engine.valid_slots[:2], upd["item_ids"][0],
+                        upd["item_weights"][0])
+    except Exception:            # InjectedFault from the armed site
+        landed = False
+    assert not landed, "faulted churn write unexpectedly landed"
+    serve(5)
+    print("chaos 4: churn write faulted mid-flight -> corpus untouched, "
+          "reply bit-exact")
+
+    # 5. stalled pump: the watchdog orphans the silent generation and
+    #    restarts; queued work drains on the fresh thread
+    inj.arm("pump", count=1, delay=0.6)
+    p = fe.submit(ctxs[6], k=k)
+    deadline = time.perf_counter() + 10.0
+    while fe.stats["pump_restarts"] < 1 and time.perf_counter() < deadline:
+        time.sleep(0.01)
+    assert fe.stats["pump_restarts"] >= 1, "watchdog never restarted pump"
+    got_v, got_i = p.result()
+    assert np.array_equal(got_v, oracle[6][0][0]) \
+        and np.array_equal(got_i, oracle[6][1][0])
+    print(f"chaos 5: pump stalled 0.6 s -> watchdog restarted it "
+          f"({fe.stats['pump_restarts']} restart), reply bit-exact")
+
+    # 6. Pallas launch failure: sticky fallback to the jnp reference
+    #    scorer — bit-exact, and zero new traces (warmup warmed BOTH)
+    if args.use_pallas:
+        inj.arm("kernel", count=1)
+        serve(7)
+        assert engine.kernel_degraded
+        print("chaos 6: kernel launch fault -> sticky jnp fallback, "
+              "reply bit-exact")
+
+    # 7. seeded random storm: every submitted request resolves with a
+    #    result or a typed ServingError — zero silent drops
+    inj.clear()
+    inj.arm("dispatch", rate=0.2)
+    rng = np.random.default_rng(args.seed)
+    pend, shed = [], 0
+    for s in range(args.queries):
+        kq = int(next_pow2(int(rng.integers(1, 17))))
+        try:
+            pend.append(fe.submit(data.context_query(100 + s)
+                                  ["context_ids"], k=kq))
+        except Degraded:
+            shed += 1            # breaker open mid-storm: fast failure
+            time.sleep(fe.breaker_cooldown)
+    fe.drain()
+    inj.clear()
+    ok = failed = 0
+    for p in pend:
+        assert p.done(), "storm request never resolved"
+        try:
+            p.result()
+            ok += 1
+        except ServingError:
+            failed += 1
+    print(f"chaos 7: storm of {args.queries} requests at fault rate 0.2 "
+          f"-> {ok} served / {failed} typed failures / {shed} shed, "
+          f"0 dropped")
+
+    h = fe.health()
+    assert h["ready"] and not h["closed"]
+    fe.close()
+    assert engine.trace_count == traced, \
+        (f"recovery paths retraced the scorer: "
+         f"{engine.trace_count} != {traced}")
+    print(f"chaos demo OK: all recovery paths exercised, zero retraces "
+          f"({traced} traces incl. warmup)")
+
+
 def main(argv=None):
     ap = argparse.ArgumentParser()
     ap.add_argument("--arch", default="dplr-fwfm")
@@ -461,6 +655,13 @@ def main(argv=None):
                          "micro-batching query frontend vs sync per-query "
                          "serving (p50/p95/p99 + QPS; asserts zero "
                          "retraces and bit-exact replies)")
+    ap.add_argument("--chaos-demo", action="store_true",
+                    help="run a scripted fault storm through the "
+                         "self-healing frontend: retried dispatch "
+                         "faults, breaker trip/close, corrupt-push "
+                         "rejection, failed churn write, pump-watchdog "
+                         "restart (asserts bit-exact replies and zero "
+                         "retraces on every recovery path)")
     ap.add_argument("--tenant-demo", action="store_true",
                     help="serve --tenants per-tenant corpora on ONE "
                          "shared ScorerRuntime through the tenant-routed "
@@ -499,9 +700,10 @@ def main(argv=None):
             ap.error("--engine corpus requires a dplr model (and not --mp)")
     elif (args.topk or args.refresh_demo or args.use_pallas
           or args.churn_demo or args.frontend or args.tenant_demo
-          or args.mesh != "none"):
+          or args.chaos_demo or args.mesh != "none"):
         ap.error("--topk/--refresh-demo/--use-pallas/--churn-demo/"
-                 "--frontend/--tenant-demo/--mesh require --engine corpus")
+                 "--frontend/--tenant-demo/--chaos-demo/--mesh require "
+                 "--engine corpus")
 
     params = mod.init(jax.random.PRNGKey(args.seed), cfg)
     mgr = None
@@ -563,6 +765,8 @@ def main(argv=None):
                   f"device")
         engine.refresh(params, step=(mgr.latest_step() if mgr else None))
 
+        if args.chaos_demo:
+            return _chaos_demo(args, engine, data, params)
         if args.frontend:
             return _frontend_demo(args, engine, data)
         if args.churn_demo:
@@ -579,9 +783,18 @@ def main(argv=None):
                 demo_pending = True   # poll immediately, whatever the cadence
             if mgr is not None and (demo_pending
                                     or (s and s % args.refresh_every == 0)):
-                if engine.maybe_refresh(
+                try:
+                    swapped = engine.maybe_refresh(
                         mgr, {"params": to_checkpoint_dtype(params)},
-                        select=lambda t: to_serving_dtype(t["params"])):
+                        select=lambda t: to_serving_dtype(t["params"]))
+                except RefreshFailed as e:
+                    # a bad model push: keep serving the last-good
+                    # snapshot, report once (the signature gate keeps
+                    # later polls silent until the push changes)
+                    swapped = False
+                    print(f"query {s}: refresh REJECTED ({e}); serving "
+                          f"step {engine.model_step}")
+                if swapped:
                     refreshes += 1
                     demo_pending = False
                     print(f"query {s}: refreshed to checkpoint step "

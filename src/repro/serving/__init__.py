@@ -43,16 +43,28 @@ compute, per-tenant state, shared request routing:
     frontend.py - QueryFrontend (tenant routing, request coalescing,
                   bucketed Bq/K, EDF + round-robin dispatch, admission
                   control, overlapped dispatch, deadlines, per-tenant
-                  churn/read serialization)
+                  churn/read serialization, retry/backoff + circuit
+                  breakers + pressure clamp + pump watchdog + health)
+    errors.py   - the typed ServingError hierarchy (one base, one
+                  subclass per failure domain; FrontendError is a
+                  compatibility alias of the base)
+    faults.py   - FaultInjector (deterministic, seeded chaos: armable
+                  fault sites threaded through the stack) — see
+                  docs/robustness.md
 """
 from repro.serving.corpus import (ItemCorpusCache, build_corpus_cache,
                                   corpus_rows, masked_slab_scores)
 from repro.serving.engine import CorpusRankingEngine, CorpusState
-from repro.serving.frontend import (DeadlineExceeded, FrontendError,
-                                    Overloaded, PendingQuery, QueryFrontend)
+from repro.serving.errors import (Degraded, DeadlineExceeded, DispatchFailed,
+                                  FrontendError, Overloaded, RefreshFailed,
+                                  ServingError, Unservable)
+from repro.serving.faults import FaultInjector, InjectedFault
+from repro.serving.frontend import PendingQuery, QueryFrontend
 from repro.serving.runtime import ScorerRuntime
 
 __all__ = ["ItemCorpusCache", "build_corpus_cache", "corpus_rows",
            "masked_slab_scores", "ScorerRuntime", "CorpusState",
            "CorpusRankingEngine", "QueryFrontend", "PendingQuery",
-           "DeadlineExceeded", "FrontendError", "Overloaded"]
+           "ServingError", "Overloaded", "DeadlineExceeded", "Unservable",
+           "DispatchFailed", "RefreshFailed", "Degraded", "FrontendError",
+           "FaultInjector", "InjectedFault"]

@@ -79,6 +79,7 @@ public method keeps identical semantics and slot numbering either way —
 from __future__ import annotations
 
 import heapq
+import time
 
 import numpy as np
 
@@ -86,18 +87,29 @@ import jax
 import jax.numpy as jnp
 
 from repro.serving.corpus import ItemCorpusCache, next_pow2
+from repro.serving.errors import RefreshFailed
 from repro.serving.runtime import ScorerRuntime
 
 
 class CorpusState:
     """One tenant's mutable, capacity-padded item corpus plus its model
     snapshot; every compute dispatch runs through a ``ScorerRuntime``
-    (private by default, shared across tenants when passed in)."""
+    (private by default, shared across tenants when passed in).
+
+    Self-healing (see docs/robustness.md): mutations are DEVICE-first so
+    a failed churn write leaves the host slab/validity state untouched
+    (partial churn is never reader-visible); a Pallas kernel-launch
+    failure degrades stickily to the jnp reference scorer
+    (``kernel_degraded`` — bit-exact results, zero new traces when the
+    grid was warmed); ``maybe_refresh`` raises ``RefreshFailed`` on a
+    corrupt newest checkpoint while KEEPING the last-good snapshot live.
+    ``fault_injector`` arms the ``write``/``alloc``/``kernel`` chaos
+    sites (``repro.serving.faults``)."""
 
     def __init__(self, cfg, item_ids, item_weights=None, *,
                  capacity: int | None = None, mesh=None,
                  use_pallas_kernel: bool = False, block_n: int = 2048,
-                 runtime: ScorerRuntime | None = None):
+                 runtime: ScorerRuntime | None = None, fault_injector=None):
         if runtime is None:
             runtime = ScorerRuntime(cfg, mesh=mesh,
                                     use_pallas_kernel=use_pallas_kernel,
@@ -154,6 +166,11 @@ class CorpusState:
         self.model_step: int | None = None
         self._last_polled_sig: tuple | None = None
         self.refresh_count = 0
+        self._injector = fault_injector
+        # health/degradation surface (read by QueryFrontend.health()):
+        self.kernel_degraded = False      # sticky Pallas->jnp fallback
+        self.last_refresh_error: str | None = None
+        self.last_refresh_time: float | None = None   # time.monotonic
         # writer barrier: called before ANY corpus mutation or model
         # refresh.  A QueryFrontend installs this tenant's drain here so
         # churn is serialized against the tenant's OWN in-flight reads
@@ -185,6 +202,18 @@ class CorpusState:
         tenant on it, which is exactly what the cross-tenant zero-retrace
         invariants assert on."""
         return self.runtime.trace_count
+
+    @property
+    def fault_injector(self):
+        """The attached ``FaultInjector`` (None when chaos is off).
+        Settable after construction, so a driver can arm chaos against an
+        engine it did not build (e.g. one assembled with a mesh/kernel
+        by generic setup code)."""
+        return self._injector
+
+    @fault_injector.setter
+    def fault_injector(self, injector) -> None:
+        self._injector = injector
 
     # -- corpus introspection -----------------------------------------------
 
@@ -256,11 +285,18 @@ class CorpusState:
         self._n_free += 1
 
     def _scatter_rows(self, slots, ids, w):
+        # DEVICE write first, host mirror second: if the scatter dispatch
+        # fails (or an armed 'write' fault fires), the host slab /
+        # validity mask / liveness counts are untouched — a mid-flight
+        # mutation failure leaves readers on the exact pre-churn
+        # snapshot, never a half-applied one (tests/test_faults.py).
+        if self._injector is not None:
+            self._injector.check("write")
+        self.cache = self.runtime.write_rows(self.params, self.cache,
+                                             slots, ids, w)
         self._slab_ids[slots] = ids
         self._slab_w[slots] = w
         self._valid_np[slots] = True
-        self.cache = self.runtime.write_rows(self.params, self.cache,
-                                             slots, ids, w)
 
     def _payload(self, ids, weights, op, n_expected=None):
         """Normalize + validate a (Δn, n_item_slots) ids/weights payload;
@@ -290,7 +326,15 @@ class CorpusState:
         if dn > self._n_free:
             self._grow(dn - self._n_free)
         slots = np.asarray([self._alloc_slot() for _ in range(dn)], np.int32)
-        self._scatter_rows(slots, ids, w)
+        try:
+            self._scatter_rows(slots, ids, w)
+        except Exception:
+            # roll the allocation back: the rows were never written, so
+            # n_items must not count them and the slots must stay free —
+            # the failed add is invisible (retryable) to every reader
+            for g in slots:
+                self._free_slot(int(g))
+            raise
         return slots
 
     def update_items(self, indices, ids, weights=None) -> None:
@@ -311,10 +355,14 @@ class CorpusState:
         self._begin_write()
         slots = np.asarray(indices, np.int32).reshape(-1)
         self._check_live(slots, "remove_items")
+        # device-first, like _scatter_rows: a failed drop leaves the host
+        # mask/free-lists untouched (the remove simply didn't happen)
+        if self._injector is not None:
+            self._injector.check("write")
+        self.cache = self.runtime.drop_rows(self.cache, slots)
         self._valid_np[slots] = False
         for s in slots:
             self._free_slot(int(s))
-        self.cache = self.runtime.drop_rows(self.cache, slots)
 
     def _check_live(self, slots, op):
         if len(np.unique(slots)) != len(slots):
@@ -335,6 +383,12 @@ class CorpusState:
         striped ownership means the new global slots [old, new) are exactly
         the new local rows [old/D, new/D) on each shard, and every live
         slot keeps its (shard, local) address (ids never renumber)."""
+        # the 'alloc' fault site: an armed injector models the slab-growth
+        # allocation failing (device OOM).  Checked before ANY state is
+        # touched, so a failed grow is a clean no-op and the add_items
+        # that wanted it raises with the corpus unchanged.
+        if self._injector is not None:
+            self._injector.check("alloc")
         old = self.capacity
         new = max(old * 2, next_pow2(old + min_extra))
         extra = new - old
@@ -390,6 +444,7 @@ class CorpusState:
                 jnp.asarray(self._valid_np.reshape(lc, self._D)))
         self.model_step = step
         self.refresh_count += 1
+        self.last_refresh_time = time.monotonic()
 
     def maybe_refresh(self, manager, template, select=lambda t: t) -> bool:
         """CheckpointManager invalidation hook: if a newer checkpoint step
@@ -397,12 +452,23 @@ class CorpusState:
         the pytree structure passed to ``manager.restore``; ``select``
         extracts the model params from the restored tree.
 
+        Returns True on a swap, False when there is nothing newer (or the
+        newest landing was a backward step — skipped, as ever).  A newest
+        step that FAILS VALIDATION (corrupt/torn payload, nothing newer
+        restorable) raises ``RefreshFailed`` with the offending step and
+        its poll signature attached — the engine KEEPS SERVING its
+        last-good snapshot; the error reports the bad push, it does not
+        interrupt service.  A corrupt newest with a valid intermediate
+        step (older than newest, newer than installed) installs the
+        intermediate and returns True, recording the bad push in
+        ``last_refresh_error``.
+
         Poison-safe: the newest step's SIGNATURE (step + manifest mtime) is
-        recorded BEFORE restoring, and a restore that falls back to an
-        older/current valid step (corrupt newest checkpoint) is a no-op —
-        so a poisoned checkpoint costs one restore attempt total, not a
-        restore + full cache rebuild per poll, while a later RE-SAVE of
-        the same step number (new mtime) is still picked up.
+        recorded BEFORE restoring, and a poll that finds the same corrupt
+        signature again returns False silently — so a poisoned checkpoint
+        costs one restore attempt and raises ONCE, not a restore + error
+        per poll, while a later RE-SAVE of the same step number (new
+        mtime) is still picked up.
         """
         # cheap name-only poll: no checksum pass over retained checkpoints
         # in the serving loop; restore() below validates what it loads.
@@ -414,11 +480,25 @@ class CorpusState:
             return False
         self._last_polled_sig = sig
         restored, rstep = manager.restore(template)
-        if restored is None:
-            return False
-        if (self.model_step is not None and rstep is not None
-                and rstep <= self.model_step):
-            return False      # fell back to an already-installed snapshot
+        if restored is None or (self.model_step is not None
+                                and rstep is not None
+                                and rstep <= self.model_step):
+            # the newest step is unrestorable and nothing NEWER than the
+            # installed snapshot validated: surface the failed push (the
+            # last-good snapshot stays live and keeps serving)
+            self.last_refresh_error = (
+                f"checkpoint step {step} failed validation; serving "
+                f"last-good step {self.model_step}")
+            raise RefreshFailed(self.last_refresh_error, step=step,
+                                signature=sig)
+        if rstep is not None and rstep < step:
+            # newest failed validation but an intermediate step validated:
+            # forward progress (install it) + a recorded bad push
+            self.last_refresh_error = (
+                f"checkpoint step {step} failed validation; installed "
+                f"fallback step {rstep}")
+        else:
+            self.last_refresh_error = None
         self.refresh(select(restored), step=rstep)
         return True
 
@@ -445,8 +525,17 @@ class CorpusState:
         ``np.asarray``/``block_until_ready`` is where the wait happens."""
         self._require_ready()
         ids, w = self._ctx_arrays(context_ids, context_weights)
-        if self.use_pallas_kernel:
-            return self.runtime.kernel_score(self.params, self.cache, ids, w)
+        if self.use_pallas_kernel and not self.kernel_degraded:
+            try:
+                if self._injector is not None:
+                    self._injector.check("kernel")
+                return self.runtime.kernel_score(self.params, self.cache,
+                                                 ids, w)
+            except Exception:             # noqa: BLE001 — launch failure
+                # Mosaic compile/launch failure: degrade STICKILY to the
+                # jnp reference scorer — bit-exact scores, and zero new
+                # traces when warmup_grid warmed both paths
+                self.kernel_degraded = True
         return self.runtime.score(self.params, self.cache, ids, w)
 
     def topk(self, context_ids, K: int, context_weights=None):
@@ -469,9 +558,14 @@ class CorpusState:
                 f"topk K={K} out of range for corpus of {self.n_items} "
                 f"live items")
         ids, w = self._ctx_arrays(context_ids, context_weights)
-        if self.use_pallas_kernel:
-            return self.runtime.kernel_score(self.params, self.cache, ids,
-                                             w, K=K)
+        if self.use_pallas_kernel and not self.kernel_degraded:
+            try:
+                if self._injector is not None:
+                    self._injector.check("kernel")
+                return self.runtime.kernel_score(self.params, self.cache,
+                                                 ids, w, K=K)
+            except Exception:             # noqa: BLE001 — launch failure
+                self.kernel_degraded = True   # sticky; see score()
         return self.runtime.topk(self.params, self.cache, ids, w, K=K)
 
     def warmup_grid(self, context_ids, context_weights=None, *,
@@ -495,6 +589,14 @@ class CorpusState:
             while k <= min(next_pow2(max_k), self.n_items):
                 self.topk(ids_b, k, w_b)
                 n += 1
+                if self.use_pallas_kernel and not self.kernel_degraded:
+                    # warm the jnp reference path at the same shape: the
+                    # sticky kernel-degradation fallback must cost ZERO
+                    # mid-serve traces when it fires
+                    jids, jw = self._ctx_arrays(ids_b, w_b)
+                    self.runtime.topk(self.params, self.cache, jids, jw,
+                                      K=k)
+                    n += 1
                 k *= 2
             bq *= 2
         return n

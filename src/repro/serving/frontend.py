@@ -120,11 +120,45 @@ A request still queued past its deadline is failed with
 computed against a stale corpus.  Once dispatched, a request is always
 answered (the answer is correct; lateness is the caller's policy).
 
+Self-healing (failures are typed, bounded, and recovered from)
+---------------------------------------------------------------
+Every failure the frontend hands a caller is a ``repro.serving.errors.
+ServingError`` subclass, and every ACCEPTED request resolves — with a
+result or a typed error, never silently dropped — under every fault the
+chaos suite injects (docs/robustness.md):
+
+  * **retry/backoff** — a failed micro-batch dispatch re-dispatches the
+    SAME assembled batch (identical ctx/weights/K bucket, so a reply
+    that eventually succeeds is bit-exact with a fault-free run) up to
+    ``retries`` times with exponential backoff + seeded jitter; only
+    then does the batch fail with ``DispatchFailed``.
+  * **circuit breaker** — ``breaker_threshold`` consecutive exhausted
+    dispatches trip the TENANT's breaker: submits shed fast with
+    ``Degraded`` (no queueing behind a dead backend) until
+    ``breaker_cooldown`` elapses, then the breaker half-opens and the
+    next accepted request is the probe — its dispatch success closes the
+    breaker, failure re-opens it.  Other tenants' lanes are untouched
+    (their queues, their in-flight batches, their breakers).
+  * **pressure-K clamp** — under sustained queue pressure
+    (``pressure_depth``) dispatches clamp each request's served K to
+    ``pressure_k``: smaller top-K buckets, less device work per batch.
+    A clamped reply is the EXACT top-``pressure_k`` prefix of the full
+    answer (top-K rows are sorted) and is flagged ``degraded`` on its
+    ``PendingQuery`` — degraded-but-exact, never wrong.
+  * **pump watchdog** — ``start_pump`` runs the pump on a background
+    thread plus a watchdog that detects a stalled heartbeat and restarts
+    the pump loop (``stats["pump_restarts"]``); a stalled generation
+    exits harmlessly when it wakes.
+  * **health probe** — ``health()`` reports per-tenant breaker state,
+    queue depths, last-refresh age, and degradation flags; ``close()``
+    shuts down gracefully (in-flight batches resolve to real results,
+    queued requests fail with typed ``Unservable``).
+
 The frontend is an event-loop-style coalescer, not a thread pool: one
 thread calls ``submit``/``pump``/``result``; a separate churn thread is
 supported via the frontend's writer wrappers (above).  All public entry
-points are non-blocking except ``PendingQuery.result``, ``drain``, and
-the writer wrappers.
+points are non-blocking except ``PendingQuery.result``, ``drain``,
+``close``, and the writer wrappers.
 """
 from __future__ import annotations
 
@@ -138,21 +172,9 @@ from functools import partial
 import numpy as np
 
 from repro.serving.corpus import next_pow2
-
-
-class DeadlineExceeded(RuntimeError):
-    """The request's deadline passed while it was still queued."""
-
-
-class FrontendError(RuntimeError):
-    """A micro-batch dispatch failed; carried to every request in it."""
-
-
-class Overloaded(RuntimeError):
-    """Admission control shed this request at submit: the tenant's queue
-    is saturated (``admit_depth``) or the deadline is already infeasible
-    (``admit_deadlines``).  Raised BEFORE the request is queued — the
-    fast reject that keeps accepted requests inside their deadlines."""
+from repro.serving.errors import (Degraded, DeadlineExceeded, DispatchFailed,
+                                  FrontendError, Overloaded, ServingError,
+                                  Unservable)
 
 
 class PendingQuery:
@@ -164,14 +186,21 @@ class PendingQuery:
     queued).  ``done()`` never blocks.  ``submit_time``/``done_time`` are
     frontend-clock stamps for latency accounting; ``tenant`` names the
     lane that served it.
+
+    Degradation: under sustained pressure the frontend may clamp the
+    served K below the requested ``k`` (``pressure_k``); the reply is
+    then the exact top-``served_k`` prefix of the full answer and
+    ``degraded`` is True.  Healthy replies have ``served_k == k``.
     """
 
-    __slots__ = ("k", "deadline", "submit_time", "done_time", "tenant",
-                 "_frontend", "_ctx", "_w", "_scores", "_slots", "_error",
-                 "_taken")
+    __slots__ = ("k", "served_k", "degraded", "deadline", "submit_time",
+                 "done_time", "tenant", "_frontend", "_ctx", "_w",
+                 "_scores", "_slots", "_error", "_taken")
 
     def __init__(self, frontend, tenant, ctx, w, k, deadline, submit_time):
         self.k = k
+        self.served_k = k            # lowered only by the pressure clamp
+        self.degraded = False
         self.deadline = deadline
         self.submit_time = submit_time
         self.done_time = None
@@ -214,23 +243,31 @@ class PendingQuery:
 
 class _InFlight:
     """One dispatched-but-unresolved micro-batch: the device arrays plus
-    the requests (in row order) awaiting truncation, and the tenant it
-    was scored against."""
+    the requests (in row order) awaiting truncation, the tenant it was
+    scored against, and the ASSEMBLED batch (ctx/w/k_pad) so a failure
+    surfacing at resolve time can re-dispatch the identical batch
+    (bit-exact recovery)."""
 
-    __slots__ = ("requests", "vals", "idx", "tenant")
+    __slots__ = ("requests", "vals", "idx", "tenant", "ctx", "w", "k_pad")
 
-    def __init__(self, requests, vals, idx, tenant):
+    def __init__(self, requests, vals, idx, tenant, ctx, w, k_pad):
         self.requests = requests
         self.vals = vals
         self.idx = idx
         self.tenant = tenant
+        self.ctx = ctx
+        self.w = w
+        self.k_pad = k_pad
 
 
 class _TenantLane:
     """Per-tenant frontend state: the engine (CorpusState), the EDF
-    request queue, and per-tenant counters."""
+    request queue, per-tenant counters, and the tenant's circuit
+    breaker (``closed`` -> ``open`` on consecutive dispatch failures ->
+    ``half_open`` after cooldown -> ``closed`` on probe success)."""
 
-    __slots__ = ("name", "engine", "heap", "arrivals", "n_ctx", "stats")
+    __slots__ = ("name", "engine", "heap", "arrivals", "n_ctx", "stats",
+                 "breaker", "fails", "opened_at")
 
     def __init__(self, name, engine):
         self.name = name
@@ -238,7 +275,11 @@ class _TenantLane:
         self.heap: list = []                      # (deadline|inf, seq, req)
         self.arrivals: collections.deque = collections.deque()  # FIFO view
         self.n_ctx = len(engine.cfg.layout.slots_of("context"))
-        self.stats = {"submitted": 0, "completed": 0, "shed": 0}
+        self.stats = {"submitted": 0, "completed": 0, "shed": 0,
+                      "failed": 0, "trips": 0}
+        self.breaker = "closed"                   # closed|open|half_open
+        self.fails = 0                            # consecutive exhausted
+        self.opened_at = None                     # frontend-clock stamp
 
 
 class QueryFrontend:
@@ -283,13 +324,44 @@ class QueryFrontend:
     clock : callable
         Time source (seconds).  Injectable for deterministic tests and
         trace-replay simulation; defaults to ``time.perf_counter``.
+    retries : int
+        Bounded re-dispatch attempts after a failed micro-batch dispatch
+        (the SAME assembled batch, so recovered replies are bit-exact);
+        0 fails fast.  Default 2.
+    retry_backoff : float
+        Base backoff (seconds) between dispatch retries; attempt i waits
+        ``retry_backoff * 2**i`` scaled by seeded jitter in [0.5, 1.5).
+    breaker_threshold : int | None
+        Consecutive exhausted dispatches that trip a tenant's circuit
+        breaker (submits then shed fast with ``Degraded``).  ``None``
+        (default) disables the breaker.
+    breaker_cooldown : float
+        Seconds an open breaker sheds before half-opening; the next
+        accepted request is the probe (success closes, failure
+        re-opens).
+    pressure_depth : int | None
+        Queue depth (post-batch, per tenant) at which dispatches clamp
+        served K to ``pressure_k`` — degraded-but-exact replies under
+        sustained pressure.  ``None`` (default) disables the clamp.
+    pressure_k : int | None
+        The clamped K (required with ``pressure_depth``; must be
+        ``<= max_k`` so the clamped bucket is already warm).
+    fault_injector : FaultInjector | None
+        Chaos hook: an armed injector's ``dispatch``/``resolve``/``pump``
+        sites fire inside this frontend (see ``repro.serving.faults``).
+        ``None`` (default) = zero-overhead no-op.
     """
 
     def __init__(self, engines, *, max_batch: int = 16, max_k: int = 16,
                  max_wait: float = 2e-3, inflight: int = 2,
                  admit_depth: int | None = None,
                  admit_deadlines: bool = False, auto_pump: bool = True,
-                 clock=time.perf_counter):
+                 clock=time.perf_counter, retries: int = 2,
+                 retry_backoff: float = 1e-3,
+                 breaker_threshold: int | None = None,
+                 breaker_cooldown: float = 0.05,
+                 pressure_depth: int | None = None,
+                 pressure_k: int | None = None, fault_injector=None):
         if max_batch < 1 or max_batch & (max_batch - 1):
             raise ValueError(f"max_batch must be a power of two, "
                              f"got {max_batch}")
@@ -299,6 +371,16 @@ class QueryFrontend:
             raise ValueError(f"inflight depth must be >= 1, got {inflight}")
         if admit_depth is not None and admit_depth < 1:
             raise ValueError(f"admit_depth must be >= 1, got {admit_depth}")
+        if retries < 0:
+            raise ValueError(f"retries must be >= 0, got {retries}")
+        if breaker_threshold is not None and breaker_threshold < 1:
+            raise ValueError(f"breaker_threshold must be >= 1, "
+                             f"got {breaker_threshold}")
+        if (pressure_depth is None) != (pressure_k is None):
+            raise ValueError("pressure_depth and pressure_k come together")
+        if pressure_k is not None and not 1 <= pressure_k <= max_k:
+            raise ValueError(f"pressure_k={pressure_k} outside "
+                             f"[1, max_k={max_k}]")
         self.max_batch = max_batch
         self.max_k = max_k
         self.max_wait = float(max_wait)
@@ -307,15 +389,36 @@ class QueryFrontend:
         self.admit_deadlines = admit_deadlines
         self.auto_pump = auto_pump
         self.clock = clock
+        self.retries = retries
+        self.retry_backoff = float(retry_backoff)
+        self.breaker_threshold = breaker_threshold
+        self.breaker_cooldown = float(breaker_cooldown)
+        self.pressure_depth = pressure_depth
+        self.pressure_k = pressure_k
+        self._injector = fault_injector
+        self._rng = np.random.default_rng(0)     # retry jitter (seeded)
+        self._closed = False
         self._lanes: dict[str, _TenantLane] = {}
         self._rr = 0                 # round-robin cursor over lane order
         self._seq = 0                # global FIFO tie-break for EDF
         self._svc = None             # EWMA batch service time (seconds)
         self._window: collections.deque[_InFlight] = collections.deque()
         self._lock = threading.RLock()
+        # background pump + watchdog state (start_pump): the generation
+        # token lets the watchdog orphan a stalled pump thread — a stale
+        # generation exits harmlessly when it finally wakes
+        self._pump_run = False
+        self._pump_gen = 0
+        self._pump_beat = 0.0        # time.monotonic heartbeat
+        self._pump_interval = 1e-3
+        self._watchdog_timeout = None
+        self._pump_thread = None
+        self._watchdog_thread = None
         self.stats = {"submitted": 0, "completed": 0, "expired": 0,
                       "failed": 0, "shed": 0, "dispatches": 0,
-                      "dispatched_rows": 0, "padded_rows": 0, "drains": 0}
+                      "dispatched_rows": 0, "padded_rows": 0, "drains": 0,
+                      "retries": 0, "degraded": 0, "clamped": 0,
+                      "pump_restarts": 0}
         if hasattr(engines, "topk"):         # single engine, classic API
             engines = {"default": engines}
         for name, engine in engines.items():
@@ -382,9 +485,13 @@ class QueryFrontend:
         ``tenant``: the lane to rank against (optional when exactly one
         tenant is registered).  Non-blocking; raises ``Overloaded``
         instead of queueing when admission control sheds (see module
-        docstring).  With ``auto_pump`` a full bucket dispatches at once.
+        docstring), ``Degraded`` while the tenant's circuit breaker is
+        open, and ``Unservable`` after ``close()``.  With ``auto_pump``
+        a full bucket dispatches at once.
         """
         with self._lock:
+            if self._closed:
+                raise Unservable("frontend is closed")
             lane = self._lane(tenant)
             ctx = np.asarray(context_ids, np.int32).reshape(-1)
             if ctx.shape[0] != lane.n_ctx:
@@ -398,6 +505,13 @@ class QueryFrontend:
             if not 1 <= k <= self.max_k:
                 raise ValueError(f"k={k} outside [1, max_k={self.max_k}]")
             now = self.clock()
+            if not self._breaker_allows(lane, now):
+                lane.stats["shed"] += 1
+                self.stats["degraded"] += 1
+                raise Degraded(
+                    f"tenant {lane.name!r} circuit breaker open after "
+                    f"{lane.fails} consecutive dispatch failures",
+                    tenant=lane.name)
             self._admit(lane, deadline, now)
             req = PendingQuery(self, lane.name, ctx, w, int(k), deadline,
                                now)
@@ -434,6 +548,64 @@ class QueryFrontend:
                     f"tenant {lane.name!r}: predicted completion "
                     f"{eta - now:.4f}s out exceeds deadline "
                     f"{deadline - now:.4f}s out")
+
+    # -- self-healing: circuit breaker + bounded retry ----------------------
+
+    def _breaker_allows(self, lane, now) -> bool:
+        """Breaker gate for SUBMITS only: already-queued requests still
+        dispatch (accepted => resolved, even against a sick backend).
+        An open breaker half-opens after the cooldown; the next accepted
+        request is the probe."""
+        if lane.breaker == "open":
+            if now - lane.opened_at >= self.breaker_cooldown:
+                lane.breaker = "half_open"
+                return True
+            return False
+        return True                       # closed or half_open (probing)
+
+    def _breaker_failure(self, lane, now) -> None:
+        """An exhausted dispatch on this lane: trip at the threshold, and
+        re-open immediately if the half-open probe just failed."""
+        if self.breaker_threshold is None:
+            return
+        lane.fails += 1
+        if (lane.breaker == "half_open"
+                or lane.fails >= self.breaker_threshold):
+            if lane.breaker != "open":
+                lane.stats["trips"] += 1
+            lane.breaker = "open"
+            lane.opened_at = now
+
+    def _breaker_success(self, lane) -> None:
+        lane.fails = 0
+        if lane.breaker != "closed":
+            lane.breaker = "closed"
+            lane.opened_at = None
+
+    def _launch(self, lane, ctx, w, k_pad):
+        """Dispatch ONE assembled micro-batch with bounded retry: every
+        attempt re-dispatches the identical (ctx, w, k_pad) — same shape
+        bucket (no retrace), same rows (a reply that eventually succeeds
+        is bit-exact with a fault-free run).  Exponential backoff with
+        seeded jitter between attempts; raises ``DispatchFailed`` once
+        ``retries`` re-dispatches are exhausted."""
+        attempts = self.retries + 1
+        for i in range(attempts):
+            try:
+                if self._injector is not None:
+                    self._injector.check("dispatch")
+                return lane.engine.topk(ctx, k_pad, w)
+            except Exception as e:            # noqa: BLE001 — typed below
+                if i + 1 >= attempts:
+                    raise DispatchFailed(
+                        f"tenant {lane.name!r}: micro-batch dispatch "
+                        f"failed after {attempts} attempts: {e}",
+                        tenant=lane.name, attempts=attempts) from e
+                self.stats["retries"] += 1
+                pause = self.retry_backoff * (2.0 ** i)
+                pause *= 0.5 + self._rng.random()     # jitter in [.5, 1.5)
+                if pause > 0.0:
+                    time.sleep(pause)
 
     # -- batching policy ----------------------------------------------------
 
@@ -587,10 +759,10 @@ class QueryFrontend:
     # -- dispatch (async) ---------------------------------------------------
 
     def _k_dispatch(self, lane, reqs) -> int:
-        """Bucketed dispatch K: next_pow2(max requested K), lowered only
+        """Bucketed dispatch K: next_pow2(max SERVED K), lowered only
         if the lane's live item count sits below the bucket (rare; may
         trace).  Callers guarantee every request's k <= the live count."""
-        k_max = max(r.k for r in reqs)
+        k_max = max(r.served_k for r in reqs)
         k_pad = next_pow2(k_max)
         n_live = lane.engine.n_items
         while k_pad > n_live:
@@ -601,8 +773,10 @@ class QueryFrontend:
         """Assemble one micro-batch for ONE tenant and launch it (async).
         Requests fail here — before scoring — individually: past-deadline
         ones with ``DeadlineExceeded``, ones whose k exceeds the lane's
-        live corpus (churn shrank it since submit) with ``FrontendError``;
-        neither poisons its batchmates."""
+        live corpus (churn shrank it since submit) with ``Unservable``;
+        neither poisons its batchmates.  A dispatch that fails all its
+        bounded retries fails the whole batch with ``DispatchFailed`` and
+        feeds the lane's circuit breaker."""
         n_live_items = lane.engine.n_items
         live = []
         for r in reqs:
@@ -610,16 +784,29 @@ class QueryFrontend:
                 self.stats["expired"] += 1
                 r._fail(DeadlineExceeded(
                     f"deadline exceeded after "
-                    f"{(now - r.submit_time) * 1e3:.2f} ms in queue"), now)
+                    f"{(now - r.submit_time) * 1e3:.2f} ms in queue",
+                    tenant=lane.name), now)
             elif r.k > n_live_items:
                 self.stats["failed"] += 1
-                r._fail(FrontendError(
+                lane.stats["failed"] += 1
+                r._fail(Unservable(
                     f"k={r.k} exceeds tenant {lane.name!r}'s live corpus "
-                    f"({n_live_items} items)"), now)
+                    f"({n_live_items} items)", tenant=lane.name), now)
             else:
                 live.append(r)
         if not live:
             return
+        # pressure-K clamp: with the lane's queue still deep AFTER this
+        # batch was taken, serve the exact top-pressure_k prefix instead
+        # of the full K — smaller (already warm) K bucket, less device
+        # work per batch, replies flagged degraded but never wrong
+        if (self.pressure_depth is not None
+                and len(lane.heap) >= self.pressure_depth):
+            for r in live:
+                if r.served_k > self.pressure_k:
+                    r.served_k = self.pressure_k
+                    r.degraded = True
+                    self.stats["clamped"] += 1
         bq = min(next_pow2(len(live)), self.max_batch)
         pad = bq - len(live)
         # pad with a REAL context row: per-row scoring is independent, so
@@ -631,17 +818,20 @@ class QueryFrontend:
             # async dispatch: engine.topk returns device arrays without
             # blocking — the device scores while the host assembles the
             # next micro-batch (the overlap this frontend exists for)
-            vals, idx = lane.engine.topk(ctx, k_pad, w)
-        except Exception as e:                    # noqa: BLE001 — carried
-            fail = FrontendError(f"micro-batch dispatch failed: {e}")
+            vals, idx = self._launch(lane, ctx, w, k_pad)
+        except DispatchFailed as e:
             for r in live:
                 self.stats["failed"] += 1
-                r._fail(fail, now)
+                lane.stats["failed"] += 1
+                r._fail(e, now)
+            self._breaker_failure(lane, now)
             return
+        self._breaker_success(lane)
         self.stats["dispatches"] += 1
         self.stats["dispatched_rows"] += bq
         self.stats["padded_rows"] += pad
-        self._window.append(_InFlight(live, vals, idx, lane.name))
+        self._window.append(_InFlight(live, vals, idx, lane.name,
+                                      ctx, w, k_pad))
         while len(self._window) > self.inflight:
             self._resolve_oldest()
 
@@ -649,8 +839,36 @@ class QueryFrontend:
 
     def _resolve(self, fl: _InFlight) -> None:
         t_read = self.clock()
-        vals = np.asarray(fl.vals)     # blocks until the device finishes
-        idx = np.asarray(fl.idx)
+        lane = self._lanes.get(fl.tenant)
+        try:
+            if self._injector is not None:
+                self._injector.check("resolve")
+            vals = np.asarray(fl.vals)  # blocks until the device finishes
+            idx = np.asarray(fl.idx)
+        except Exception:               # noqa: BLE001 — deferred device
+            # failure surfaced at materialization: re-dispatch the SAME
+            # assembled batch (fl.ctx/fl.w/fl.k_pad — bit-exact) and read
+            # it synchronously; only exhausted retries fail the requests
+            now = self.clock()
+            try:
+                if lane is None:
+                    raise DispatchFailed(
+                        f"tenant {fl.tenant!r} removed with batch in "
+                        f"flight", tenant=fl.tenant)
+                vals, idx = self._launch(lane, fl.ctx, fl.w, fl.k_pad)
+                vals = np.asarray(vals)
+                idx = np.asarray(idx)
+            except DispatchFailed as e:
+                for r in fl.requests:
+                    self.stats["failed"] += 1
+                    if lane is not None:
+                        lane.stats["failed"] += 1
+                    r._fail(e, now)
+                if lane is not None:
+                    self._breaker_failure(lane, now)
+                return
+            if lane is not None:
+                self._breaker_success(lane)
         now = self.clock()
         # Admission-control service-time sample: the time this read spent
         # BLOCKED on the device, not wall time since dispatch — a batch
@@ -661,11 +879,11 @@ class QueryFrontend:
         # the real per-batch cost — exactly the regime shedding matters.
         dt = now - t_read
         self._svc = dt if self._svc is None else 0.3 * dt + 0.7 * self._svc
-        lane = self._lanes.get(fl.tenant)
         for row, r in enumerate(fl.requests):
             # host-side truncation: top-k_pad is sorted best-first, so
-            # its first k entries ARE the top-k (bit-exact)
-            r._finish(vals[row, :r.k], idx[row, :r.k], now)
+            # its first served_k entries ARE the top-served_k (bit-exact;
+            # served_k == k unless the pressure clamp lowered it)
+            r._finish(vals[row, :r.served_k], idx[row, :r.served_k], now)
             self.stats["completed"] += 1
             if lane is not None:
                 lane.stats["completed"] += 1
@@ -697,6 +915,163 @@ class QueryFrontend:
         return lane.engine.warmup_grid(context_ids, context_weights,
                                        max_batch=self.max_batch,
                                        max_k=self.max_k)
+
+    # -- background pump + watchdog -----------------------------------------
+
+    def start_pump(self, interval: float = 1e-3, *,
+                   watchdog: float | None = None) -> None:
+        """Run ``pump`` on a daemon thread every ``interval`` seconds —
+        the idle tick that force-dispatches aged partial batches without
+        a serving-loop caller.  With ``watchdog=t`` a second daemon
+        thread monitors the pump heartbeat and, after ``t`` seconds of
+        silence (a stalled hook, GC pause, hung I/O), orphans the stalled
+        generation and starts a fresh pump thread
+        (``stats["pump_restarts"]``); the stalled thread exits harmlessly
+        when it wakes and finds its generation stale.  Idempotent while
+        running."""
+        with self._lock:
+            if self._closed:
+                raise Unservable("frontend is closed")
+            if self._pump_run:
+                return
+            self._pump_run = True
+            self._pump_interval = float(interval)
+            self._watchdog_timeout = watchdog
+            self._pump_gen += 1
+            self._spawn_pump(self._pump_gen)
+            if watchdog is not None:
+                t = threading.Thread(target=self._watchdog_loop,
+                                     daemon=True, name="frontend-watchdog")
+                self._watchdog_thread = t
+                t.start()
+
+    def stop_pump(self) -> None:
+        """Stop the background pump (and watchdog); joins briefly.  Safe
+        when never started; queued work is NOT flushed (use ``drain``
+        or ``close``)."""
+        with self._lock:
+            self._pump_run = False
+            self._pump_gen += 1          # orphan any live generation
+            threads = [self._pump_thread, self._watchdog_thread]
+            self._pump_thread = self._watchdog_thread = None
+        me = threading.current_thread()
+        for t in threads:
+            if t is not None and t is not me and t.is_alive():
+                t.join(timeout=1.0)
+
+    def _spawn_pump(self, gen: int) -> None:
+        self._pump_beat = time.monotonic()
+        t = threading.Thread(target=self._pump_loop, args=(gen,),
+                             daemon=True, name=f"frontend-pump-{gen}")
+        self._pump_thread = t
+        t.start()
+
+    def _pump_loop(self, gen: int) -> None:
+        while True:
+            with self._lock:
+                if not self._pump_run or gen != self._pump_gen:
+                    return               # stopped, or watchdog moved on
+            self._pump_beat = time.monotonic()
+            try:
+                # the stall probe sits OUTSIDE the frontend lock: a
+                # stalled (sleeping) pump must not block submits or the
+                # watchdog that is about to replace it
+                if self._injector is not None:
+                    self._injector.check("pump")
+                self.pump()
+            except Exception:            # noqa: BLE001 — tick lost, loop on
+                pass
+            time.sleep(self._pump_interval)
+
+    def _watchdog_loop(self) -> None:
+        timeout = self._watchdog_timeout
+        while True:
+            time.sleep(timeout / 2)
+            with self._lock:
+                if not self._pump_run:
+                    return
+                if time.monotonic() - self._pump_beat >= timeout:
+                    self._pump_gen += 1
+                    self.stats["pump_restarts"] += 1
+                    self._spawn_pump(self._pump_gen)
+
+    # -- health + graceful shutdown -----------------------------------------
+
+    def health(self) -> dict:
+        """Readiness/health probe (cheap; safe to poll).
+
+        Top level: ``ready`` (accepting submits), ``closed``, ``degraded``
+        (any lane breaker not closed, any engine on its fallback kernel,
+        or a recorded refresh failure), ``queue_depth``,
+        ``inflight_depth``, and ``pump`` (running / restarts).  Per
+        tenant: breaker state and consecutive-failure count, queue depth,
+        live item count, model step, seconds since the last model
+        refresh, the last refresh error (if any), and whether the engine
+        degraded to the jnp reference kernel."""
+        with self._lock:
+            # refresh stamps are time.monotonic (engine-side), NOT the
+            # injectable frontend clock — age them on the same basis
+            now = time.monotonic()
+            lanes = {}
+            degraded = False
+            for name, lane in self._lanes.items():
+                eng = lane.engine
+                rt = getattr(eng, "last_refresh_time", None)
+                info = {
+                    "breaker": lane.breaker,
+                    "consecutive_failures": lane.fails,
+                    "trips": lane.stats["trips"],
+                    "queued": len(lane.heap),
+                    "n_items": eng.n_items,
+                    "model_step": getattr(eng, "model_step", None),
+                    "refresh_age": None if rt is None else now - rt,
+                    "last_refresh_error":
+                        getattr(eng, "last_refresh_error", None),
+                    "kernel_degraded":
+                        bool(getattr(eng, "kernel_degraded", False)),
+                }
+                if (info["breaker"] != "closed" or info["kernel_degraded"]
+                        or info["last_refresh_error"] is not None):
+                    degraded = True
+                lanes[name] = info
+            pump = self._pump_thread
+            return {
+                "ready": not self._closed,
+                "closed": self._closed,
+                "degraded": degraded,
+                "queue_depth": self.queue_depth,
+                "inflight_depth": len(self._window),
+                "pump": {"running": pump is not None and pump.is_alive(),
+                         "restarts": self.stats["pump_restarts"]},
+                "tenants": lanes,
+            }
+
+    def close(self) -> None:
+        """Graceful shutdown: stop the pump/watchdog threads, resolve
+        every in-flight batch to its REAL result, fail every still-queued
+        request with ``Unservable`` (typed, never silently dropped), and
+        detach every tenant's writer barrier.  Subsequent submits raise
+        ``Unservable``; idempotent."""
+        self.stop_pump()
+        with self._lock:
+            if self._closed:
+                return
+            self._closed = True
+            now = self.clock()
+            for lane in self._lanes.values():
+                while lane.heap:
+                    _, _, req = heapq.heappop(lane.heap)
+                    req._taken = True
+                    self.stats["failed"] += 1
+                    lane.stats["failed"] += 1
+                    req._fail(Unservable(
+                        "frontend closed with request still queued",
+                        tenant=lane.name), now)
+                lane.arrivals.clear()
+            while self._window:
+                self._resolve_oldest()
+            for lane in self._lanes.values():
+                lane.engine.on_mutate = None
 
     # -- convenience --------------------------------------------------------
 

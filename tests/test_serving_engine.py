@@ -408,10 +408,19 @@ def test_maybe_refresh_corrupt_newest_no_rebuild_storm(tmp_path):
         return orig_restore(*a, **k)
 
     mgr.restore = counting_restore
-    for _ in range(5):
+    # the FIRST poll of the corrupt landing surfaces the bad push as a
+    # typed RefreshFailed (step + signature attached); the engine keeps
+    # serving step 1 and subsequent same-signature polls are silent no-ops
+    import pytest
+    from repro.serving import RefreshFailed
+    with pytest.raises(RefreshFailed) as ei:
+        engine.maybe_refresh(mgr, {"params": params}, select=sel)
+    assert ei.value.step == 2 and ei.value.signature is not None
+    for _ in range(4):
         assert not engine.maybe_refresh(mgr, {"params": params}, select=sel)
     assert restores == 1, f"rebuild storm: {restores} restores for 5 polls"
     assert engine.refresh_count == 1 and engine.model_step == 1
+    assert engine.last_refresh_error is not None
 
     # a restarted trainer RE-SAVES the same step number, now valid: the
     # new manifest mtime changes the step signature, so it must land
@@ -447,13 +456,18 @@ def test_maybe_refresh_corrupt_newest_does_not_block_lower_valid_step(
     with open(os.path.join(str(tmp_path), "step_00000007", "arrays.npz"),
               "wb") as f:
         f.write(b"garbage")
-    assert not engine.maybe_refresh(mgr, {"params": params}, select=sel)
+    import pytest
+    from repro.serving import RefreshFailed
+    with pytest.raises(RefreshFailed):    # first poll: the bad push surfaces
+        engine.maybe_refresh(mgr, {"params": params}, select=sel)
     assert not engine.maybe_refresh(mgr, {"params": params}, select=sel)
     assert engine.model_step == 5
 
     mgr.save({"params": bumped}, step=6, blocking=True)   # valid, < 7
     assert engine.maybe_refresh(mgr, {"params": params}, select=sel)
     assert engine.model_step == 6
+    # the corrupt-7 push stays recorded: 6 installed as a FALLBACK
+    assert engine.last_refresh_error is not None
 
 
 def test_engine_bf16_weights_follow_cfg_dtype():
