@@ -404,6 +404,12 @@ class QueryFrontend:
         self._svc = None             # EWMA batch service time (seconds)
         self._window: collections.deque[_InFlight] = collections.deque()
         self._lock = threading.RLock()
+        # retry backoff waits on a Condition bound to the frontend lock:
+        # Condition.wait releases the (re-entrant) lock at EVERY recursion
+        # depth for the duration of the pause, so submits/pump ticks keep
+        # flowing while a faulted dispatch backs off (never time.sleep
+        # while holding self._lock)
+        self._retry_wait = threading.Condition(self._lock)
         # background pump + watchdog state (start_pump): the generation
         # token lets the watchdog orphan a stalled pump thread — a stale
         # generation exits harmlessly when it finally wakes
@@ -605,7 +611,12 @@ class QueryFrontend:
                 pause = self.retry_backoff * (2.0 ** i)
                 pause *= 0.5 + self._rng.random()     # jitter in [.5, 1.5)
                 if pause > 0.0:
-                    time.sleep(pause)
+                    # Condition.wait, NOT time.sleep: _launch runs with
+                    # self._lock held, and wait() releases the RLock at
+                    # all depths for the pause — submits, pump ticks and
+                    # the watchdog keep flowing while this batch backs
+                    # off.  Nobody notifies; the timeout IS the backoff.
+                    self._retry_wait.wait(timeout=pause)
 
     # -- batching policy ----------------------------------------------------
 
