@@ -424,7 +424,8 @@ class QueryFrontend:
                       "failed": 0, "shed": 0, "dispatches": 0,
                       "dispatched_rows": 0, "padded_rows": 0, "drains": 0,
                       "retries": 0, "degraded": 0, "clamped": 0,
-                      "pump_restarts": 0}
+                      "pump_restarts": 0, "pump_errors": 0}
+        self.last_pump_error: BaseException | None = None
         if hasattr(engines, "topk"):         # single engine, classic API
             engines = {"default": engines}
         for name, engine in engines.items():
@@ -990,8 +991,12 @@ class QueryFrontend:
                 if self._injector is not None:
                     self._injector.check("pump")
                 self.pump()
-            except Exception:            # noqa: BLE001 — tick lost, loop on
-                pass
+            except Exception as e:       # noqa: BLE001 — tick lost, loop on
+                # a lost tick is survivable (the next tick force-
+                # dispatches the same aged work) but never silent: the
+                # error is counted and kept for health()/debugging
+                self.stats["pump_errors"] += 1
+                self.last_pump_error = e
             time.sleep(self._pump_interval)
 
     def _watchdog_loop(self) -> None:
