@@ -56,8 +56,8 @@ from repro.serving.corpus import (ItemCorpusCache, build_corpus_cache,
                                   corpus_rows, masked_slab_scores)
 from repro.serving.engine import CorpusRankingEngine, CorpusState
 from repro.serving.errors import (Degraded, DeadlineExceeded, DispatchFailed,
-                                  FrontendError, Overloaded, RefreshFailed,
-                                  ServingError, Unservable)
+                                  FrontendError, NotReady, Overloaded,
+                                  RefreshFailed, ServingError, Unservable)
 from repro.serving.faults import FaultInjector, InjectedFault
 from repro.serving.frontend import PendingQuery, QueryFrontend
 from repro.serving.runtime import ScorerRuntime
@@ -66,5 +66,5 @@ __all__ = ["ItemCorpusCache", "build_corpus_cache", "corpus_rows",
            "masked_slab_scores", "ScorerRuntime", "CorpusState",
            "CorpusRankingEngine", "QueryFrontend", "PendingQuery",
            "ServingError", "Overloaded", "DeadlineExceeded", "Unservable",
-           "DispatchFailed", "RefreshFailed", "Degraded", "FrontendError",
-           "FaultInjector", "InjectedFault"]
+           "DispatchFailed", "RefreshFailed", "Degraded", "NotReady",
+           "FrontendError", "FaultInjector", "InjectedFault"]

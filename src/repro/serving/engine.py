@@ -87,7 +87,7 @@ import jax
 import jax.numpy as jnp
 
 from repro.serving.corpus import ItemCorpusCache, next_pow2
-from repro.serving.errors import RefreshFailed
+from repro.serving.errors import NotReady, RefreshFailed
 from repro.serving.runtime import ScorerRuntime
 
 
@@ -506,7 +506,7 @@ class CorpusState:
 
     def _require_ready(self):
         if self.cache is None:
-            raise RuntimeError("engine has no model: call refresh() first")
+            raise NotReady("engine has no model: call refresh() first")
 
     def _ctx_arrays(self, context_ids, context_weights):
         ids = jnp.asarray(context_ids)

@@ -96,6 +96,13 @@ class RefreshFailed(ServingError):
         self.signature = signature
 
 
+class NotReady(ServingError):
+    """The engine has no model installed yet: ``refresh()`` (or
+    ``maybe_refresh()`` landing a checkpoint) must run before scoring.
+    Distinct from ``Unservable`` — the REQUEST is fine, the BACKEND is
+    not initialized; retry after the model push lands."""
+
+
 class Degraded(ServingError):
     """The tenant's circuit breaker is open after consecutive dispatch
     failures: submits shed fast (no queueing) until the cooldown elapses

@@ -65,10 +65,31 @@ import time
 
 import numpy as np
 
+from repro.serving.errors import ServingError
 
-class InjectedFault(RuntimeError):
+
+# The documented site map: every ``injector.check("<site>")`` literal in
+# the serving stack must name one of these (enforced statically by
+# tools/analyze rule ERR-FAULT-SITE; the prose map lives in
+# docs/robustness.md).  Adding a new probe means adding its site here
+# AND to the docs table — that is the point.
+SITES = frozenset({
+    "dispatch",   # QueryFrontend micro-batch launch (and re-launch)
+    "resolve",    # QueryFrontend result materialization
+    "kernel",     # CorpusState Pallas branch launch
+    "alloc",      # CorpusState slab growth
+    "write",      # CorpusState mutation scatter
+    "pump",       # QueryFrontend background pump tick
+    "clock",      # wrap_clock()/skew_value() time skew
+})
+
+
+class InjectedFault(ServingError):
     """The default error an armed fault site raises.  ``site`` names the
-    failure domain it fired in."""
+    failure domain it fired in.  A ``ServingError`` like every other
+    typed serving failure (and still a ``RuntimeError`` through it), so
+    chaos runs exercise the exact except-clauses production failures
+    take."""
 
     def __init__(self, site: str):
         super().__init__(f"injected fault at site {site!r}")

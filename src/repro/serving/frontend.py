@@ -498,7 +498,7 @@ class QueryFrontend:
         """
         with self._lock:
             if self._closed:
-                raise Unservable("frontend is closed")
+                raise Unservable("frontend is closed", tenant=tenant)
             lane = self._lane(tenant)
             ctx = np.asarray(context_ids, np.int32).reshape(-1)
             if ctx.shape[0] != lane.n_ctx:
@@ -542,7 +542,7 @@ class QueryFrontend:
             self.stats["shed"] += 1
             raise Overloaded(
                 f"tenant {lane.name!r} queue depth {len(lane.heap)} >= "
-                f"admit_depth {self.admit_depth}")
+                f"admit_depth {self.admit_depth}", tenant=lane.name)
         if (self.admit_deadlines and deadline is not None
                 and self._svc is not None):
             backlog = (len(lane.heap) // self.max_batch
@@ -554,7 +554,7 @@ class QueryFrontend:
                 raise Overloaded(
                     f"tenant {lane.name!r}: predicted completion "
                     f"{eta - now:.4f}s out exceeds deadline "
-                    f"{deadline - now:.4f}s out")
+                    f"{deadline - now:.4f}s out", tenant=lane.name)
 
     # -- self-healing: circuit breaker + bounded retry ----------------------
 
@@ -910,7 +910,8 @@ class QueryFrontend:
             while not req.done() and self._window:
                 self._resolve_oldest()
             if not req.done():
-                raise RuntimeError("request neither queued nor in flight")
+                raise Unservable("request neither queued nor in flight",
+                                 tenant=req.tenant)
 
     # -- warmup -------------------------------------------------------------
 
