@@ -1,0 +1,104 @@
+"""Shared Pallas tiling helpers: named tile sizes, padding, BlockSpecs.
+
+Every kernel in this package expresses its grid and BlockSpec geometry
+through these helpers instead of inline ``pl.BlockSpec``/magic-number
+tile sizes — the invariant the kernel-contract linter rule
+(``tools/analyze`` KRN-BLOCKSPEC / KRN-TILE) enforces.  Centralizing the
+geometry buys three things: default tile sizes are NAMED (one place to
+retune for a new TPU generation), index-map conventions are written once
+(off-by-one in a hand-rolled ``lambda i: ...`` is the classic silent
+Pallas bug), and the linter can verify "no bare tiling" purely
+syntactically.
+
+Conventions: all helpers target either a 1-D grid over tiles of axis 0
+(``grid_1d`` + ``row_tiles``/``broadcast``/``col_tiles``), the
+attention ``(B, KV, n_q, n_k)`` grid (``attn_tiles``), or the
+scalar-prefetch gather grid (``prefetch_*``).  Tile-size defaults live
+here as module constants.
+"""
+from __future__ import annotations
+
+import functools
+
+from jax.experimental import pallas as pl
+
+# Named default tile sizes (retune here, not at call sites).  Values are
+# VMEM-budget choices for the f32 shapes documented in each kernel.
+CORPUS_TILE_N = 2048    # dplr_corpus_score: item-axis tile of (n, rho, k)
+ITEM_TILE_N = 1024      # dplr_score_items: item-axis tile of (n, mI, k)
+PAIRWISE_TILE_B = 512   # fwfm_pairwise: example-axis tile of (B, m, k)
+ATTN_TILE = 128         # flash_attention: q/k row tile (MXU lane width)
+
+
+def clamp_tile(tile: int, n: int) -> int:
+    """Shrink a default tile to the axis length (tiny inputs trace a
+    single-step grid instead of over-padding)."""
+    return min(tile, n)
+
+
+def pad_amount(n: int, tile: int) -> int:
+    """Rows of phantom padding that make ``n`` a whole number of tiles."""
+    return (-n) % tile
+
+
+def grid_1d(n_padded: int, tile: int) -> tuple[int]:
+    """The 1-D grid over axis-0 tiles; ``n_padded`` must already be a
+    tile multiple (``pad_amount`` says by how much to pad)."""
+    if n_padded % tile:
+        raise ValueError(f"n_padded={n_padded} not a multiple of "
+                         f"tile={tile}")
+    return (n_padded // tile,)
+
+
+def row_tiles(tile: int, *rest: int) -> pl.BlockSpec:
+    """``(tile, *rest)`` block, axis 0 tiled by the 1-D grid step, every
+    trailing axis whole: grid step ``i`` sees rows ``[i*tile, (i+1)*tile)``."""
+    trailing = (0,) * len(rest)
+    return pl.BlockSpec((tile, *rest), lambda i: (i, *trailing))
+
+
+def col_tiles(lead: int, tile: int) -> pl.BlockSpec:
+    """``(lead, tile)`` block, axis 1 tiled by the 1-D grid step, axis 0
+    whole — the output layout of a scorer that revisits all queries per
+    item tile."""
+    return pl.BlockSpec((lead, tile), lambda i: (0, i))
+
+
+def broadcast(*shape: int) -> pl.BlockSpec:
+    """A whole-array block with a constant index map: the operand stays
+    VMEM-resident across every 1-D grid step (replicated operands, and
+    running top-K output blocks carried across steps)."""
+    zeros = (0,) * len(shape)
+    return pl.BlockSpec(tuple(shape), lambda i: zeros)
+
+
+def attn_tiles(block_rows: int, head_dim: int, *, kv: bool) -> pl.BlockSpec:
+    """``(1, 1, block_rows, head_dim)`` block of a ``(B, KV, S, hd)``
+    operand on the attention grid ``(B, KV, n_q, n_k)``: one
+    (batch, kv-head) pair per step, rows tiled by the kv grid axis when
+    ``kv`` else by the q grid axis."""
+    if kv:
+        return pl.BlockSpec((1, 1, block_rows, head_dim),
+                            lambda b, h, qi, ki: (b, h, ki, 0))
+    return pl.BlockSpec((1, 1, block_rows, head_dim),
+                        lambda b, h, qi, ki: (b, h, qi, 0))
+
+
+def prefetch_batch(*rest: int) -> pl.BlockSpec:
+    """``(1, *rest)`` block of a batch-major operand on the scalar-
+    prefetch gather grid ``(B,)``: step ``i`` sees example ``i`` whole
+    (the prefetch ref is part of the index-map signature but unused)."""
+    trailing = (0,) * len(rest)
+    return pl.BlockSpec((1, *rest), lambda i, ids_ref: (i, *trailing))
+
+
+def prefetch_rows(n_slots: int, row_width: int) -> list[pl.BlockSpec]:
+    """One ``(1, row_width)`` table-row view per slot on the scalar-
+    prefetch grid: view ``s`` of grid step ``i`` DMAs table row
+    ``ids[i, s]`` into VMEM — the data-dependent gather, driven by the
+    prefetched ids."""
+    return [
+        pl.BlockSpec((1, row_width), functools.partial(
+            lambda i, ids_ref, s=0: (ids_ref[i, s], 0), s=s))
+        for s in range(n_slots)
+    ]

@@ -54,6 +54,8 @@ import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
 
+from repro.kernels import blocks
+
 NEG_INF = -1e30
 
 
@@ -111,7 +113,7 @@ def dplr_corpus_score(
     valid: jax.Array | None = None,   # (n,) slot liveness; None = all live
     *,
     topk: int | None = None,
-    block_n: int = 2048,
+    block_n: int = blocks.CORPUS_TILE_N,
     interpret: bool = False,
     index_offset: jax.Array | int = 0,
     index_stride: int = 1,
@@ -135,22 +137,22 @@ def dplr_corpus_score(
     mask = (jnp.ones((n,), jnp.int32) if valid is None
             else jnp.asarray(valid).astype(jnp.int32))
 
-    block_n = min(block_n, n)
-    pad = (-n) % block_n
+    block_n = blocks.clamp_tile(block_n, n)
+    pad = blocks.pad_amount(n, block_n)
     if pad:
         Q_I = jnp.pad(Q_I, ((0, pad), (0, 0), (0, 0)))
         a_I = jnp.pad(a_I, (0, pad))
         mask = jnp.pad(mask, (0, pad))      # phantom rows are dead slots
     n_pad = n + pad
-    grid = (n_pad // block_n,)
+    grid = blocks.grid_1d(n_pad, block_n)
 
     in_specs = [
-        pl.BlockSpec((block_n, rho, k), lambda i: (i, 0, 0)),
-        pl.BlockSpec((block_n, 1), lambda i: (i, 0)),
-        pl.BlockSpec((rho, 1), lambda i: (0, 0)),
-        pl.BlockSpec((Bq, rho, k), lambda i: (0, 0, 0)),
-        pl.BlockSpec((Bq, 1), lambda i: (0, 0)),
-        pl.BlockSpec((block_n, 1), lambda i: (i, 0)),
+        blocks.row_tiles(block_n, rho, k),
+        blocks.row_tiles(block_n, 1),
+        blocks.broadcast(rho, 1),
+        blocks.broadcast(Bq, rho, k),
+        blocks.broadcast(Bq, 1),
+        blocks.row_tiles(block_n, 1),
     ]
     args = (Q_I, a_I[:, None], e[:, None], P_C, a_C[:, None], mask[:, None])
 
@@ -159,7 +161,7 @@ def dplr_corpus_score(
             _kernel_full,
             grid=grid,
             in_specs=in_specs,
-            out_specs=pl.BlockSpec((Bq, block_n), lambda i: (0, i)),
+            out_specs=blocks.col_tiles(Bq, block_n),
             out_shape=jax.ShapeDtypeStruct((Bq, n_pad), jnp.float32),
             interpret=interpret,
         )(*args)[:, :n]
@@ -167,7 +169,7 @@ def dplr_corpus_score(
     if not 0 < topk <= n:
         raise ValueError(f"topk={topk} out of range for n={n}")
     off = jnp.asarray(index_offset, jnp.int32).reshape(1, 1)
-    in_specs = in_specs + [pl.BlockSpec((1, 1), lambda i: (0, 0))]
+    in_specs = in_specs + [blocks.broadcast(1, 1)]
     args = args + (off,)
     kernel = functools.partial(_kernel_topk, block_n=block_n, topk=topk,
                                index_stride=index_stride)
@@ -176,8 +178,10 @@ def dplr_corpus_score(
         grid=grid,
         in_specs=in_specs,
         out_specs=[
-            pl.BlockSpec((Bq, topk), lambda i: (0, 0)),
-            pl.BlockSpec((Bq, topk), lambda i: (0, 0)),
+            # constant index map => the running (values, indices) pair
+            # stays VMEM-resident across every item tile
+            blocks.broadcast(Bq, topk),
+            blocks.broadcast(Bq, topk),
         ],
         out_shape=[
             jax.ShapeDtypeStruct((Bq, topk), jnp.float32),

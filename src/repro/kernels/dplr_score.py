@@ -29,6 +29,8 @@ import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
 
+from repro.kernels import blocks
+
 
 def _kernel(v_ref, u_ref, e_ref, d_ref, pc_ref, sc_ref, out_ref):
     # v: (bn, mI, k); u: (rho, mI); e: (rho, 1); d: (mI, 1); pc: (rho, k)
@@ -58,30 +60,30 @@ def dplr_score_items(
     P_C: jax.Array,    # (rho, k) cached context projection
     s_C: jax.Array,    # ()       cached context d-term
     *,
-    block_n: int = 1024,
+    block_n: int = blocks.ITEM_TILE_N,
     interpret: bool = False,
 ) -> jax.Array:
     n, mI, k = V_I.shape
     rho = U_I.shape[0]
-    block_n = min(block_n, n)
-    if n % block_n != 0:
-        pad = block_n - n % block_n
+    block_n = blocks.clamp_tile(block_n, n)
+    pad = blocks.pad_amount(n, block_n)
+    if pad:
         V_I = jnp.pad(V_I, ((0, pad), (0, 0), (0, 0)))
     n_pad = V_I.shape[0]
 
-    grid = (n_pad // block_n,)
+    grid = blocks.grid_1d(n_pad, block_n)
     out = pl.pallas_call(
         _kernel,
         grid=grid,
         in_specs=[
-            pl.BlockSpec((block_n, mI, k), lambda i: (i, 0, 0)),
-            pl.BlockSpec((rho, mI), lambda i: (0, 0)),
-            pl.BlockSpec((rho, 1), lambda i: (0, 0)),
-            pl.BlockSpec((mI, 1), lambda i: (0, 0)),
-            pl.BlockSpec((rho, k), lambda i: (0, 0)),
-            pl.BlockSpec((1, 1), lambda i: (0, 0)),
+            blocks.row_tiles(block_n, mI, k),
+            blocks.broadcast(rho, mI),
+            blocks.broadcast(rho, 1),
+            blocks.broadcast(mI, 1),
+            blocks.broadcast(rho, k),
+            blocks.broadcast(1, 1),
         ],
-        out_specs=pl.BlockSpec((block_n,), lambda i: (i,)),
+        out_specs=blocks.row_tiles(block_n),
         out_shape=jax.ShapeDtypeStruct((n_pad,), jnp.float32),
         interpret=interpret,
     )(V_I, U_I, e[:, None], d_I[:, None], P_C, s_C[None, None])

@@ -27,6 +27,8 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
+from repro.kernels import blocks
+
 
 def _make_kernel(n_slots: int, segment_ids, n_bags: int):
     seg = [int(s) for s in segment_ids]
@@ -64,19 +66,14 @@ def embedding_bag(
 
     # one BlockSpec view of the table per slot: view s of grid step i DMAs
     # table row ids[i, s] into VMEM (scalar-prefetch drives the index_map).
-    table_specs = [
-        pl.BlockSpec((1, k), functools.partial(
-            lambda i, ids_ref, s=0: (ids_ref[i, s], 0), s=s))
-        for s in range(n_slots)
-    ]
     grid_spec = pltpu.PrefetchScalarGridSpec(
         num_scalar_prefetch=1,
         grid=(B,),
         in_specs=[
-            pl.BlockSpec((1, n_slots), lambda i, ids_ref: (i, 0)),  # weights
-            *table_specs,
+            blocks.prefetch_batch(n_slots),              # weights
+            *blocks.prefetch_rows(n_slots, k),
         ],
-        out_specs=pl.BlockSpec((1, n_bags, k), lambda i, ids_ref: (i, 0, 0)),
+        out_specs=blocks.prefetch_batch(n_bags, k),
     )
     out = pl.pallas_call(
         kernel,

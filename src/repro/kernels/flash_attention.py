@@ -31,6 +31,8 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
+from repro.kernels import blocks
+
 NEG_INF = -1e30
 
 
@@ -96,8 +98,8 @@ def flash_attention(
     v: jax.Array,            # (B, S, KV, hd)
     *,
     window: int | None = None,
-    block_q: int = 128,
-    block_k: int = 128,
+    block_q: int = blocks.ATTN_TILE,
+    block_k: int = blocks.ATTN_TILE,
     interpret: bool = False,
 ) -> jax.Array:
     B, S, H, hd = q.shape
@@ -123,15 +125,11 @@ def flash_attention(
         kernel,
         grid=(B, KV, n_q, n_k),
         in_specs=[
-            pl.BlockSpec((1, 1, block_q * G, hd),
-                         lambda b, h, qi, ki: (b, h, qi, 0)),
-            pl.BlockSpec((1, 1, block_k, hd),
-                         lambda b, h, qi, ki: (b, h, ki, 0)),
-            pl.BlockSpec((1, 1, block_k, hd),
-                         lambda b, h, qi, ki: (b, h, ki, 0)),
+            blocks.attn_tiles(block_q * G, hd, kv=False),
+            blocks.attn_tiles(block_k, hd, kv=True),
+            blocks.attn_tiles(block_k, hd, kv=True),
         ],
-        out_specs=pl.BlockSpec((1, 1, block_q * G, hd),
-                               lambda b, h, qi, ki: (b, h, qi, 0)),
+        out_specs=blocks.attn_tiles(block_q * G, hd, kv=False),
         out_shape=jax.ShapeDtypeStruct((B, KV, S * G, hd), q.dtype),
         scratch_shapes=[
             pltpu.VMEM((block_q * G, 1), jnp.float32),    # running max

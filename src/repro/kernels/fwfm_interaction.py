@@ -17,6 +17,8 @@ import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
 
+from repro.kernels import blocks
+
 
 def _kernel(v_ref, r_ref, out_ref):
     v = v_ref[...]                       # (bb, m, k)
@@ -34,24 +36,24 @@ def fwfm_pairwise(
     V: jax.Array,      # (B, m, k)
     R: jax.Array,      # (m, m) symmetric, zero diagonal
     *,
-    block_b: int = 512,
+    block_b: int = blocks.PAIRWISE_TILE_B,
     interpret: bool = False,
 ) -> jax.Array:
     B, m, k = V.shape
-    block_b = min(block_b, B)
-    if B % block_b != 0:
-        pad = block_b - B % block_b
+    block_b = blocks.clamp_tile(block_b, B)
+    pad = blocks.pad_amount(B, block_b)
+    if pad:
         V = jnp.pad(V, ((0, pad), (0, 0), (0, 0)))
     B_pad = V.shape[0]
 
     out = pl.pallas_call(
         _kernel,
-        grid=(B_pad // block_b,),
+        grid=blocks.grid_1d(B_pad, block_b),
         in_specs=[
-            pl.BlockSpec((block_b, m, k), lambda i: (i, 0, 0)),
-            pl.BlockSpec((m, m), lambda i: (0, 0)),
+            blocks.row_tiles(block_b, m, k),
+            blocks.broadcast(m, m),
         ],
-        out_specs=pl.BlockSpec((block_b,), lambda i: (i,)),
+        out_specs=blocks.row_tiles(block_b),
         out_shape=jax.ShapeDtypeStruct((B_pad,), jnp.float32),
         interpret=interpret,
     )(V, R)

@@ -10,6 +10,7 @@ from __future__ import annotations
 
 import jax
 
+from repro.kernels import blocks
 from repro.kernels import dplr_corpus_score as _corpus
 from repro.kernels import dplr_score as _dplr
 from repro.kernels import embedding_bag as _bag
@@ -21,7 +22,8 @@ def _on_tpu() -> bool:
     return jax.default_backend() == "tpu"
 
 
-def dplr_score_items(V_I, U_I, e, d_I, P_C, s_C, *, block_n: int = 1024,
+def dplr_score_items(V_I, U_I, e, d_I, P_C, s_C, *,
+                     block_n: int = blocks.ITEM_TILE_N,
                      interpret: bool | None = None):
     interp = (not _on_tpu()) if interpret is None else interpret
     return _dplr.dplr_score_items(V_I, U_I, e, d_I, P_C, s_C,
@@ -29,7 +31,8 @@ def dplr_score_items(V_I, U_I, e, d_I, P_C, s_C, *, block_n: int = 1024,
 
 
 def dplr_corpus_score(Q_I, a_I, e, P_C, a_C, valid=None, *, topk=None,
-                      block_n: int = 2048, interpret: bool | None = None,
+                      block_n: int = blocks.CORPUS_TILE_N,
+                      interpret: bool | None = None,
                       index_offset=0, index_stride: int = 1):
     interp = (not _on_tpu()) if interpret is None else interpret
     return _corpus.dplr_corpus_score(Q_I, a_I, e, P_C, a_C, valid,
@@ -39,7 +42,8 @@ def dplr_corpus_score(Q_I, a_I, e, P_C, a_C, valid=None, *, topk=None,
                                      index_stride=index_stride)
 
 
-def fwfm_pairwise(V, R, *, block_b: int = 512, interpret: bool | None = None):
+def fwfm_pairwise(V, R, *, block_b: int = blocks.PAIRWISE_TILE_B,
+                  interpret: bool | None = None):
     interp = (not _on_tpu()) if interpret is None else interpret
     return _fwfm.fwfm_pairwise(V, R, block_b=block_b, interpret=interp)
 
@@ -52,7 +56,8 @@ def embedding_bag(table, ids, weights, *, segment_ids, n_bags,
                               n_bags=n_bags, interpret=interp)
 
 
-def flash_attention(q, k, v, *, window=None, block_q=128, block_k=128,
+def flash_attention(q, k, v, *, window=None, block_q=blocks.ATTN_TILE,
+                    block_k=blocks.ATTN_TILE,
                     interpret: bool | None = None):
     interp = (not _on_tpu()) if interpret is None else interpret
     return _flash.flash_attention(q, k, v, window=window, block_q=block_q,

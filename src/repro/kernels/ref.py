@@ -72,3 +72,16 @@ def flash_attention_ref(q, k, v, *, causal=True, window=None):
     p = jax.nn.softmax(logits, axis=-1)
     out = jnp.einsum("bkgqs,bskh->bqkgh", p, v.astype(jnp.float32))
     return out.reshape(B, Sq, H, hd)
+
+
+# The declared kernel -> oracle contract.  Every Pallas entry point in
+# this package MUST appear here (tools/analyze rule KRN-ORACLE checks
+# the map statically; tests/test_kernels.py sweeps each pair).  A kernel
+# with two output modes maps to a tuple of oracles.
+ORACLES = {
+    "dplr_score_items": (dplr_score_items_ref,),
+    "dplr_corpus_score": (dplr_corpus_score_ref, dplr_corpus_topk_ref),
+    "fwfm_pairwise": (fwfm_pairwise_ref,),
+    "embedding_bag": (embedding_bag_ref,),
+    "flash_attention": (flash_attention_ref,),
+}
