@@ -100,7 +100,8 @@ from repro.configs import REGISTRY
 from repro.data.synthetic_ctr import SyntheticCTR
 from repro.launch.mesh import make_host_mesh, make_production_mesh
 from repro.models.recsys import fwfm
-from repro.serving import CorpusRankingEngine, RefreshFailed
+from repro.serving import (CorpusRankingEngine, RefreshFailed,
+                           assert_no_retrace)
 
 
 def _corpus_mesh(kind: str):
@@ -144,58 +145,57 @@ def _frontend_demo(args, engine, data) -> None:
     fe.warmup(ctx0)
     traced = engine.trace_count
 
-    # sync per-query service time -> auto arrival rate (~2x sync capacity,
-    # where coalescing visibly wins and sync visibly queues)
-    k_bucket = next_pow2(max_k)
-    for _ in range(3):
-        jax.block_until_ready(engine.topk(ctx0, k_bucket)[0])
-    t0 = time.perf_counter()
-    for _ in range(10):
-        jax.block_until_ready(engine.topk(ctx0, k_bucket)[0])
-    s1 = (time.perf_counter() - t0) / 10
-    rate = args.arrival_rate or 2.0 / s1
+    # the zero-retrace block closes BEFORE the parity calls below, which
+    # use exact (unbucketed) Ks on purpose and add baseline traces
+    with assert_no_retrace(engine, label="frontend coalesced run"):
+        # sync per-query service time -> auto arrival rate (~2x sync
+        # capacity, where coalescing visibly wins and sync visibly queues)
+        k_bucket = next_pow2(max_k)
+        for _ in range(3):
+            jax.block_until_ready(engine.topk(ctx0, k_bucket)[0])
+        t0 = time.perf_counter()
+        for _ in range(10):
+            jax.block_until_ready(engine.topk(ctx0, k_bucket)[0])
+        s1 = (time.perf_counter() - t0) / 10
+        rate = args.arrival_rate or 2.0 / s1
 
-    # one fixed trace served by both paths: Poisson arrivals, mixed K,
-    # a small update-churn burst every 25 requests (through the ENGINE,
-    # to exercise the on_mutate writer barrier mid-stream)
-    n = args.queries
-    arrivals = np.cumsum(rng.exponential(1.0 / rate, n))
-    ks = rng.integers(1, max_k + 1, n)
-    ctxs = [data.context_query(s)["context_ids"] for s in range(n)]
-    churn_at = set(range(25, n, 25))
+        # one fixed trace served by both paths: Poisson arrivals, mixed K,
+        # a small update-churn burst every 25 requests (through the
+        # ENGINE, to exercise the on_mutate writer barrier mid-stream)
+        n = args.queries
+        arrivals = np.cumsum(rng.exponential(1.0 / rate, n))
+        ks = rng.integers(1, max_k + 1, n)
+        ctxs = [data.context_query(s)["context_ids"] for s in range(n)]
+        churn_at = set(range(25, n, 25))
 
-    def churn(s):
-        upd = data.ranking_query(2, 50_000 + s)
-        fe_slots = rng.choice(engine.valid_slots, 2, replace=False)
-        engine.update_items(fe_slots, upd["item_ids"][0],
-                            upd["item_weights"][0])
+        def churn(s):
+            upd = data.ranking_query(2, 50_000 + s)
+            fe_slots = rng.choice(engine.valid_slots, 2, replace=False)
+            engine.update_items(fe_slots, upd["item_ids"][0],
+                                upd["item_weights"][0])
 
-    # warm the churn path too (row-compute + scatter trace once), so the
-    # first timed run doesn't pay compilation the second run gets for free
-    churn(-1)
+        # warm the churn path too (row-compute + scatter trace once), so
+        # the first timed run doesn't pay compilation the second run gets
+        # for free
+        churn(-1)
 
-    # -- coalesced (frontend) ----------------------------------------------
-    pend = []
-    t0 = time.perf_counter()
-    for s in range(n):
-        now = time.perf_counter() - t0
-        if arrivals[s] > now:
-            time.sleep(arrivals[s] - now)
-        if s in churn_at:
-            churn(s)
-        pend.append(fe.submit(ctxs[s], k=int(ks[s])))
-    fe.drain()
-    end = time.perf_counter() - t0
-    # completion minus SCHEDULED arrival — symmetric with the sync loop
-    # below, and charges any submit-loop backlog as queueing
-    lat_fe = np.asarray([(p.done_time - t0 - arrivals[s]) * 1e3
-                         for s, p in enumerate(pend)])
-    qps_fe = n / max(end, 1e-9)
-
-    # trace-flat check first: the parity calls below use exact (unbucketed)
-    # Ks on purpose and would add baseline traces of their own
-    assert engine.trace_count == traced, \
-        (f"frontend retraced the scorer: {engine.trace_count} != {traced}")
+        # -- coalesced (frontend) ------------------------------------------
+        pend = []
+        t0 = time.perf_counter()
+        for s in range(n):
+            now = time.perf_counter() - t0
+            if arrivals[s] > now:
+                time.sleep(arrivals[s] - now)
+            if s in churn_at:
+                churn(s)
+            pend.append(fe.submit(ctxs[s], k=int(ks[s])))
+        fe.drain()
+        end = time.perf_counter() - t0
+        # completion minus SCHEDULED arrival — symmetric with the sync
+        # loop below, and charges any submit-loop backlog as queueing
+        lat_fe = np.asarray([(p.done_time - t0 - arrivals[s]) * 1e3
+                             for s, p in enumerate(pend)])
+        qps_fe = n / max(end, 1e-9)
     for s in range(n):
         assert engine.is_live(pend[s].result()[1]).all(), \
             "frontend surfaced a dead slot"
@@ -289,20 +289,19 @@ def _tenant_demo(args, cfg, params, data) -> None:
     pend = []
     t0 = time.perf_counter()
     last_churn = -1
-    for s in range(n):
-        if s in churn_at:
-            upd = data.ranking_query(2, 50_000 + s)
-            fe.update_items(
-                rng.choice(states["t0"].valid_slots, 2, replace=False),
-                upd["item_ids"][0], upd["item_weights"][0], tenant="t0")
-            last_churn = s
-        pend.append(fe.submit(ctxs[s], k=int(ks[s]), tenant=lanes[s]))
-    fe.drain()
-    wall = time.perf_counter() - t0
-
-    assert runtime.trace_count == traced, \
-        (f"mixed-tenant traffic retraced the shared runtime: "
-         f"{runtime.trace_count} != {traced}")
+    # mixed-tenant traffic + t0 churn must add ZERO traces to the shared
+    # runtime — the cross-tenant isolation contract
+    with assert_no_retrace(runtime, label="mixed-tenant traffic"):
+        for s in range(n):
+            if s in churn_at:
+                upd = data.ranking_query(2, 50_000 + s)
+                fe.update_items(
+                    rng.choice(states["t0"].valid_slots, 2, replace=False),
+                    upd["item_ids"][0], upd["item_weights"][0], tenant="t0")
+                last_churn = s
+            pend.append(fe.submit(ctxs[s], k=int(ks[s]), tenant=lanes[s]))
+        fe.drain()
+        wall = time.perf_counter() - t0
     # every reply live at delivery; bit-exact vs the tenant's own state
     # for requests scored against its FINAL corpus (non-t0 tenants never
     # churned, t0 after its last burst)
@@ -391,38 +390,37 @@ def _churn_demo(args, engine, data) -> None:
     one_score(0)
     traced, cap0 = engine.trace_count, engine.capacity
     lat, counts = [], {"add": 0, "remove": 0, "update": 0, "score": 0}
-    for s in range(args.churn_ops):
-        kind = ("score" if s % 2 else
-                rng.choice(["add", "remove", "update"]))
-        live = engine.valid_slots
-        if kind == "add":
-            dn = int(rng.integers(1, 9))
-            if engine.n_items + dn > engine.capacity:
-                kind = "remove"      # stay inside the slab: no mid-demo grow
-            else:
-                fresh = data.ranking_query(dn, 10_000 + s)
-                engine.add_items(fresh["item_ids"][0],
-                                 fresh["item_weights"][0])
-        if kind == "remove":
-            dn = int(rng.integers(1, 9))
-            if engine.n_items - dn < max(K, args.items // 2):
-                kind = "update"      # keep enough live items for top-K
-            else:
-                engine.remove_items(rng.choice(live, dn, replace=False))
-        if kind == "update":
-            dn = int(rng.integers(1, 9))
-            fresh = data.ranking_query(dn, 20_000 + s)
-            engine.update_items(rng.choice(live, dn, replace=False),
-                                fresh["item_ids"][0],
-                                fresh["item_weights"][0])
-        if kind == "score":
-            lat.append(one_score(s))
-        counts[kind] += 1
-    jax.block_until_ready(engine.cache.Q_I)
+    with assert_no_retrace(engine, label="catalog churn"):
+        for s in range(args.churn_ops):
+            kind = ("score" if s % 2 else
+                    rng.choice(["add", "remove", "update"]))
+            live = engine.valid_slots
+            if kind == "add":
+                dn = int(rng.integers(1, 9))
+                if engine.n_items + dn > engine.capacity:
+                    kind = "remove"  # stay inside the slab: no mid-demo grow
+                else:
+                    fresh = data.ranking_query(dn, 10_000 + s)
+                    engine.add_items(fresh["item_ids"][0],
+                                     fresh["item_weights"][0])
+            if kind == "remove":
+                dn = int(rng.integers(1, 9))
+                if engine.n_items - dn < max(K, args.items // 2):
+                    kind = "update"  # keep enough live items for top-K
+                else:
+                    engine.remove_items(rng.choice(live, dn, replace=False))
+            if kind == "update":
+                dn = int(rng.integers(1, 9))
+                fresh = data.ranking_query(dn, 20_000 + s)
+                engine.update_items(rng.choice(live, dn, replace=False),
+                                    fresh["item_ids"][0],
+                                    fresh["item_weights"][0])
+            if kind == "score":
+                lat.append(one_score(s))
+            counts[kind] += 1
+        jax.block_until_ready(engine.cache.Q_I)
 
     assert engine.capacity == cap0, "slab doubled mid-demo"
-    assert engine.trace_count == traced, \
-        (f"scorer retraced under churn: {engine.trace_count} != {traced}")
     print(f"churn demo: {args.churn_ops} interleaved ops "
           f"({counts['add']} add / {counts['remove']} remove / "
           f"{counts['update']} update / {counts['score']} score), "

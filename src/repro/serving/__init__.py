@@ -61,10 +61,14 @@ from repro.serving.errors import (Degraded, DeadlineExceeded, DispatchFailed,
 from repro.serving.faults import FaultInjector, InjectedFault
 from repro.serving.frontend import PendingQuery, QueryFrontend
 from repro.serving.runtime import ScorerRuntime
+from repro.serving.sanitize import (assert_no_retrace, check_scores,
+                                    sanitize_enabled, scoring_guard)
 
 __all__ = ["ItemCorpusCache", "build_corpus_cache", "corpus_rows",
            "masked_slab_scores", "ScorerRuntime", "CorpusState",
            "CorpusRankingEngine", "QueryFrontend", "PendingQuery",
            "ServingError", "Overloaded", "DeadlineExceeded", "Unservable",
            "DispatchFailed", "RefreshFailed", "Degraded", "NotReady",
-           "FrontendError", "FaultInjector", "InjectedFault"]
+           "FrontendError", "FaultInjector", "InjectedFault",
+           "assert_no_retrace", "check_scores", "sanitize_enabled",
+           "scoring_guard"]

@@ -89,6 +89,7 @@ import jax.numpy as jnp
 from repro.serving.corpus import ItemCorpusCache, next_pow2
 from repro.serving.errors import NotReady, RefreshFailed
 from repro.serving.runtime import ScorerRuntime
+from repro.serving.sanitize import scoring_guard
 
 
 class CorpusState:
@@ -529,14 +530,16 @@ class CorpusState:
             try:
                 if self._injector is not None:
                     self._injector.check("kernel")
-                return self.runtime.kernel_score(self.params, self.cache,
-                                                 ids, w)
+                with scoring_guard():
+                    return self.runtime.kernel_score(self.params,
+                                                     self.cache, ids, w)
             except Exception:             # noqa: BLE001 — launch failure
                 # Mosaic compile/launch failure: degrade STICKILY to the
                 # jnp reference scorer — bit-exact scores, and zero new
                 # traces when warmup_grid warmed both paths
                 self.kernel_degraded = True
-        return self.runtime.score(self.params, self.cache, ids, w)
+        with scoring_guard():
+            return self.runtime.score(self.params, self.cache, ids, w)
 
     def topk(self, context_ids, K: int, context_weights=None):
         """((Bq, K) scores, (Bq, K) int32 corpus slot indices) — only the
@@ -562,11 +565,14 @@ class CorpusState:
             try:
                 if self._injector is not None:
                     self._injector.check("kernel")
-                return self.runtime.kernel_score(self.params, self.cache,
-                                                 ids, w, K=K)
+                with scoring_guard():
+                    return self.runtime.kernel_score(self.params,
+                                                     self.cache, ids, w,
+                                                     K=K)
             except Exception:             # noqa: BLE001 — launch failure
                 self.kernel_degraded = True   # sticky; see score()
-        return self.runtime.topk(self.params, self.cache, ids, w, K=K)
+        with scoring_guard():
+            return self.runtime.topk(self.params, self.cache, ids, w, K=K)
 
     def warmup_grid(self, context_ids, context_weights=None, *,
                     max_batch: int = 16, max_k: int = 16) -> int:

@@ -1,0 +1,123 @@
+"""Opt-in runtime sanitizer for the serving stack (``REPRO_SANITIZE=1``).
+
+The static linter (``tools/analyze``) catches invariant violations it can
+see in the source; this module catches the ones only a live process can:
+
+* ``scoring_guard()`` — wraps the scoring hot path in
+  ``jax.transfer_guard("disallow")`` so an accidental implicit
+  device<->host transfer (a stray ``float()``, ``bool()`` or numpy
+  coercion on a device array mid-dispatch) raises instead of silently
+  serializing the pipeline.
+* ``check_scores()`` — host-side NaN/+inf debug check on materialized
+  results.  ``-inf`` (and the kernels' ``NEG_INF`` sentinel) is LEGAL —
+  it is how dead corpus slots are masked — so only NaN and ``+inf``
+  fail.
+* ``assert_no_retrace`` — the retrace-counter assertion context manager
+  the demos, benchmarks, and tests share: baseline ``trace_count`` on
+  enter, assert it did not move on exit.  Unlike the guards above it is
+  ALWAYS armed (a zero-retrace block is an explicit claim, not a debug
+  mode).
+
+All sanitize checks are no-ops unless ``REPRO_SANITIZE`` is set truthy,
+so the hot path pays one cached boolean read in production.
+"""
+from __future__ import annotations
+
+import contextlib
+import os
+
+import numpy as np
+
+import jax
+
+_TRUTHY = ("1", "true", "on", "yes")
+
+
+def sanitize_enabled() -> bool:
+    """True when ``REPRO_SANITIZE`` is set truthy in the environment.
+    Read per call (cheap) so tests can flip it with ``monkeypatch``."""
+    return os.environ.get("REPRO_SANITIZE", "").strip().lower() in _TRUTHY
+
+
+@contextlib.contextmanager
+def scoring_guard():
+    """Disallow implicit device<->host transfers for the duration of the
+    block when sanitize mode is on; a transparent no-op otherwise.
+
+    Wrap the DISPATCH only — inputs must already be device arrays (the
+    engine's ``_ctx_arrays`` runs before the guard); reading the result
+    (``np.asarray`` on the reply) is an explicit transfer and stays
+    legal.
+    """
+    if not sanitize_enabled():
+        yield
+        return
+    with jax.transfer_guard("disallow"):
+        yield
+
+
+def check_scores(vals, *, where: str = "scores"):
+    """Fail fast on NaN / ``+inf`` in a materialized score array when
+    sanitize mode is on.  ``-inf`` passes: it is the mask sentinel for
+    dead corpus slots.  Returns ``vals`` unchanged (chainable)."""
+    if sanitize_enabled():
+        arr = np.asarray(vals)
+        if np.isnan(arr).any():
+            raise FloatingPointError(f"sanitizer: NaN in {where}")
+        if np.isposinf(arr).any():
+            raise FloatingPointError(f"sanitizer: +inf in {where}")
+    return vals
+
+
+class assert_no_retrace:
+    """Assert the scorer trace cache stays warm across a block.
+
+    Targets are anything exposing an integer ``trace_count``
+    (``ScorerRuntime``, ``CorpusState`` / ``CorpusRankingEngine``) or a
+    zero-argument callable returning one; several targets share one
+    block and their growth is summed.
+
+        with assert_no_retrace(engine, label="steady-state"):
+            serve_traffic()
+        # AssertionError on exit if any scorer retraced
+
+    ``allow=n`` tolerates up to ``n`` new traces — for blocks that
+    intentionally include a first-touch (warmup) dispatch.  On exit with
+    an exception already in flight the check is skipped (the original
+    error is the story).  ``new_traces`` is readable mid-block for
+    progress asserts.
+    """
+
+    def __init__(self, *targets, allow: int = 0, label: str | None = None):
+        if not targets:
+            raise ValueError("assert_no_retrace needs at least one target")
+        self.targets = targets
+        self.allow = allow
+        self.label = label
+        self.baseline: list[int] | None = None
+
+    @staticmethod
+    def _read(target) -> int:
+        return int(target() if callable(target) else target.trace_count)
+
+    @property
+    def new_traces(self) -> int:
+        if self.baseline is None:
+            raise ValueError("assert_no_retrace: not entered yet")
+        return sum(self._read(t) - b
+                   for t, b in zip(self.targets, self.baseline))
+
+    def __enter__(self) -> "assert_no_retrace":
+        self.baseline = [self._read(t) for t in self.targets]
+        return self
+
+    def __exit__(self, exc_type, exc, tb) -> bool:
+        if exc_type is None:
+            grew = self.new_traces
+            if grew > self.allow:
+                where = f" [{self.label}]" if self.label else ""
+                raise AssertionError(
+                    f"retrace sanitizer{where}: trace_count grew by "
+                    f"{grew} inside a zero-retrace block "
+                    f"(allow={self.allow})")
+        return False

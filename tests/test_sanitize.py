@@ -1,0 +1,125 @@
+"""The REPRO_SANITIZE runtime sanitizer: transfer guard around scoring
+hot paths, NaN/Inf score checks, and the zero-retrace assertion context
+manager the serve demos use."""
+import numpy as np
+import pytest
+
+import jax.numpy as jnp
+
+from repro.serving import (assert_no_retrace, check_scores,
+                           sanitize_enabled, scoring_guard)
+
+
+# -- enable knob ------------------------------------------------------------
+
+@pytest.mark.parametrize("value,expect", [
+    ("1", True), ("true", True), ("ON", True), ("yes", True),
+    ("0", False), ("", False), ("off", False), ("no", False),
+])
+def test_sanitize_enabled_values(monkeypatch, value, expect):
+    monkeypatch.setenv("REPRO_SANITIZE", value)
+    assert sanitize_enabled() is expect
+
+
+def test_sanitize_disabled_when_unset(monkeypatch):
+    monkeypatch.delenv("REPRO_SANITIZE", raising=False)
+    assert sanitize_enabled() is False
+
+
+# -- transfer guard ---------------------------------------------------------
+
+def test_guard_noop_when_disabled(monkeypatch):
+    monkeypatch.delenv("REPRO_SANITIZE", raising=False)
+    with scoring_guard():
+        # implicit host->device transfer: legal without the sanitizer
+        out = jnp.sin(np.arange(3.0))
+    assert out.shape == (3,)
+
+
+def test_guard_blocks_implicit_transfer(monkeypatch):
+    monkeypatch.setenv("REPRO_SANITIZE", "1")
+    with pytest.raises(Exception, match="[Dd]isallow"):
+        with scoring_guard():
+            jnp.sin(np.arange(3.0))    # implicit h2d: blocked
+
+
+def test_guard_allows_device_resident_work(monkeypatch):
+    monkeypatch.setenv("REPRO_SANITIZE", "1")
+    x = jnp.arange(4.0)                # transferred BEFORE the guard
+    with scoring_guard():
+        y = jnp.sin(x)                 # stays on device: fine
+    assert y.shape == (4,)
+
+
+# -- NaN/Inf score checks ---------------------------------------------------
+
+def test_check_scores_passes_clean_and_neg_inf(monkeypatch):
+    monkeypatch.setenv("REPRO_SANITIZE", "1")
+    vals = jnp.asarray([1.0, -jnp.inf, 0.5])   # -inf = masked slot
+    out = check_scores(vals, where="test")
+    assert out is vals
+
+
+def test_check_scores_rejects_nan_and_pos_inf(monkeypatch):
+    monkeypatch.setenv("REPRO_SANITIZE", "1")
+    with pytest.raises(FloatingPointError, match="NaN in test"):
+        check_scores(jnp.asarray([1.0, jnp.nan]), where="test")
+    with pytest.raises(FloatingPointError, match=r"\+inf in test"):
+        check_scores(jnp.asarray([1.0, jnp.inf]), where="test")
+
+
+def test_check_scores_noop_when_disabled(monkeypatch):
+    monkeypatch.delenv("REPRO_SANITIZE", raising=False)
+    vals = jnp.asarray([jnp.nan])              # ignored: sanitizer off
+    assert check_scores(vals, where="test") is vals
+
+
+# -- retrace assertion ------------------------------------------------------
+
+class _Traced:
+    def __init__(self):
+        self.trace_count = 0
+
+
+def test_assert_no_retrace_passes_when_flat():
+    t = _Traced()
+    with assert_no_retrace(t, label="flat") as guard:
+        pass
+    assert guard.new_traces == 0
+
+
+def test_assert_no_retrace_raises_on_growth():
+    t = _Traced()
+    with pytest.raises(AssertionError, match=r"\[churn\].*grew by 2"):
+        with assert_no_retrace(t, label="churn"):
+            t.trace_count += 2
+
+
+def test_assert_no_retrace_allow_budget():
+    t = _Traced()
+    with assert_no_retrace(t, allow=1):
+        t.trace_count += 1             # inside the declared budget
+
+
+def test_assert_no_retrace_callable_target_and_sum():
+    a, b = _Traced(), _Traced()
+    with pytest.raises(AssertionError, match="grew by 2"):
+        with assert_no_retrace(a, lambda: b.trace_count):
+            a.trace_count += 1
+            b.trace_count += 1
+
+
+def test_assert_no_retrace_does_not_mask_inner_error():
+    t = _Traced()
+    with pytest.raises(KeyError):      # NOT AssertionError
+        with assert_no_retrace(t):
+            t.trace_count += 5
+            raise KeyError("inner failure wins")
+
+
+def test_assert_no_retrace_misuse():
+    with pytest.raises(ValueError, match="at least one target"):
+        assert_no_retrace()
+    guard = assert_no_retrace(_Traced())
+    with pytest.raises(ValueError, match="not entered"):
+        guard.new_traces
