@@ -1,0 +1,75 @@
+"""The tools/analyze invariant linter: the repo tree stays clean, the
+fixture self-test proves every rule pack still fires, and the
+suppression mechanism marks (never drops) findings."""
+import json
+import subprocess
+import sys
+from pathlib import Path
+
+REPO = Path(__file__).resolve().parents[1]
+RUN = str(REPO / "tools" / "analyze" / "run.py")
+sys.path.insert(0, str(REPO / "tools" / "analyze"))
+
+import core                                              # noqa: E402
+import error_taxonomy                                    # noqa: E402
+
+
+def _run(*args):
+    return subprocess.run([sys.executable, RUN, *args],
+                          capture_output=True, text=True, cwd=REPO)
+
+
+def test_repo_tree_is_clean_at_fail_on_warn():
+    r = _run("--fail-on", "warn")
+    assert r.returncode == 0, r.stdout + r.stderr
+    assert "0 suppressed" in r.stdout
+
+
+def test_selftest_every_pack_fires():
+    r = _run("--selftest")
+    assert r.returncode == 0, r.stdout + r.stderr
+    assert "4/4 packs ok" in r.stdout
+
+
+def test_json_format_shape():
+    r = _run("--format", "json", "--fail-on", "error")
+    payload = json.loads(r.stdout)
+    assert set(payload) == {"findings", "active", "suppressed"}
+    assert payload["active"] == len(
+        [f for f in payload["findings"] if not f["suppressed"]])
+
+
+def test_suppression_marks_but_never_drops(tmp_path):
+    bad = tmp_path / "bad.py"
+    bad.write_text(
+        "def f(lane):\n"
+        "    # repro: allow[ERR-TYPE] reason=exercising the suppression\n"
+        "    raise RuntimeError('boom')\n")
+    sf = core.SourceFile(bad, tmp_path)
+    env = core.Env(repo=tmp_path,
+                   serving_errors=frozenset({"ServingError"}),
+                   allowed_builtins=frozenset({"ValueError"}))
+    findings = error_taxonomy.run([sf], env)
+    assert [f.rule for f in findings] == ["ERR-TYPE"]
+    core.apply_suppressions(findings, [sf])
+    assert findings[0].suppressed
+    assert findings[0].suppress_reason == "exercising the suppression"
+    # still visible in both report formats
+    assert "[suppressed]" in core.format_text(findings)
+    assert json.loads(core.format_json(findings))["suppressed"] == 1
+
+
+def test_unrelated_rule_is_not_suppressed(tmp_path):
+    bad = tmp_path / "bad.py"
+    bad.write_text(
+        "def f(lane):\n"
+        "    # repro: allow[ERR-BARE] reason=wrong rule id on purpose\n"
+        "    raise RuntimeError('boom')\n")
+    sf = core.SourceFile(bad, tmp_path)
+    env = core.Env(repo=tmp_path,
+                   serving_errors=frozenset({"ServingError"}),
+                   allowed_builtins=frozenset({"ValueError"}))
+    findings = core.apply_suppressions(
+        error_taxonomy.run([sf], env), [sf])
+    assert findings[0].rule == "ERR-TYPE"
+    assert not findings[0].suppressed

@@ -1,0 +1,16 @@
+"""Repo-specific AST invariant linters (stdlib ``ast`` only).
+
+Rule packs:
+    trace_safety    TRC-*  Python-level hazards inside jit/shard_map/
+                           Pallas-traced functions
+    lock_discipline LCK-*  lock acquisition graph, blocking calls under
+                           a lock, locks in except/finally paths
+    kernel_contract KRN-*  every Pallas kernel has an oracle, a parity
+                           test, and shared-helper tiling
+    error_taxonomy  ERR-*  typed ServingError raises, no swallowed
+                           excepts, fault sites in the documented map
+
+Run: ``python tools/analyze/run.py --format text|json --fail-on warn``
+(see docs/static-analysis.md for the rule catalog and suppression
+policy).
+"""

@@ -1,0 +1,169 @@
+"""Shared walker + reporting core for the tools/analyze rule packs.
+
+Everything the four packs have in common lives here:
+
+* ``SourceFile`` — one parsed Python file: text, line table, ``ast``
+  tree, and the ``# repro: allow[RULE-ID] reason=...`` suppression
+  comments found in it.
+* ``Finding`` — one report: rule id, severity, file:line, message.
+  Suppressed findings are NOT dropped — they are marked and counted, so
+  a suppression is always visible in the report (the suppression policy
+  in docs/static-analysis.md).
+* ``apply_suppressions`` / formatters / severity gating for the runner.
+
+Packs are plain modules exposing ``run(files, env) -> list[Finding]``;
+``env`` (``Env``) carries the repo-level facts a rule needs (declared
+oracle keys, fault-site map, ServingError subclass names, the tests
+corpus) so a pack can be pointed at fixture files for the self-test
+without re-deriving repo state from them.
+"""
+from __future__ import annotations
+
+import ast
+import dataclasses
+import json
+import re
+from pathlib import Path
+
+SEVERITIES = ("info", "warn", "error")
+
+# `# repro: allow[ERR-TYPE] reason=why this is fine`
+_ALLOW_RE = re.compile(
+    r"#\s*repro:\s*allow\[([A-Z0-9-]+)\]\s*(?:reason=(.*\S))?\s*$")
+
+
+@dataclasses.dataclass
+class Finding:
+    rule: str                # e.g. "TRC-COND"
+    severity: str            # "info" | "warn" | "error"
+    path: str                # repo-relative path
+    line: int                # 1-indexed
+    message: str
+    suppressed: bool = False
+    suppress_reason: str = ""
+
+    def format(self) -> str:
+        tag = " [suppressed]" if self.suppressed else ""
+        return (f"{self.path}:{self.line}: {self.severity} "
+                f"{self.rule}{tag} {self.message}")
+
+
+class SourceFile:
+    """One parsed source file plus its suppression comments.
+
+    ``allows`` maps line number -> (rule-id, reason); a suppression on
+    line N covers findings on line N and on line N+1 (so a comment line
+    directly above the flagged statement works)."""
+
+    def __init__(self, path: Path, repo: Path):
+        self.path = path
+        self.rel = str(path.relative_to(repo))
+        self.text = path.read_text()
+        self.lines = self.text.splitlines()
+        self.tree = ast.parse(self.text, filename=str(path))
+        self.allows: dict[int, tuple[str, str]] = {}
+        for i, raw in enumerate(self.lines, start=1):
+            m = _ALLOW_RE.search(raw)
+            if m:
+                self.allows[i] = (m.group(1), m.group(2) or "")
+
+    def allow_for(self, rule: str, line: int) -> tuple[str, str] | None:
+        """The suppression covering ``rule`` at ``line``, if any — same
+        line, or a comment line directly above."""
+        for at in (line, line - 1):
+            hit = self.allows.get(at)
+            if hit and hit[0] == rule:
+                return hit
+        return None
+
+
+@dataclasses.dataclass
+class Env:
+    """Repo-level facts shared by the packs (see module docstring)."""
+    repo: Path
+    oracle_keys: frozenset[str] = frozenset()     # ref.ORACLES keys
+    fault_sites: frozenset[str] = frozenset()     # faults.SITES
+    serving_errors: frozenset[str] = frozenset()  # ServingError subclasses
+    allowed_builtins: frozenset[str] = frozenset()
+    tests_text: str = ""                          # concatenated tests/*.py
+
+
+def load_files(repo: Path, paths) -> list[SourceFile]:
+    out = []
+    for p in sorted(paths):
+        out.append(SourceFile(Path(p), repo))
+    return out
+
+
+def walk_files(repo: Path, root: str, exclude: tuple[str, ...] = ()):
+    base = repo / root
+    for p in sorted(base.rglob("*.py")):
+        if p.name in exclude:
+            continue
+        yield p
+
+
+def apply_suppressions(findings: list[Finding],
+                       files: list[SourceFile]) -> list[Finding]:
+    """Mark findings covered by an allow-comment as suppressed (they are
+    still reported and counted — never silently dropped)."""
+    by_rel = {f.rel: f for f in files}
+    for fd in findings:
+        sf = by_rel.get(fd.path)
+        if sf is None:
+            continue
+        hit = sf.allow_for(fd.rule, fd.line)
+        if hit is not None:
+            fd.suppressed = True
+            fd.suppress_reason = hit[1]
+    return findings
+
+
+def severity_at_least(finding: Finding, floor: str) -> bool:
+    return SEVERITIES.index(finding.severity) >= SEVERITIES.index(floor)
+
+
+def format_text(findings: list[Finding]) -> str:
+    lines = [f.format() for f in findings]
+    active = [f for f in findings if not f.suppressed]
+    sup = [f for f in findings if f.suppressed]
+    lines.append(f"{len(active)} finding(s), {len(sup)} suppressed")
+    return "\n".join(lines)
+
+
+def format_json(findings: list[Finding]) -> str:
+    return json.dumps({
+        "findings": [dataclasses.asdict(f) for f in findings],
+        "active": sum(not f.suppressed for f in findings),
+        "suppressed": sum(f.suppressed for f in findings),
+    }, indent=2)
+
+
+# -- small AST helpers shared by the packs ----------------------------------
+
+def dotted_name(node: ast.AST) -> str:
+    """'jax.jit' for Attribute/Name chains; '' for anything else."""
+    if isinstance(node, ast.Name):
+        return node.id
+    if isinstance(node, ast.Attribute):
+        base = dotted_name(node.value)
+        return f"{base}.{node.attr}" if base else node.attr
+    return ""
+
+
+def call_name(node: ast.AST) -> str:
+    """Dotted callee name of a Call node ('' for non-calls)."""
+    return dotted_name(node.func) if isinstance(node, ast.Call) else ""
+
+
+def keyword_arg(call: ast.Call, name: str) -> ast.AST | None:
+    for kw in call.keywords:
+        if kw.arg == name:
+            return kw.value
+    return None
+
+
+def str_constants(node: ast.AST) -> list[str]:
+    """Every string literal inside ``node`` (tuple/list of names etc.)."""
+    return [n.value for n in ast.walk(node)
+            if isinstance(n, ast.Constant) and isinstance(n.value, str)]

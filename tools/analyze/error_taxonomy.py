@@ -1,0 +1,120 @@
+"""ERR rule pack: the serving layer's error taxonomy, enforced.
+
+Every failure that crosses the serving boundary must be legible to a
+caller: typed, attributable to a tenant when one is in scope, never
+swallowed, and — for injected faults — drawn from the documented site
+map so chaos scenarios and production probes stay in sync.
+
+    ERR-TYPE        ``raise SomeError(...)`` reachable from the serving
+                    package must construct a ``ServingError`` subclass
+                    or an allowlisted builtin (ValueError for caller
+                    bugs, etc.).  Bare ``raise`` re-raises pass.
+    ERR-TENANT      a ``ServingError`` raised from a function that has
+                    tenant context in scope (a ``tenant`` parameter or a
+                    resolved ``lane``/``req``) must carry ``tenant=`` so
+                    per-tenant dashboards can attribute the failure.
+    ERR-BARE        bare ``except:`` or an except handler whose entire
+                    body is ``pass`` — a swallowed failure no counter or
+                    log ever sees.
+    ERR-FAULT-SITE  every ``injector.check("<site>")`` literal must be a
+                    member of the documented site map
+                    (``faults.SITES`` / docs/robustness.md) — an
+                    unmapped probe is a probe no scenario can arm.
+"""
+from __future__ import annotations
+
+import ast
+
+from core import Finding, SourceFile, call_name, keyword_arg
+
+TENANT_HINTS = {"tenant", "lane", "req"}
+
+
+def _enclosing_functions(tree: ast.AST):
+    """(function, raise_node) pairs plus raises at module level."""
+    for node in ast.walk(tree):
+        if isinstance(node, (ast.FunctionDef, ast.AsyncFunctionDef)):
+            yield node
+
+
+def _scope_names(fn) -> set[str]:
+    names = {a.arg for a in fn.args.posonlyargs + fn.args.args
+             + fn.args.kwonlyargs}
+    for node in ast.walk(fn):
+        if isinstance(node, ast.Assign):
+            for t in node.targets:
+                if isinstance(t, ast.Name):
+                    names.add(t.id)
+    return names
+
+
+def run(files: list[SourceFile], env) -> list[Finding]:
+    findings: list[Finding] = []
+    allowed = set(env.allowed_builtins)
+    serving = set(env.serving_errors)
+
+    for sf in files:
+        # map each raise to its innermost enclosing function (for the
+        # tenant-scope check)
+        owner: dict[int, ast.AST] = {}
+        for fn in _enclosing_functions(sf.tree):
+            for sub in ast.walk(fn):
+                if isinstance(sub, ast.Raise):
+                    owner[id(sub)] = fn  # innermost wins (walk order is
+                    # outer-first, so later assignment = inner function)
+
+        for node in ast.walk(sf.tree):
+            if isinstance(node, ast.Raise):
+                exc = node.exc
+                if exc is None or not isinstance(exc, ast.Call):
+                    continue  # bare re-raise / `raise err_obj`
+                name = call_name(exc).split(".")[-1]
+                if not name or not name[0].isupper():
+                    continue  # factory call, not a class constructor
+                if name not in serving and name not in allowed:
+                    findings.append(Finding(
+                        "ERR-TYPE", "warn", sf.rel, node.lineno,
+                        f"raises {name} — serving failures must be "
+                        f"ServingError subclasses (or an allowlisted "
+                        f"builtin: {', '.join(sorted(allowed))})"))
+                if name in serving and \
+                        keyword_arg(exc, "tenant") is None:
+                    fn = owner.get(id(node))
+                    hints = (_scope_names(fn) & TENANT_HINTS
+                             if fn is not None else set())
+                    if hints:
+                        findings.append(Finding(
+                            "ERR-TENANT", "warn", sf.rel, node.lineno,
+                            f"{name} raised with tenant context in "
+                            f"scope ({', '.join(sorted(hints))}) but no "
+                            f"tenant= tag"))
+
+            if isinstance(node, ast.ExceptHandler):
+                if node.type is None:
+                    findings.append(Finding(
+                        "ERR-BARE", "warn", sf.rel, node.lineno,
+                        "bare except: — catches SystemExit/"
+                        "KeyboardInterrupt and hides the failure type"))
+                body = [s for s in node.body
+                        if not isinstance(s, ast.Expr)
+                        or not isinstance(s.value, ast.Constant)]
+                if body and all(isinstance(s, ast.Pass) for s in body):
+                    findings.append(Finding(
+                        "ERR-BARE", "warn", sf.rel, node.lineno,
+                        "except-pass swallows the failure — count it, "
+                        "log it, or re-raise"))
+
+            if isinstance(node, ast.Call):
+                cn = call_name(node)
+                if cn.split(".")[-1] == "check" and node.args and \
+                        isinstance(node.args[0], ast.Constant) and \
+                        isinstance(node.args[0].value, str):
+                    site = node.args[0].value
+                    if env.fault_sites and site not in env.fault_sites:
+                        findings.append(Finding(
+                            "ERR-FAULT-SITE", "error", sf.rel,
+                            node.lineno,
+                            f"fault-injection site {site!r} is not in "
+                            f"the documented site map "
+                            f"({', '.join(sorted(env.fault_sites))})"))
+    return findings

@@ -1,0 +1,15 @@
+# expect: ERR-TYPE ERR-TENANT ERR-BARE ERR-FAULT-SITE
+"""Known-bad fixture for the error_taxonomy pack (self-test input only;
+``Unservable`` is intentionally undefined — the pack reads the AST, it
+never imports this file)."""
+
+
+def dispatch(lane, injector):
+    injector.check("warp_core")             # ERR-FAULT-SITE (unmapped)
+    try:
+        lane.engine.topk()
+    except Exception:
+        pass                                # ERR-BARE (swallowed)
+    if lane.closed:
+        raise Unservable("lane closed")     # noqa: F821  ERR-TENANT
+    raise RuntimeError("dispatch wedged")   # ERR-TYPE (untyped failure)

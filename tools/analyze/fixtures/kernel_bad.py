@@ -1,0 +1,22 @@
+# expect: KRN-ORACLE KRN-TEST KRN-BLOCKSPEC KRN-TILE
+"""Known-bad fixture for the kernel_contract pack (self-test input
+only): a Pallas entry point with no oracle, no parity test, hand-rolled
+BlockSpecs, and a bare magic tile size."""
+import jax
+from jax.experimental import pallas as pl
+
+
+def _kernel(x_ref, o_ref):
+    o_ref[...] = x_ref[...] * 2.0
+
+
+def mystery_double(x, *, block_n: int = 512):        # KRN-TILE (bare 512)
+    # no ref.ORACLES entry -> KRN-ORACLE; never named under tests/ ->
+    # KRN-TEST
+    return pl.pallas_call(
+        _kernel,
+        out_shape=jax.ShapeDtypeStruct(x.shape, x.dtype),
+        in_specs=[pl.BlockSpec((block_n,), lambda i: (i,))],   # KRN-BLOCKSPEC
+        out_specs=pl.BlockSpec((block_n,), lambda i: (i,)),
+        grid=(x.shape[0] // block_n,),
+    )(x)

@@ -1,0 +1,32 @@
+# expect: LCK-BLOCKING LCK-ORDER LCK-EXCEPT
+"""Known-bad fixture for the lock_discipline pack (self-test input
+only)."""
+import queue
+import threading
+import time
+
+
+class Pump:
+    def __init__(self):
+        self._lock = threading.Lock()
+        self._aux = threading.Lock()
+        self._q = queue.Queue()
+
+    def tick(self):
+        with self._lock:
+            time.sleep(0.1)                 # LCK-BLOCKING (sleep under lock)
+            item = self._q.get()            # LCK-BLOCKING (unbounded wait)
+            with self._aux:                 # edge _lock -> _aux
+                return item
+
+    def flush(self):
+        with self._aux:
+            with self._lock:                # edge _aux -> _lock: LCK-ORDER
+                return None
+
+    def close(self):
+        try:
+            raise ValueError("boom")
+        except ValueError:
+            with self._lock:                # LCK-EXCEPT (lock in handler)
+                return None

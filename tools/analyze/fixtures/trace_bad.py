@@ -1,0 +1,24 @@
+# expect: TRC-COND TRC-HOST TRC-MUTDEF TRC-CLOSURE TRC-FSTRING
+"""Known-bad fixture for the trace_safety pack (self-test input only —
+never imported, never executed; every construct below is a hazard the
+pack must keep detecting)."""
+import jax
+import numpy as np
+
+_history = []
+
+
+class Scorer:
+    def __init__(self):
+        self.last = None
+        self.fn = jax.jit(self._score)
+
+    def _score(self, x, scale=[]):          # TRC-MUTDEF
+        self.last = x                       # TRC-CLOSURE (host attr write)
+        _history.append(1)                  # TRC-CLOSURE (closed-over list)
+        if x > 0:                           # TRC-COND (branch on tracer)
+            x = x * 2
+        peak = float(x)                     # TRC-HOST (concretize)
+        host = np.asarray(x)                # TRC-HOST (device->host)
+        print(f"score={x}")                 # TRC-FSTRING (format tracer)
+        return x + peak + host.sum()

@@ -1,0 +1,93 @@
+"""KRN rule pack: every Pallas kernel honors the repo's kernel contract.
+
+A "kernel entry point" is a public module-level function whose body
+(including nested defs) issues a ``pl.pallas_call``.  The contract, per
+entry point:
+
+    KRN-ORACLE     the entry name is a key of the declared oracle map
+                   (``ref.ORACLES``) — so a pure-jnp reference exists
+                   and is discoverable.
+    KRN-TEST       the entry name appears in the tests corpus
+                   (``tests/*.py``) — a parity sweep actually exercises
+                   the kernel-vs-oracle pair.
+    KRN-BLOCKSPEC  no direct ``pl.BlockSpec(...)`` construction outside
+                   the shared ``blocks`` helper module — index maps are
+                   subtle (tile coordinates, not element offsets) and
+                   live in ONE audited place.
+    KRN-TILE       no bare magic tile sizes: a ``block_*`` / ``tile_*``
+                   parameter must default to a named ``blocks.*``
+                   constant, not an int literal.
+
+The helper module itself (``blocks.py``) and the oracle module
+(``ref.py``) are exempt from KRN-BLOCKSPEC by name.
+"""
+from __future__ import annotations
+
+import ast
+
+from core import Finding, SourceFile, call_name
+
+HELPER_MODULES = ("blocks.py",)
+TILE_PARAM_PREFIXES = ("block_", "tile_")
+
+
+def _entry_points(sf: SourceFile):
+    """Public module-level functions that issue a pallas_call."""
+    for node in sf.tree.body:
+        if not isinstance(node, (ast.FunctionDef, ast.AsyncFunctionDef)):
+            continue
+        if node.name.startswith("_"):
+            continue
+        for sub in ast.walk(node):
+            if isinstance(sub, ast.Call) and \
+                    call_name(sub).endswith("pallas_call"):
+                yield node
+                break
+
+
+def run(files: list[SourceFile], env) -> list[Finding]:
+    findings: list[Finding] = []
+    for sf in files:
+        is_helper = sf.path.name in HELPER_MODULES
+
+        for entry in _entry_points(sf):
+            if entry.name not in env.oracle_keys:
+                findings.append(Finding(
+                    "KRN-ORACLE", "error", sf.rel, entry.lineno,
+                    f"kernel entry {entry.name}() has no declared oracle "
+                    f"(add a pure-jnp reference and a ref.ORACLES entry)"))
+            if entry.name not in env.tests_text:
+                findings.append(Finding(
+                    "KRN-TEST", "error", sf.rel, entry.lineno,
+                    f"kernel entry {entry.name}() never appears under "
+                    f"tests/ — no parity sweep covers it"))
+
+        for node in ast.walk(sf.tree):
+            if isinstance(node, ast.Call):
+                cn = call_name(node)
+                if cn.split(".")[-1] == "BlockSpec" and not is_helper:
+                    findings.append(Finding(
+                        "KRN-BLOCKSPEC", "warn", sf.rel, node.lineno,
+                        "direct pl.BlockSpec construction — use the "
+                        "shared blocks.* helpers (row_tiles / col_tiles "
+                        "/ broadcast / attn_tiles / prefetch_*)"))
+            if isinstance(node, (ast.FunctionDef, ast.AsyncFunctionDef)):
+                args = node.args
+                pos = args.posonlyargs + args.args
+                pairs = list(zip(pos[len(pos) - len(args.defaults):],
+                                 args.defaults))
+                pairs += [(a, d) for a, d in
+                          zip(args.kwonlyargs, args.kw_defaults) if d]
+                for arg, default in pairs:
+                    if not arg.arg.startswith(TILE_PARAM_PREFIXES):
+                        continue
+                    if isinstance(default, ast.Constant) and \
+                            isinstance(default.value, int) and \
+                            not isinstance(default.value, bool):
+                        findings.append(Finding(
+                            "KRN-TILE", "warn", sf.rel, default.lineno,
+                            f"{node.name}(): tile parameter {arg.arg} "
+                            f"defaults to bare literal "
+                            f"{default.value} — use a named blocks.* "
+                            f"constant"))
+    return findings

@@ -1,0 +1,171 @@
+"""LCK rule pack: lock acquisition discipline across the serving layer.
+
+Locks are identified structurally: any attribute (or module global)
+assigned a ``threading.Lock()`` / ``RLock()`` / ``Condition()`` anywhere
+in the file.  ``with <lock>:`` blocks and explicit ``.acquire()`` calls
+are the acquisition sites.
+
+    LCK-BLOCKING  a blocking call while holding a lock: ``time.sleep``,
+                  unbounded ``.wait()`` / ``.join()`` / ``.get()`` /
+                  ``.result()`` (a ``timeout=`` argument makes the call
+                  bounded and passes — and ``Condition.wait`` RELEASES
+                  the lock, which is exactly the sanctioned pattern for
+                  backing off under an RLock), and
+                  ``.block_until_ready()`` (a device sync of unbounded
+                  latency that would stall every other thread).
+    LCK-ORDER     inconsistent lock ordering: the pack builds the
+                  acquisition graph (lock A held while acquiring lock B
+                  => edge A->B) across ALL analyzed files and flags any
+                  cycle — the classic ABBA deadlock shape.
+    LCK-EXCEPT    acquiring a lock inside an ``except`` handler or
+                  ``finally`` block.  Cleanup paths run when invariants
+                  are already broken; taking a lock there deadlocks if
+                  the failing thread still holds it.
+
+Nested function bodies inside a ``with`` block are skipped (the nested
+function runs later, not under the lock).
+"""
+from __future__ import annotations
+
+import ast
+
+from core import Finding, SourceFile, call_name, dotted_name, keyword_arg
+
+LOCK_FACTORIES = ("Lock", "RLock", "Condition")
+UNBOUNDED_METHODS = {"wait", "join", "get", "result"}
+
+
+def _lock_names(sf: SourceFile) -> set[str]:
+    """Dotted names ('self._lock', '_REGISTRY_LOCK') bound to lock
+    objects anywhere in the file."""
+    names: set[str] = set()
+    for node in ast.walk(sf.tree):
+        if isinstance(node, ast.Assign) and isinstance(node.value, ast.Call):
+            cn = call_name(node.value)
+            if cn.split(".")[-1] in LOCK_FACTORIES:
+                for t in node.targets:
+                    dn = dotted_name(t)
+                    if dn:
+                        names.add(dn)
+    return names
+
+
+def _nested_def_nodes(root: ast.AST) -> set[int]:
+    out: set[int] = set()
+    for node in ast.walk(root):
+        if isinstance(node, (ast.FunctionDef, ast.AsyncFunctionDef,
+                             ast.Lambda)):
+            for sub in ast.walk(node):
+                out.add(id(sub))
+            out.discard(id(node))
+    return out
+
+
+def _has_timeout(call: ast.Call) -> bool:
+    if keyword_arg(call, "timeout") is not None:
+        return True
+    # positional timeout (Condition.wait(t), Thread.join(t), q.get(True, t))
+    return any(not isinstance(a, ast.Starred) for a in call.args)
+
+
+def run(files: list[SourceFile], env) -> list[Finding]:
+    findings: list[Finding] = []
+    # acquisition graph shared across files: (file, heldlock) -> acquired
+    edges: dict[tuple[str, str], set[str]] = {}
+    edge_sites: dict[tuple[str, str, str], tuple[str, int]] = {}
+
+    for sf in files:
+        locks = _lock_names(sf)
+        if not locks:
+            continue
+
+        def held_visit(node, held: tuple[str, ...], skip: set[int]):
+            if id(node) in skip:
+                return
+            acquired = None
+            if isinstance(node, ast.With):
+                for item in node.items:
+                    dn = dotted_name(item.context_expr)
+                    if not dn and isinstance(item.context_expr, ast.Call):
+                        # `with self._lock:` vs `with lock.acquire():`
+                        dn = call_name(item.context_expr)
+                    if dn in locks:
+                        acquired = dn
+            if isinstance(node, ast.Call):
+                cn = call_name(node)
+                if cn.endswith(".acquire"):
+                    owner = cn.rsplit(".", 1)[0]
+                    if owner in locks and held:
+                        acquired = owner
+                if held:
+                    last = cn.split(".")[-1]
+                    recv = cn.rsplit(".", 1)[0] if "." in cn else ""
+                    if cn in ("time.sleep", "sleep"):
+                        findings.append(Finding(
+                            "LCK-BLOCKING", "warn", sf.rel, node.lineno,
+                            f"time.sleep while holding {held[-1]} — "
+                            f"stalls every thread contending for it"))
+                    elif last == "block_until_ready":
+                        findings.append(Finding(
+                            "LCK-BLOCKING", "warn", sf.rel, node.lineno,
+                            f"device sync (block_until_ready) while "
+                            f"holding {held[-1]}"))
+                    elif last in UNBOUNDED_METHODS and recv not in locks \
+                            and not _has_timeout(node):
+                        # unbounded wait on a non-lock object under lock;
+                        # Condition.wait on a known lock-wrapping
+                        # Condition releases the lock and is the
+                        # sanctioned backoff pattern
+                        findings.append(Finding(
+                            "LCK-BLOCKING", "warn", sf.rel, node.lineno,
+                            f".{last}() without timeout while holding "
+                            f"{held[-1]}"))
+            if acquired is not None:
+                for h in held:
+                    if h != acquired:
+                        edges.setdefault((sf.rel, h), set()).add(acquired)
+                        edge_sites[(sf.rel, h, acquired)] = \
+                            (sf.rel, node.lineno)
+                held = held + (acquired,)
+                skip = skip | _nested_def_nodes(node)
+            for child in ast.iter_child_nodes(node):
+                held_visit(child, held, skip)
+
+        held_visit(sf.tree, (), set())
+
+        # LCK-EXCEPT: lock acquisition in handlers / finally
+        for node in ast.walk(sf.tree):
+            if not isinstance(node, ast.Try):
+                continue
+            regions = [(h, "except handler") for h in node.handlers]
+            if node.finalbody:
+                regions += [(stmt, "finally block")
+                            for stmt in node.finalbody]
+            for region, label in regions:
+                for sub in ast.walk(region):
+                    dn = ""
+                    if isinstance(sub, ast.With):
+                        for item in sub.items:
+                            dn = dotted_name(item.context_expr) or dn
+                    elif isinstance(sub, ast.Call) and \
+                            call_name(sub).endswith(".acquire"):
+                        dn = call_name(sub).rsplit(".", 1)[0]
+                    if dn in locks:
+                        findings.append(Finding(
+                            "LCK-EXCEPT", "warn", sf.rel, sub.lineno,
+                            f"acquires {dn} inside a {label} — cleanup "
+                            f"paths must not take locks"))
+
+    # LCK-ORDER: cycle = edge in both directions (per file; cross-file
+    # lock identity is name-based so only same-name pairs can alias)
+    seen: set[tuple[str, str, str]] = set()
+    for (rel, a), bs in edges.items():
+        for b in bs:
+            if a in edges.get((rel, b), ()) and (rel, b, a) not in seen:
+                seen.add((rel, a, b))
+                site = edge_sites.get((rel, a, b), (rel, 0))
+                findings.append(Finding(
+                    "LCK-ORDER", "error", site[0], site[1],
+                    f"lock-order cycle: {a} -> {b} and {b} -> {a} are "
+                    f"both acquired nested — ABBA deadlock"))
+    return findings

@@ -1,0 +1,196 @@
+#!/usr/bin/env python3
+"""Run the tools/analyze rule packs over the repo tree.
+
+    python tools/analyze/run.py [--format text|json] [--fail-on warn]
+    python tools/analyze/run.py --selftest
+
+Exit status 1 when any NON-suppressed finding reaches the --fail-on
+severity floor (suppressed findings are still printed and counted, never
+silently dropped).  ``--selftest`` runs each pack against its known-bad
+fixture under ``tools/analyze/fixtures/`` and fails unless every rule
+the fixture declares (``# expect: RULE-ID ...`` header lines) actually
+fires — proving the linter can still detect what it claims to.
+
+Repo-level facts (the ``Env``) are derived statically, never imported:
+oracle keys from the ``ORACLES`` dict literal in kernels/ref.py, fault
+sites from ``SITES`` in serving/faults.py, the ServingError subclass
+closure from class definitions across serving/*.py, and the
+concatenated tests corpus for the parity-test check.
+"""
+from __future__ import annotations
+
+import argparse
+import ast
+import sys
+from pathlib import Path
+
+HERE = Path(__file__).resolve().parent
+REPO = HERE.parent.parent
+sys.path.insert(0, str(HERE))
+
+import core                                              # noqa: E402
+import error_taxonomy                                    # noqa: E402
+import kernel_contract                                   # noqa: E402
+import lock_discipline                                   # noqa: E402
+import trace_safety                                      # noqa: E402
+
+# builtins a serving-layer raise may use without a ServingError subclass:
+# caller bugs (ValueError/TypeError/KeyError/IndexError), environment
+# (FileNotFoundError), numerics (FloatingPointError, the sanitizer's
+# NaN check), plus assertion/not-implemented escapes.  RuntimeError is
+# deliberately ABSENT — that is what the taxonomy replaces.
+ALLOWED_BUILTINS = frozenset({
+    "ValueError", "TypeError", "KeyError", "IndexError",
+    "FileNotFoundError", "NotImplementedError", "AssertionError",
+    "StopIteration", "FloatingPointError", "TimeoutError",
+})
+
+PACKS = {
+    "trace_safety": trace_safety,
+    "lock_discipline": lock_discipline,
+    "kernel_contract": kernel_contract,
+    "error_taxonomy": error_taxonomy,
+}
+
+# fixture file -> pack exercised by the self-test
+FIXTURES = {
+    "trace_bad.py": "trace_safety",
+    "lock_bad.py": "lock_discipline",
+    "kernel_bad.py": "kernel_contract",
+    "error_bad.py": "error_taxonomy",
+}
+
+
+def _dict_str_keys(tree: ast.AST, name: str) -> frozenset[str]:
+    """String keys of the module-level dict literal assigned to name."""
+    for node in tree.body:
+        if isinstance(node, ast.Assign) and any(
+                isinstance(t, ast.Name) and t.id == name
+                for t in node.targets):
+            if isinstance(node.value, ast.Dict):
+                return frozenset(
+                    k.value for k in node.value.keys
+                    if isinstance(k, ast.Constant)
+                    and isinstance(k.value, str))
+    return frozenset()
+
+
+def _set_str_values(tree: ast.AST, name: str) -> frozenset[str]:
+    """String members of the set/frozenset literal assigned to name."""
+    for node in tree.body:
+        if isinstance(node, ast.Assign) and any(
+                isinstance(t, ast.Name) and t.id == name
+                for t in node.targets):
+            return frozenset(core.str_constants(node.value))
+    return frozenset()
+
+
+def _serving_error_closure(repo: Path) -> frozenset[str]:
+    """Transitive subclasses of ServingError across serving/*.py."""
+    bases_of: dict[str, set[str]] = {}
+    for p in sorted((repo / "src/repro/serving").glob("*.py")):
+        tree = ast.parse(p.read_text(), filename=str(p))
+        for node in ast.walk(tree):
+            if isinstance(node, ast.ClassDef):
+                bases_of[node.name] = {
+                    core.dotted_name(b).split(".")[-1]
+                    for b in node.bases}
+    known = {"ServingError"}
+    grew = True
+    while grew:
+        grew = False
+        for cls, bases in bases_of.items():
+            if cls not in known and bases & known:
+                known.add(cls)
+                grew = True
+    return frozenset(known)
+
+
+def build_env(repo: Path) -> core.Env:
+    ref = ast.parse((repo / "src/repro/kernels/ref.py").read_text())
+    faults = ast.parse((repo / "src/repro/serving/faults.py").read_text())
+    tests = "\n".join(p.read_text()
+                      for p in sorted((repo / "tests").glob("*.py")))
+    return core.Env(
+        repo=repo,
+        oracle_keys=_dict_str_keys(ref, "ORACLES"),
+        fault_sites=_set_str_values(faults, "SITES"),
+        serving_errors=_serving_error_closure(repo),
+        allowed_builtins=ALLOWED_BUILTINS,
+        tests_text=tests,
+    )
+
+
+def analyze(repo: Path) -> list[core.Finding]:
+    env = build_env(repo)
+    serving = core.load_files(
+        repo, (repo / "src/repro/serving").glob("*.py"))
+    kernels = core.load_files(
+        repo, (repo / "src/repro/kernels").glob("*.py"))
+    tree = core.load_files(repo, core.walk_files(repo, "src/repro"))
+
+    findings: list[core.Finding] = []
+    findings += trace_safety.run(tree, env)
+    findings += lock_discipline.run(serving, env)
+    findings += kernel_contract.run(kernels, env)
+    findings += error_taxonomy.run(serving, env)
+
+    core.apply_suppressions(findings, tree + serving + kernels)
+    findings.sort(key=lambda f: (f.path, f.line, f.rule))
+    return findings
+
+
+def selftest(repo: Path) -> int:
+    env = build_env(repo)
+    fixtures = HERE / "fixtures"
+    failures = 0
+    for fname, pack_name in sorted(FIXTURES.items()):
+        path = fixtures / fname
+        sf = core.SourceFile(path, repo)
+        expected: set[str] = set()
+        for line in sf.lines:
+            if line.startswith("# expect:"):
+                expected.update(
+                    line.removeprefix("# expect:").replace(",", " ").split())
+        fired = {f.rule for f in PACKS[pack_name].run([sf], env)}
+        missing = expected - fired
+        status = "ok" if not missing else "FAIL"
+        print(f"selftest {fname} [{pack_name}]: {status} "
+              f"(expected {len(expected)}, fired {sorted(fired)})")
+        if missing:
+            failures += 1
+            print(f"  missing: {sorted(missing)}")
+        if not expected:
+            failures += 1
+            print("  fixture declares no '# expect:' rules")
+    print(f"selftest: {len(FIXTURES) - failures}/{len(FIXTURES)} packs ok")
+    return 1 if failures else 0
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(description=__doc__.splitlines()[0])
+    ap.add_argument("--format", choices=("text", "json"), default="text")
+    ap.add_argument("--fail-on", choices=core.SEVERITIES, default="warn",
+                    help="exit 1 if any active finding is at least this "
+                         "severe (default: warn)")
+    ap.add_argument("--root", type=Path, default=REPO,
+                    help="repo root to analyze")
+    ap.add_argument("--selftest", action="store_true",
+                    help="run the rule packs against the known-bad "
+                         "fixtures instead of the repo tree")
+    args = ap.parse_args(argv)
+
+    if args.selftest:
+        return selftest(args.root)
+
+    findings = analyze(args.root)
+    out = (core.format_json(findings) if args.format == "json"
+           else core.format_text(findings))
+    print(out)
+    gate = [f for f in findings if not f.suppressed
+            and core.severity_at_least(f, args.fail_on)]
+    return 1 if gate else 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

@@ -1,0 +1,336 @@
+"""TRC rule pack: Python-level hazards inside traced functions.
+
+A "traced function" is one JAX stages out: the argument of ``jax.jit``
+(call form or decorator, including ``functools.partial(jax.jit, ...)``),
+the kernel passed to ``pl.pallas_call`` (directly, through
+``functools.partial``, or returned by a local factory call), the body
+passed to ``shard_map`` — plus every function nested inside one.  Inside
+such a function, ordinary Python runs at TRACE time only, so
+value-dependent Python is either a silent retrace bomb or a host sync:
+
+    TRC-COND     ``if``/``while`` on a traced parameter (each distinct
+                 value retraces; under jit it is a ConcretizationError)
+    TRC-HOST     ``.item()`` / ``float()`` / ``int()`` / ``bool()`` /
+                 ``np.asarray()`` / ``.block_until_ready()`` on a traced
+                 value — a device->host sync in the middle of a trace
+    TRC-MUTDEF   mutable default argument (shared across every call of
+                 a traced function — state leaks between traces)
+    TRC-CLOSURE  writing attributes of closed-over / passed-in host
+                 objects from inside a traced function (runs once per
+                 TRACE, not per call).  The repo's documented
+                 ``trace_count`` increment idiom is allowlisted: that
+                 counter exists precisely BECAUSE the write runs only at
+                 trace time.
+    TRC-FSTRING  f-string / ``.format()`` / ``str()`` interpolating a
+                 traced value (formats the abstract tracer, not data)
+
+Precision choices (kept deliberately tight so a clean tree stays clean):
+only DIRECT parameter names are treated as traced values; parameters
+named in ``static_argnames`` (or bound via ``functools.partial``) are
+static; ``x is None`` tests and ``.shape/.ndim/.dtype/.size`` accesses
+are trace-static and never flagged.
+"""
+from __future__ import annotations
+
+import ast
+
+from core import Finding, SourceFile, call_name, dotted_name, str_constants
+
+STATIC_ATTRS = {"shape", "ndim", "dtype", "size"}
+HOST_CASTS = {"float", "int", "bool"}
+NP_SYNCS = {"np.asarray", "np.array", "numpy.asarray", "numpy.array",
+            "onp.asarray", "onp.array"}
+MUTABLE_CALLS = {"list", "dict", "set"}
+# the documented instrumentation idiom: a python-side retrace counter
+ALLOWED_TRACE_SIDE_EFFECTS = {"trace_count"}
+
+
+def _is_partial(call: ast.Call) -> bool:
+    return call_name(call) in ("functools.partial", "partial")
+
+
+def _jit_like(name: str) -> bool:
+    return name in ("jax.jit", "jit") or name.endswith(".jit")
+
+
+def _resolve_target(node: ast.AST, statics: set[str]) -> str | None:
+    """Function name a jit/pallas_call/shard_map argument refers to;
+    collects partial-bound keyword names into ``statics``."""
+    if isinstance(node, ast.Name):
+        return node.id
+    if isinstance(node, ast.Attribute):          # self._score_impl
+        return node.attr
+    if isinstance(node, ast.Call):
+        if _is_partial(node) and node.args:
+            statics.update(kw.arg for kw in node.keywords if kw.arg)
+            return _resolve_target(node.args[0], statics)
+        # factory call: kernel = _make_kernel(...) — mark the factory
+        # (its nested defs inherit traced status)
+        return dotted_name(node.func).split(".")[-1] or None
+    return None
+
+
+def _traced_functions(sf: SourceFile) -> dict[ast.AST, set[str]]:
+    """Map of FunctionDef -> static parameter names for every traced
+    function in the file (including functions nested in traced ones)."""
+    defs: dict[str, list[ast.AST]] = {}
+    for node in ast.walk(sf.tree):
+        if isinstance(node, (ast.FunctionDef, ast.AsyncFunctionDef)):
+            defs.setdefault(node.name, []).append(node)
+
+    traced: dict[ast.AST, set[str]] = {}
+
+    def mark(name: str | None, statics: set[str]) -> None:
+        for fn in defs.get(name or "", []):
+            traced.setdefault(fn, set()).update(statics)
+
+    for node in ast.walk(sf.tree):
+        # decorator form: @jax.jit / @functools.partial(jax.jit, ...)
+        if isinstance(node, (ast.FunctionDef, ast.AsyncFunctionDef)):
+            for dec in node.decorator_list:
+                statics: set[str] = set()
+                if _jit_like(dotted_name(dec)):
+                    traced.setdefault(node, set())
+                elif isinstance(dec, ast.Call):
+                    dn = dotted_name(dec.func)
+                    if _jit_like(dn):
+                        statics.update(_static_argnames(dec))
+                        traced.setdefault(node, set()).update(statics)
+                    elif _is_partial(dec) and dec.args and \
+                            _jit_like(dotted_name(dec.args[0])):
+                        statics.update(_static_argnames(dec))
+                        traced.setdefault(node, set()).update(statics)
+        # call form: jax.jit(f), pl.pallas_call(kernel, ...), shard_map(f)
+        if isinstance(node, ast.Call):
+            cn = call_name(node)
+            statics = set()
+            if _jit_like(cn) and node.args:
+                statics.update(_static_argnames(node))
+                mark(_resolve_target(node.args[0], statics), statics)
+            elif cn.endswith("pallas_call") and node.args:
+                mark(_resolve_target(node.args[0], statics), statics)
+            elif (cn == "shard_map" or cn.endswith(".shard_map")) \
+                    and node.args:
+                mark(_resolve_target(node.args[0], statics), statics)
+
+    # local aliases: kernel = functools.partial(_kernel_topk, ...) — the
+    # alias name was marked; transfer the mark to the aliased function
+    for node in ast.walk(sf.tree):
+        if isinstance(node, ast.Assign) and len(node.targets) == 1 and \
+                isinstance(node.targets[0], ast.Name) and \
+                isinstance(node.value, ast.Call) and \
+                _is_partial(node.value) and node.value.args:
+            alias = node.targets[0].id
+            hit = [fn for name, fns in defs.items() if name == alias
+                   for fn in fns]
+            statics = {kw.arg for kw in node.value.keywords if kw.arg}
+            target = _resolve_target(node.value.args[0], statics)
+            if target and (hit or alias not in defs):
+                mark(target, statics)
+
+    # nested functions inside a traced function are traced too
+    grew = True
+    while grew:
+        grew = False
+        for fn, statics in list(traced.items()):
+            for sub in ast.walk(fn):
+                if sub is not fn and isinstance(
+                        sub, (ast.FunctionDef, ast.AsyncFunctionDef)) \
+                        and sub not in traced:
+                    traced[sub] = set(statics)
+                    grew = True
+    return traced
+
+
+def _static_argnames(call: ast.Call) -> set[str]:
+    for kw in call.keywords:
+        if kw.arg == "static_argnames":
+            return set(str_constants(kw.value))
+    return set()
+
+
+def _params(fn) -> list[str]:
+    a = fn.args
+    names = [x.arg for x in a.posonlyargs + a.args + a.kwonlyargs]
+    return [n for n in names if n != "self"]
+
+
+def _own_statements(fn):
+    """Statements of ``fn`` excluding nested function bodies (nested
+    defs are visited as traced functions in their own right)."""
+    skip: set[int] = set()
+    for node in ast.walk(fn):
+        if node is not fn and isinstance(
+                node, (ast.FunctionDef, ast.AsyncFunctionDef)):
+            for sub in ast.walk(node):
+                skip.add(id(sub))
+            skip.discard(id(node))
+    for node in ast.walk(fn):
+        if id(node) not in skip:
+            yield node
+
+
+def _traced_name_uses(expr: ast.AST, traced_params: set[str]):
+    """Name nodes inside ``expr`` referring to traced params, skipping
+    trace-static contexts (`x is None` compares, `.shape`-style
+    attributes)."""
+    out = []
+
+    def visit(node):
+        if isinstance(node, ast.Compare) and \
+                all(isinstance(op, (ast.Is, ast.IsNot)) for op in node.ops):
+            return                                   # x is None — static
+        if isinstance(node, ast.Attribute) and node.attr in STATIC_ATTRS:
+            return                                   # x.shape — static
+        if isinstance(node, ast.Name) and node.id in traced_params:
+            out.append(node)
+        for child in ast.iter_child_nodes(node):
+            visit(child)
+
+    visit(expr)
+    return out
+
+
+def run(files: list[SourceFile], env) -> list[Finding]:
+    findings: list[Finding] = []
+    for sf in files:
+        # TRC-MUTDEF applies to every function, traced or not
+        for node in ast.walk(sf.tree):
+            if isinstance(node, (ast.FunctionDef, ast.AsyncFunctionDef)):
+                defaults = (node.args.defaults
+                            + [d for d in node.args.kw_defaults if d])
+                for d in defaults:
+                    mutable = isinstance(d, (ast.List, ast.Dict, ast.Set)) \
+                        or call_name(d) in MUTABLE_CALLS
+                    if mutable:
+                        findings.append(Finding(
+                            "TRC-MUTDEF", "warn", sf.rel, d.lineno,
+                            f"mutable default argument in "
+                            f"{node.name}() — shared across calls"))
+
+        for fn, statics in _traced_functions(sf).items():
+            tparams = set(_params(fn)) - statics
+            locals_: set[str] = set()
+            for node in _own_statements(fn):
+                if isinstance(node, (ast.Assign, ast.AugAssign,
+                                     ast.AnnAssign)):
+                    targets = (node.targets
+                               if isinstance(node, ast.Assign)
+                               else [node.target])
+                    for t in targets:
+                        for nm in ast.walk(t):
+                            if isinstance(nm, ast.Name):
+                                locals_.add(nm.id)
+                if isinstance(node, (ast.For, ast.comprehension)):
+                    tgt = node.target
+                    for nm in ast.walk(tgt):
+                        if isinstance(nm, ast.Name):
+                            locals_.add(nm.id)
+            # a reassigned param is a new (possibly still traced) value;
+            # keep params traced even when rebound — but plain locals
+            # derived from shapes are not params, which is the split we
+            # rely on for precision
+            for node in _own_statements(fn):
+                if isinstance(node, (ast.If, ast.While)):
+                    hits = _traced_name_uses(node.test, tparams)
+                    if hits:
+                        names = ", ".join(sorted({h.id for h in hits}))
+                        findings.append(Finding(
+                            "TRC-COND", "warn", sf.rel, node.lineno,
+                            f"{fn.name}(): branch on traced value(s) "
+                            f"{names} — retrace per value (or "
+                            f"ConcretizationError under jit)"))
+                if isinstance(node, ast.Call):
+                    cn = call_name(node)
+                    recv = getattr(node.func, "value", None)
+                    if cn.endswith(".item") and isinstance(recv, ast.Name) \
+                            and recv.id in tparams:
+                        findings.append(Finding(
+                            "TRC-HOST", "warn", sf.rel, node.lineno,
+                            f"{fn.name}(): .item() on traced value "
+                            f"{recv.id!r} — host sync inside a trace"))
+                    if cn.endswith(".block_until_ready"):
+                        findings.append(Finding(
+                            "TRC-HOST", "warn", sf.rel, node.lineno,
+                            f"{fn.name}(): block_until_ready() inside a "
+                            f"traced function"))
+                    if cn in HOST_CASTS and node.args and \
+                            isinstance(node.args[0], ast.Name) and \
+                            node.args[0].id in tparams:
+                        findings.append(Finding(
+                            "TRC-HOST", "warn", sf.rel, node.lineno,
+                            f"{fn.name}(): {cn}() on traced value "
+                            f"{node.args[0].id!r} — concretizes the "
+                            f"tracer"))
+                    if cn in NP_SYNCS and node.args and \
+                            isinstance(node.args[0], ast.Name) and \
+                            node.args[0].id in tparams:
+                        findings.append(Finding(
+                            "TRC-HOST", "warn", sf.rel, node.lineno,
+                            f"{fn.name}(): {cn}() on traced value "
+                            f"{node.args[0].id!r} — device->host "
+                            f"transfer inside a trace"))
+                    if cn.endswith(".format"):
+                        hits = _traced_name_uses(node, tparams)
+                        if hits:
+                            findings.append(Finding(
+                                "TRC-FSTRING", "warn", sf.rel, node.lineno,
+                                f"{fn.name}(): .format() on traced "
+                                f"value(s) — formats the tracer"))
+                    if cn == "str" and node.args and \
+                            isinstance(node.args[0], ast.Name) and \
+                            node.args[0].id in tparams:
+                        findings.append(Finding(
+                            "TRC-FSTRING", "warn", sf.rel, node.lineno,
+                            f"{fn.name}(): str() on traced value "
+                            f"{node.args[0].id!r} — formats the tracer"))
+                if isinstance(node, ast.JoinedStr):
+                    hits = []
+                    for part in node.values:
+                        if isinstance(part, ast.FormattedValue):
+                            hits += _traced_name_uses(part.value, tparams)
+                    if hits:
+                        names = ", ".join(sorted({h.id for h in hits}))
+                        findings.append(Finding(
+                            "TRC-FSTRING", "warn", sf.rel, node.lineno,
+                            f"{fn.name}(): f-string interpolates traced "
+                            f"value(s) {names} — formats the tracer"))
+                if isinstance(node, (ast.Assign, ast.AugAssign)):
+                    targets = (node.targets
+                               if isinstance(node, ast.Assign)
+                               else [node.target])
+                    for t in targets:
+                        if isinstance(t, ast.Attribute) and \
+                                t.attr not in ALLOWED_TRACE_SIDE_EFFECTS:
+                            findings.append(Finding(
+                                "TRC-CLOSURE", "warn", sf.rel, t.lineno,
+                                f"{fn.name}(): writes host attribute "
+                                f".{t.attr} inside a traced function — "
+                                f"runs at trace time only"))
+                    if isinstance(node, ast.Assign) or \
+                            isinstance(node, ast.AugAssign):
+                        pass
+            # mutating calls on closed-over names (.append on a list
+            # captured from the enclosing scope).  Only a DISCARDED
+            # result counts: `x.update(...)` as a bare statement can
+            # only be there for its side effect, while
+            # `p, s = opt.update(...)` is the pure functional-optimizer
+            # shape and must pass.
+            for stmt in _own_statements(fn):
+                if isinstance(stmt, ast.Expr) and \
+                        isinstance(stmt.value, ast.Call):
+                    node = stmt.value
+                    cn = call_name(node)
+                    recv = getattr(node.func, "value", None)
+                    if cn.split(".")[-1] in ("append", "extend", "add",
+                                             "update") and \
+                            isinstance(recv, ast.Name) and \
+                            recv.id not in locals_ and \
+                            recv.id not in tparams and \
+                            recv.id not in set(_params(fn)):
+                        findings.append(Finding(
+                            "TRC-CLOSURE", "warn", sf.rel, node.lineno,
+                            f"{fn.name}(): mutates closed-over "
+                            f"{recv.id!r} inside a traced function — "
+                            f"runs at trace time only"))
+    return findings
