@@ -9,7 +9,6 @@ import jax
 import jax.numpy as jnp
 
 from repro import optim
-from repro.core.fields import uniform_layout
 from repro.data.synthetic_ctr import SyntheticCTR
 from repro.models.recsys import fwfm
 

@@ -26,7 +26,6 @@ import time
 import numpy as np
 
 import jax
-import jax.numpy as jnp
 
 from repro.core.fields import uniform_layout
 from repro.data.synthetic_ctr import SyntheticCTR

@@ -12,9 +12,6 @@ separately — interpret timings are not hardware-representative).
 from __future__ import annotations
 
 import dataclasses
-import functools
-
-import numpy as np
 
 import jax
 import jax.numpy as jnp

@@ -18,8 +18,6 @@ Bq * base(1).)
 """
 from __future__ import annotations
 
-import numpy as np
-
 import jax
 import jax.numpy as jnp
 

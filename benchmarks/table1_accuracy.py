@@ -10,9 +10,7 @@ from __future__ import annotations
 
 import dataclasses
 
-import numpy as np
-
-from benchmarks._common import evaluate_fwfm, train_fwfm_variant, auc
+from benchmarks._common import evaluate_fwfm, train_fwfm_variant
 from repro.core.fields import uniform_layout
 from repro.core.pruning import kept_fraction, prune_matched
 from repro.data.synthetic_ctr import SyntheticCTR

@@ -13,7 +13,7 @@ import dataclasses
 
 import numpy as np
 
-from benchmarks._common import auc, evaluate_fwfm, logloss, train_fwfm_variant
+from benchmarks._common import auc, evaluate_fwfm, train_fwfm_variant
 from repro.core.fields import uniform_layout
 from repro.data.synthetic_ctr import SyntheticCTR
 from repro.models.recsys import fwfm

@@ -76,7 +76,6 @@ def collective_bytes(hlo_text: str) -> dict:
 
 def run_cell(arch: str, shape: str, mesh_name: str, force: bool = False,
              opts: dict | None = None, tag: str = "") -> dict:
-    import jax
     from repro.launch import steps
     from repro.launch.mesh import make_production_mesh
 

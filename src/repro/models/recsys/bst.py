@@ -25,7 +25,6 @@ from repro.models.layers import (
     apply_layer_norm,
     apply_mha,
     apply_mlp,
-    glorot,
     init_layer_norm,
     init_mha,
     init_mlp,

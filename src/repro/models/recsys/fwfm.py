@@ -230,8 +230,6 @@ def rank_items_mp(params: dict, cfg: FwFMConfig, query: dict, *,
     sharding over the DP axes).  Requires a one-hot layout (multiplicity 1
     for every field).
     """
-    import numpy as np
-    from functools import partial
     from jax.sharding import PartitionSpec as P
 
     assert cfg.interaction == "dplr"

@@ -23,8 +23,7 @@ import jax
 import jax.numpy as jnp
 
 from repro.core.fields import FeatureLayout
-from repro.embedding.bag import (init_embedding_table, lookup_field_embeddings,
-                                padded_rows)
+from repro.embedding.bag import init_embedding_table, padded_rows
 from repro.models.layers import glorot
 
 

@@ -173,8 +173,7 @@ import numpy as np
 
 from repro.serving.corpus import next_pow2
 from repro.serving.errors import (Degraded, DeadlineExceeded, DispatchFailed,
-                                  FrontendError, Overloaded, ServingError,
-                                  Unservable)
+                                  Overloaded, ServingError, Unservable)
 
 
 class PendingQuery:
@@ -658,7 +657,7 @@ class QueryFrontend:
             n = 0
             while True:
                 lane = self._pick(
-                    lambda l: len(l.heap) >= self.max_batch)
+                    lambda ln: len(ln.heap) >= self.max_batch)
                 if lane is None:
                     break
                 self._dispatch(lane, self._take(lane, self.max_batch), now)
@@ -679,7 +678,7 @@ class QueryFrontend:
             now = self.clock()
             n = 0
             while True:
-                lane = self._pick(lambda l: len(l.heap) > 0)
+                lane = self._pick(lambda ln: len(ln.heap) > 0)
                 if lane is None:
                     break
                 self._dispatch(

@@ -1,7 +1,6 @@
 """The paper's mathematical core: Identity 1, Proposition 1, and the
 equivalences between all interaction implementations."""
 import numpy as np
-import pytest
 from _hypothesis_compat import given, settings, st
 
 import jax

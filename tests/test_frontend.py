@@ -12,7 +12,6 @@ import numpy as np
 import pytest
 
 import jax
-import jax.numpy as jnp
 
 from repro.core.fields import uniform_layout
 from repro.data.synthetic_ctr import SyntheticCTR

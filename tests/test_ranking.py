@@ -8,9 +8,9 @@ import jax.numpy as jnp
 
 from repro.configs import REGISTRY
 from repro.core import ranking as rk
-from repro.core.dplr import init_dplr, materialize_R, DPLRParams
+from repro.core.dplr import init_dplr
 from repro.core.fields import uniform_layout
-from repro.core.interactions import dplr_pairwise, fwfm_pairwise
+from repro.core.interactions import dplr_pairwise
 from repro.core.pruning import prune_matched
 from repro.models.recsys import autoint, bst, fwfm, mind, wide_deep
 

@@ -1,7 +1,6 @@
 """Substrate tests: embedding bag, sharded lookup, optimizers, schedules,
 gradient accumulation, int8 compression, data pipeline."""
 import numpy as np
-import pytest
 from _hypothesis_compat import given, settings, st
 
 import jax
@@ -11,8 +10,7 @@ from jax.sharding import PartitionSpec as P
 from repro.core.fields import FeatureLayout, FieldSpec, uniform_layout
 from repro.data.pipeline import ShardedPipeline, host_shard_seed
 from repro.data.synthetic_ctr import SyntheticCTR
-from repro.embedding.bag import (embedding_bag, lookup_field_embeddings,
-                                 lookup_linear_terms, padded_rows)
+from repro.embedding.bag import lookup_field_embeddings, padded_rows
 from repro.embedding.sharded import make_sharded_take
 from repro import optim
 from repro.sharding import shard_map

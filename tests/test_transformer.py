@@ -1,9 +1,6 @@
 """Transformer substrate behaviour: decode/forward consistency, chunked CE,
 MoE dispatch equivalence, windowed attention, pattern scan."""
-import dataclasses
-
 import numpy as np
-import pytest
 
 import jax
 import jax.numpy as jnp
