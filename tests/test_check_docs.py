@@ -1,0 +1,125 @@
+"""tools/check_docs.py behaviour: the link checker and the benchmark-
+registry drift check against known-bad temp-dir repos, plus the
+quickstart/bash-block parsing rules the CI docs job relies on."""
+import importlib.util
+import textwrap
+from pathlib import Path
+
+import pytest
+
+REPO = Path(__file__).resolve().parents[1]
+
+
+@pytest.fixture()
+def cd():
+    """A fresh check_docs module instance (its REPO constant is
+    monkeypatched per-test to point at a synthetic repo)."""
+    spec = importlib.util.spec_from_file_location(
+        "check_docs_under_test", REPO / "tools" / "check_docs.py")
+    mod = importlib.util.module_from_spec(spec)
+    spec.loader.exec_module(mod)
+    return mod
+
+
+def _mini_repo(tmp_path: Path, readme: str, docs: dict | None = None,
+               registry: str | None = None) -> Path:
+    (tmp_path / "README.md").write_text(textwrap.dedent(readme))
+    for rel, text in (docs or {}).items():
+        p = tmp_path / rel
+        p.parent.mkdir(parents=True, exist_ok=True)
+        p.write_text(textwrap.dedent(text))
+    if registry is not None:
+        (tmp_path / "benchmarks").mkdir(exist_ok=True)
+        (tmp_path / "benchmarks" / "registry.py").write_text(
+            textwrap.dedent(registry))
+    return tmp_path
+
+
+# -- link checker -----------------------------------------------------------
+
+def test_broken_file_link_detected(cd, tmp_path, monkeypatch):
+    _mini_repo(tmp_path, "see [the missing page](missing.md)\n")
+    monkeypatch.setattr(cd, "REPO", str(tmp_path))
+    assert cd.check_links() == 1
+
+
+def test_resolving_links_and_anchors_pass(cd, tmp_path, monkeypatch):
+    _mini_repo(
+        tmp_path,
+        """\
+        # Title
+
+        ## Quick Start
+
+        jump [up](#quick-start), read [docs](docs/extra.md).
+        """,
+        docs={"docs/extra.md": "# Extra\n"})
+    monkeypatch.setattr(cd, "REPO", str(tmp_path))
+    assert cd.check_links() == 0
+
+
+def test_broken_anchor_detected(cd, tmp_path, monkeypatch):
+    _mini_repo(tmp_path, "# Title\n\njump [nowhere](#no-such-heading)\n")
+    monkeypatch.setattr(cd, "REPO", str(tmp_path))
+    assert cd.check_links() == 1
+
+
+def test_links_inside_code_fences_ignored(cd, tmp_path, monkeypatch):
+    _mini_repo(tmp_path,
+               "# Title\n\n```text\n[not a link](nothing.md)\n```\n")
+    monkeypatch.setattr(cd, "REPO", str(tmp_path))
+    assert cd.check_links() == 0
+
+
+# -- benchmark-registry drift ----------------------------------------------
+
+REGISTRY = """\
+BENCHMARKS = {
+    "alpha": ("benchmarks.alpha", "measures the alpha latency curve"),
+    "beta": ("benchmarks.beta", "sweeps the beta corpus sizes"),
+}
+"""
+
+
+def test_stale_registry_row_detected(cd, tmp_path, monkeypatch):
+    _mini_repo(
+        tmp_path, "# R\n", registry=REGISTRY,
+        docs={"docs/benchmarks.md":
+              "# Benchmarks\n\nmeasures the alpha latency curve\n"})
+    monkeypatch.setattr(cd, "REPO", str(tmp_path))
+    assert cd.check_benchmarks() == 1        # beta's row is undocumented
+
+
+def test_registry_rows_match_modulo_wrapping(cd, tmp_path, monkeypatch):
+    _mini_repo(
+        tmp_path, "# R\n", registry=REGISTRY,
+        docs={"docs/benchmarks.md":
+              "# Benchmarks\n\nmeasures the alpha\nlatency curve\n\n"
+              "sweeps the beta\n   corpus sizes\n"})
+    monkeypatch.setattr(cd, "REPO", str(tmp_path))
+    assert cd.check_benchmarks() == 0        # wrapped lines still match
+
+
+def test_missing_benchmarks_doc_fails(cd, tmp_path, monkeypatch):
+    _mini_repo(tmp_path, "# R\n", registry=REGISTRY)
+    monkeypatch.setattr(cd, "REPO", str(tmp_path))
+    assert cd.check_benchmarks() == 1
+
+
+# -- quickstart / bash-block parsing ----------------------------------------
+
+def test_bash_block_parsing_rules(cd):
+    block = ("# a comment\n"
+             "echo one \\\n"
+             "  --flag two\n"
+             "\n"
+             "echo three\n")
+    assert cd._bash_commands(block) == ["echo one    --flag two",
+                                        "echo three"]
+
+
+def test_real_quickstart_includes_lint_one_liner(cd):
+    cmds = cd.quickstart_commands()
+    assert cmds, "README Quickstart must contain runnable commands"
+    assert any("tools/analyze/run.py" in c for c in cmds), \
+        "README Quickstart must carry the analyze lint one-liner"
