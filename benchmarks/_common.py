@@ -1,4 +1,11 @@
-"""Shared benchmark utilities: metrics, a compact trainer, timing."""
+"""Shared benchmark utilities: a compact trainer and timing helpers.
+
+Quality measurement lives in ``repro.eval`` (jitted oracle-checked
+metrics in ``eval.metrics``, the split evaluator in ``eval.harness``) —
+the ad-hoc ``auc``/``logloss``/``evaluate_fwfm`` trio that used to sit
+here was deduplicated into that subsystem, which also fixed its silent
+dtype promotion (see ``harness.score_split``).
+"""
 from __future__ import annotations
 
 import time
@@ -11,36 +18,6 @@ import jax.numpy as jnp
 from repro import optim
 from repro.data.synthetic_ctr import SyntheticCTR
 from repro.models.recsys import fwfm
-
-
-def auc(labels: np.ndarray, scores: np.ndarray) -> float:
-    """Rank-based AUC (ties handled by average rank)."""
-    labels = np.asarray(labels)
-    order = np.argsort(scores, kind="mergesort")
-    ranks = np.empty_like(order, dtype=np.float64)
-    ranks[order] = np.arange(1, len(scores) + 1)
-    # average ranks for ties
-    s_sorted = np.asarray(scores)[order]
-    i = 0
-    while i < len(s_sorted):
-        j = i
-        while j + 1 < len(s_sorted) and s_sorted[j + 1] == s_sorted[i]:
-            j += 1
-        if j > i:
-            ranks[order[i:j + 1]] = ranks[order[i:j + 1]].mean()
-        i = j + 1
-    n_pos = labels.sum()
-    n_neg = len(labels) - n_pos
-    if n_pos == 0 or n_neg == 0:
-        return 0.5
-    return float((ranks[labels > 0].sum() - n_pos * (n_pos + 1) / 2)
-                 / (n_pos * n_neg))
-
-
-def logloss(labels: np.ndarray, logits: np.ndarray) -> float:
-    z = np.asarray(logits, np.float64)
-    y = np.asarray(labels, np.float64)
-    return float(np.mean(np.maximum(z, 0) - z * y + np.log1p(np.exp(-np.abs(z)))))
 
 
 def train_fwfm_variant(cfg, data: SyntheticCTR, steps: int = 400,
@@ -60,15 +37,6 @@ def train_fwfm_variant(cfg, data: SyntheticCTR, steps: int = 400,
         b = {k: jnp.asarray(v) for k, v in data.batch(batch, s).items()}
         params, state, _ = step_fn(params, state, b)
     return params
-
-
-def evaluate_fwfm(params, cfg, data: SyntheticCTR, pruned_mask=None,
-                  n: int = 20000, seed: int = 10**6):
-    b = data.batch(n, seed)
-    logits = np.asarray(fwfm.apply(
-        params, cfg, {k: jnp.asarray(v) for k, v in b.items()},
-        pruned_mask=pruned_mask))
-    return auc(b["label"], logits), logloss(b["label"], logits)
 
 
 def time_stream(fn, reps: int) -> float:

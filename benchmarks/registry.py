@@ -80,6 +80,14 @@ BENCHMARKS: dict[str, tuple[str, str]] = {
         "back within 2x quiet baseline after faults clear, zero "
         "retraces from any recovery path",
     ),
+    "quality_tradeoff": (
+        "benchmarks.quality_tradeoff",
+        "Rank-vs-pruning quality gate: DPLR AUC beats matched-parameter "
+        "pruning at the aggressive-budget end of the sweep, the curves "
+        "converge at the generous end, every jitted metric matches its "
+        "numpy oracle to 1e-6, and serving-path eval is bit-exact vs "
+        "the training graph with zero retraces",
+    ),
 }
 
 

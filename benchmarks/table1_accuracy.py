@@ -10,10 +10,11 @@ from __future__ import annotations
 
 import dataclasses
 
-from benchmarks._common import evaluate_fwfm, train_fwfm_variant
+from benchmarks._common import train_fwfm_variant
 from repro.core.fields import uniform_layout
 from repro.core.pruning import kept_fraction, prune_matched
 from repro.data.synthetic_ctr import SyntheticCTR
+from repro.eval.harness import evaluate_pointwise
 from repro.models.recsys import fwfm
 
 
@@ -31,28 +32,29 @@ def run(quick: bool = False):
     rows = []
     base_cfg = fwfm.FwFMConfig(layout=layout, embed_dim=k, interaction="fm")
     fm_params = train_fwfm_variant(base_cfg, data, steps=steps)
-    fm_auc, fm_ll = evaluate_fwfm(fm_params, base_cfg, data)
+    fm = evaluate_pointwise(fm_params, base_cfg, data)
 
     fwfm_cfg = dataclasses.replace(base_cfg, interaction="fwfm")
     fwfm_params = train_fwfm_variant(fwfm_cfg, data, steps=steps)
-    fwfm_auc, fwfm_ll = evaluate_fwfm(fwfm_params, fwfm_cfg, data)
+    fw = evaluate_pointwise(fwfm_params, fwfm_cfg, data)
     R = fwfm.field_matrix(fwfm_params, fwfm_cfg)
 
     for rank in ranks:
         dplr_cfg = dataclasses.replace(base_cfg, interaction="dplr", rank=rank)
         dplr_params = train_fwfm_variant(dplr_cfg, data, steps=steps)
-        d_auc, d_ll = evaluate_fwfm(dplr_params, dplr_cfg, data)
+        d = evaluate_pointwise(dplr_params, dplr_cfg, data)
         pruned = prune_matched(R, m, rank)
-        p_auc, p_ll = evaluate_fwfm(fwfm_params, fwfm_cfg, data,
-                                    pruned_mask=pruned.mask)
+        p = evaluate_pointwise(fwfm_params, fwfm_cfg, data,
+                               pruned_mask=pruned.mask)
         rows.append({
             "rank": rank,
             "pruned_pct": 100 * kept_fraction(m, rank),
-            "fm_auc": fm_auc, "fwfm_auc": fwfm_auc,
-            "dplr_auc": d_auc, "pruned_auc": p_auc,
-            "dplr_vs_pruned_auc_pct": 100 * (d_auc - p_auc) / max(p_auc, 1e-9),
-            "fm_ll": fm_ll, "fwfm_ll": fwfm_ll,
-            "dplr_ll": d_ll, "pruned_ll": p_ll,
+            "fm_auc": fm["auc"], "fwfm_auc": fw["auc"],
+            "dplr_auc": d["auc"], "pruned_auc": p["auc"],
+            "dplr_vs_pruned_auc_pct":
+                100 * (d["auc"] - p["auc"]) / max(p["auc"], 1e-9),
+            "fm_ll": fm["logloss"], "fwfm_ll": fw["logloss"],
+            "dplr_ll": d["logloss"], "pruned_ll": p["logloss"],
         })
     return rows
 

@@ -13,9 +13,10 @@ import dataclasses
 
 import numpy as np
 
-from benchmarks._common import auc, evaluate_fwfm, train_fwfm_variant
+from benchmarks._common import train_fwfm_variant
 from repro.core.fields import uniform_layout
 from repro.data.synthetic_ctr import SyntheticCTR
+from repro.eval.harness import evaluate_pointwise
 from repro.models.recsys import fwfm
 
 
@@ -32,13 +33,15 @@ def run(quick: bool = False):
         data = SyntheticCTR(layout, embed_dim=4, teacher_rank=2,
                             noise_scale=0.3, seed=100 + t)
         pf = train_fwfm_variant(base, data, steps=steps, seed=t)
-        f_auc, f_ll = evaluate_fwfm(pf, base, data, seed=10**6 + t)
+        f = evaluate_pointwise(pf, base, data, seed=10**6 + t)
         for r in ranks:
             cfg = dataclasses.replace(base, interaction="dplr", rank=r)
             pd = train_fwfm_variant(cfg, data, steps=steps, seed=t)
-            d_auc, d_ll = evaluate_fwfm(pd, cfg, data, seed=10**6 + t)
-            lifts[r]["auc"].append(100 * (d_auc - f_auc) / f_auc)
-            lifts[r]["ll"].append(100 * (f_ll - d_ll) / f_ll)
+            d = evaluate_pointwise(pd, cfg, data, seed=10**6 + t)
+            lifts[r]["auc"].append(
+                100 * (d["auc"] - f["auc"]) / f["auc"])
+            lifts[r]["ll"].append(
+                100 * (f["logloss"] - d["logloss"]) / f["logloss"])
     return {r: {kk: float(np.mean(v)) for kk, v in d.items()}
             for r, d in lifts.items()}
 

@@ -1,0 +1,13 @@
+"""Ranking-quality evaluation: jitted metrics + numpy oracles + harness.
+
+Three modules, one contract (docs/quality.md):
+
+* ``metrics``  — jitted, batch-streaming metric implementations and the
+  ``MetricAccumulator`` that folds per-batch partials.
+* ``ref``      — pure-numpy float64 oracles, one per jitted entry point,
+  declared in ``ref.ORACLES`` (the same convention as ``kernels/ref.py``,
+  and statically enforced by ``tools/analyze`` MET-ORACLE/MET-TEST).
+* ``harness``  — offline evaluation of any model variant on held-out
+  ``SyntheticCTR`` splits, through the training graph AND the serving
+  graph, with parity between the two asserted rather than assumed.
+"""

@@ -1,0 +1,295 @@
+"""Offline ranking-quality harness: one quality code path for the
+training graph AND the serving graph.
+
+Two workloads, mirroring the two scoring entry points of the model
+(``fwfm.apply`` pointwise, ``fwfm.rank_items``/serving per-query):
+
+* **Pointwise** — held-out ``SyntheticCTR`` rows scored through the
+  training graph; ``evaluate_pointwise`` reports exact AUC / log-loss /
+  calibration (``evaluate_streaming`` is the bounded-memory variant via
+  ``MetricAccumulator``).  This is the single replacement for the old
+  ``benchmarks/_common.evaluate_fwfm`` — and it fixes that function's
+  silent dtype promotion: inputs are validated and cast ONCE here
+  (ids -> int32, weights -> ``cfg.dtype``, labels checked binary), so a
+  bf16 model no longer gets f32 weights quietly promoting every
+  activation downstream.
+
+* **Ranking** — a fixed candidate corpus and Q query contexts with
+  teacher-derived relevance (``ranking_eval_set``), scored three ways:
+  ``path="model"`` (the training graph's Algorithm 1),
+  ``path="engine"`` (``CorpusRankingEngine.score``), and
+  ``path="frontend"`` (coalesced ``QueryFrontend`` top-K).
+  ``serving_parity`` runs all paths on identical queries and reports
+  per-path metrics, max score divergence, and bitwise equality — the
+  contract is bit-exact parity on the jnp backend (asserted with ZERO
+  scorer retraces via ``serving.sanitize.assert_no_retrace``) and
+  tolerance-bounded parity for Pallas/bf16 backends.
+
+Relevance labels are deterministic functions of the generator's teacher:
+graded relevance is the teacher CTR ``sigmoid(phi*(x)/T)``; binary
+relevance marks the items above the per-query median teacher logit
+(exactly n/2 positives per query — never degenerate).
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import numpy as np
+
+import jax
+import jax.numpy as jnp
+
+from repro.data.synthetic_ctr import SyntheticCTR
+from repro.eval import metrics as M
+from repro.models.recsys import fwfm
+from repro.serving.engine import CorpusRankingEngine
+from repro.serving.frontend import QueryFrontend
+from repro.serving.sanitize import assert_no_retrace
+
+
+# -- input validation (the dtype-promotion fix) ------------------------------
+
+def _validate_labels(labels: np.ndarray) -> np.ndarray:
+    y = np.asarray(labels)
+    bad = ~((y == 0) | (y == 1))
+    if bad.any():
+        raise ValueError(
+            f"labels must be binary 0/1; found {y[bad].ravel()[:5]}")
+    return y.astype(np.int32)
+
+
+# -- pointwise evaluation ----------------------------------------------------
+
+def score_split(params, cfg, data: SyntheticCTR, *, n: int = 20000,
+                seed: int = 10**6, batch_size: int = 4096,
+                pruned_mask=None) -> tuple[np.ndarray, np.ndarray]:
+    """(labels int32 (n,), logits f32 (n,)) for the held-out split.
+
+    The split is the deterministic ``data.batch(n, seed)`` draw (same
+    rows the previous ad-hoc evaluator used); scoring streams through
+    ``fwfm.apply`` in fixed-shape chunks — the tail is padded, so the
+    whole split costs ONE trace regardless of n."""
+    b = data.batch(n, seed)
+    labels = _validate_labels(b["label"])
+
+    @jax.jit
+    def _apply(ids, w):
+        return fwfm.apply(params, cfg, {"ids": ids, "weights": w},
+                          pruned_mask=pruned_mask)
+
+    raw_ids = np.asarray(b["ids"], np.int32)
+    raw_w = np.asarray(b["weights"], np.float32)
+    chunk = min(batch_size, n) if n else batch_size
+    pad = (-n) % chunk
+    ids = np.concatenate(
+        [raw_ids, np.zeros((pad,) + raw_ids.shape[1:], np.int32)])
+    w = np.concatenate(
+        [raw_w, np.ones((pad,) + raw_w.shape[1:], np.float32)])
+    outs = []
+    for i in range(0, n + pad, chunk):
+        outs.append(np.asarray(
+            _apply(jnp.asarray(ids[i:i + chunk]),
+                   jnp.asarray(w[i:i + chunk], cfg.dtype)),
+            np.float32))
+    logits = np.concatenate(outs)[:n] if outs else np.zeros(0, np.float32)
+    return labels, logits
+
+
+def evaluate_pointwise(params, cfg, data: SyntheticCTR, *, n: int = 20000,
+                       seed: int = 10**6, batch_size: int = 4096,
+                       pruned_mask=None) -> dict:
+    """Exact pointwise metrics on the held-out split (jitted metrics,
+    oracle-checked by tests): {n, auc, logloss, calibration_ratio}."""
+    labels, logits = score_split(params, cfg, data, n=n, seed=seed,
+                                 batch_size=batch_size,
+                                 pruned_mask=pruned_mask)
+    y, z = jnp.asarray(labels), jnp.asarray(logits)
+    return {
+        "n": int(n),
+        "auc": float(M.auc(y, z)),
+        "logloss": float(M.logloss(y, z)),
+        "calibration_ratio": float(M.calibration_ratio(y, z)),
+    }
+
+
+def evaluate_streaming(params, cfg, data: SyntheticCTR, *, n: int = 20000,
+                       seed: int = 10**6, batch_size: int = 4096,
+                       pruned_mask=None, n_bins: int = M.DEFAULT_BINS) -> dict:
+    """Bounded-memory pointwise evaluation: per-chunk partials folded by
+    ``MetricAccumulator`` (AUC is the order-invariant binned stream)."""
+    labels, logits = score_split(params, cfg, data, n=n, seed=seed,
+                                 batch_size=batch_size,
+                                 pruned_mask=pruned_mask)
+    acc = M.MetricAccumulator(n_bins=n_bins)
+    for i in range(0, n, batch_size):
+        acc.update(labels[i:i + batch_size], logits[i:i + batch_size])
+    return acc.result()
+
+
+# -- ranking evaluation (training graph vs serving graph) --------------------
+
+@dataclasses.dataclass(frozen=True)
+class RankingEvalSet:
+    """Q query contexts against one fixed n-item candidate corpus, with
+    deterministic teacher relevance (graded + per-query-median binary)."""
+    context_ids: np.ndarray       # (Q, n_ctx_slots) int32
+    context_weights: np.ndarray   # (Q, n_ctx_slots) f32
+    item_ids: np.ndarray          # (n, n_item_slots) int32
+    item_weights: np.ndarray      # (n, n_item_slots) f32
+    rel: np.ndarray               # (Q, n) f32 graded (teacher CTR)
+    rel01: np.ndarray             # (Q, n) f32 binary (above-median logit)
+
+    @property
+    def n_queries(self) -> int:
+        return self.context_ids.shape[0]
+
+    @property
+    def n_items(self) -> int:
+        return self.item_ids.shape[0]
+
+    def query(self) -> dict:
+        """The (Q, n) batched query dict ``fwfm.rank_items`` consumes."""
+        Q, n = self.n_queries, self.n_items
+        return {
+            "context_ids": self.context_ids,
+            "context_weights": self.context_weights,
+            "item_ids": np.broadcast_to(self.item_ids[None],
+                                        (Q, n) + self.item_ids.shape[1:]),
+            "item_weights": np.broadcast_to(
+                self.item_weights[None],
+                (Q, n) + self.item_weights.shape[1:]),
+        }
+
+
+def ranking_eval_set(data: SyntheticCTR, *, n_queries: int = 8,
+                     n_items: int = 64, seed: int = 0) -> RankingEvalSet:
+    """Build the held-out ranking workload from the generator's teacher."""
+    rq = data.ranking_query(n_items, seed)
+    item_ids = np.asarray(rq["item_ids"][0], np.int32)        # (n, mI)
+    item_w = np.asarray(rq["item_weights"][0], np.float32)
+    ctxs = [data.context_query(seed + 1 + i) for i in range(n_queries)]
+    ctx_ids = np.concatenate([c["context_ids"] for c in ctxs]).astype(np.int32)
+    ctx_w = np.concatenate([c["context_weights"] for c in ctxs])
+
+    # teacher logits for every (context, item) pair: assemble full rows
+    # in layout slot order (context slots first — same precondition as
+    # fwfm.rank_items)
+    Q, n = n_queries, n_items
+    full_ids = np.concatenate(
+        [np.broadcast_to(ctx_ids[:, None], (Q, n, ctx_ids.shape[1])),
+         np.broadcast_to(item_ids[None], (Q, n, item_ids.shape[1]))],
+        axis=-1).reshape(Q * n, -1)
+    full_w = np.ones_like(full_ids, np.float32)
+    z = (data.logits(full_ids, full_w) / data.temperature).reshape(Q, n)
+    rel = (1.0 / (1.0 + np.exp(-z))).astype(np.float32)
+    med = np.median(z, axis=-1, keepdims=True)
+    rel01 = (z > med).astype(np.float32)
+    return RankingEvalSet(ctx_ids, ctx_w, item_ids, item_w, rel, rel01)
+
+
+def model_scores(params, cfg, eval_set: RankingEvalSet,
+                 pruned=None) -> np.ndarray:
+    """(Q, n) f32 scores through the training graph (Algorithm 1)."""
+    q = eval_set.query()
+
+    @jax.jit
+    def _rank(cids, cw, iids, iw):
+        return fwfm.rank_items(params, cfg,
+                               {"context_ids": cids, "context_weights": cw,
+                                "item_ids": iids, "item_weights": iw},
+                               pruned=pruned)
+
+    return np.asarray(_rank(
+        jnp.asarray(q["context_ids"]),
+        jnp.asarray(q["context_weights"], cfg.dtype),
+        jnp.asarray(q["item_ids"]),
+        jnp.asarray(q["item_weights"], cfg.dtype)), np.float32)
+
+
+def engine_scores(engine, eval_set: RankingEvalSet) -> np.ndarray:
+    """(Q, n) f32 scores through the corpus engine (slots are insertion-
+    ordered, so the leading n slab columns ARE the eval-set items)."""
+    out = engine.score(eval_set.context_ids, eval_set.context_weights)
+    return np.asarray(out, np.float32)[:, :eval_set.n_items]
+
+
+def frontend_scores(frontend, eval_set: RankingEvalSet) -> np.ndarray:
+    """(Q, n) f32 scores reassembled from full-depth frontend top-K
+    replies (k = n, so every slot's score comes back exactly once)."""
+    n = eval_set.n_items
+    pending = [frontend.submit(eval_set.context_ids[i],
+                               eval_set.context_weights[i], k=n)
+               for i in range(eval_set.n_queries)]
+    out = np.zeros((eval_set.n_queries, n), np.float32)
+    for i, p in enumerate(pending):
+        scores, slots = p.result()
+        out[i, np.asarray(slots)] = np.asarray(scores, np.float32)
+    return out
+
+
+def ranking_metrics(scores: np.ndarray, eval_set: RankingEvalSet, *,
+                    k: int = 10) -> dict:
+    """Ranking metrics of a (Q, n) score matrix against the eval set:
+    graded nDCG, binary precision/recall/MRR (jitted, oracle-checked)."""
+    s = jnp.asarray(scores, jnp.float32)
+    rel = jnp.asarray(eval_set.rel)
+    rel01 = jnp.asarray(eval_set.rel01)
+    return {
+        f"ndcg@{k}": float(M.ndcg_at_k(rel, s, k=k)),
+        f"precision@{k}": float(M.precision_at_k(rel01, s, k=k)),
+        f"recall@{k}": float(M.recall_at_k(rel01, s, k=k)),
+        "mrr": float(M.mrr(rel01, s)),
+    }
+
+
+def serving_parity(params, cfg, eval_set: RankingEvalSet, *, k: int = 10,
+                   mesh=None, use_pallas_kernel: bool = False,
+                   block_n: int | None = None,
+                   use_frontend: bool = True, max_batch: int = 8) -> dict:
+    """Score the eval set through every serving path and report parity.
+
+    Returns per-path metrics plus score-level divergence:
+        paths           {"model": metrics, "engine": metrics, ...}
+        max_abs_diff    {"engine": float, "frontend": float}  (vs model)
+        bit_exact       {"engine": bool, "frontend": bool}
+        retraces        scorer traces during the measured scoring pass
+                        (the pass runs under ``assert_no_retrace``, so a
+                        nonzero value raises before this returns)
+
+    The engine/frontend shapes are warmed first, so the measured pass
+    asserts the zero-retrace invariant of the serving stack rather than
+    first-call compilation."""
+    n = eval_set.n_items
+    kw = {} if block_n is None else {"block_n": block_n}
+    engine = CorpusRankingEngine(cfg, eval_set.item_ids,
+                                 eval_set.item_weights, mesh=mesh,
+                                 use_pallas_kernel=use_pallas_kernel, **kw)
+    engine.refresh(params)
+    frontend = None
+    if use_frontend:
+        frontend = QueryFrontend(engine, max_batch=max_batch, max_k=n,
+                                 max_wait=1e9, auto_pump=False)
+        frontend.warmup(eval_set.context_ids[0], eval_set.context_weights[0])
+    engine.score(eval_set.context_ids, eval_set.context_weights)  # warm Bq=Q
+
+    m = model_scores(params, cfg, eval_set)
+    before = engine.trace_count
+    with assert_no_retrace(engine, label="serving-path eval"):
+        e = engine_scores(engine, eval_set)
+        f = frontend_scores(frontend, eval_set) if use_frontend else None
+    retraces = engine.trace_count - before
+    if frontend is not None:
+        frontend.close()
+
+    report = {
+        "paths": {"model": ranking_metrics(m, eval_set, k=k),
+                  "engine": ranking_metrics(e, eval_set, k=k)},
+        "max_abs_diff": {"engine": float(np.abs(m - e).max())},
+        "bit_exact": {"engine": bool(np.array_equal(m, e))},
+        "retraces": retraces,
+    }
+    if f is not None:
+        report["paths"]["frontend"] = ranking_metrics(f, eval_set, k=k)
+        report["max_abs_diff"]["frontend"] = float(np.abs(m - f).max())
+        report["bit_exact"]["frontend"] = bool(np.array_equal(m, f))
+    return report

@@ -12,6 +12,7 @@ sys.path.insert(0, str(REPO / "tools" / "analyze"))
 
 import core                                              # noqa: E402
 import error_taxonomy                                    # noqa: E402
+import kernel_contract                                   # noqa: E402
 
 
 def _run(*args):
@@ -28,7 +29,7 @@ def test_repo_tree_is_clean_at_fail_on_warn():
 def test_selftest_every_pack_fires():
     r = _run("--selftest")
     assert r.returncode == 0, r.stdout + r.stderr
-    assert "4/4 packs ok" in r.stdout
+    assert "5/5 packs ok" in r.stdout
 
 
 def test_json_format_shape():
@@ -37,6 +38,33 @@ def test_json_format_shape():
     assert set(payload) == {"findings", "active", "suppressed"}
     assert payload["active"] == len(
         [f for f in payload["findings"] if not f["suppressed"]])
+
+
+def test_met_rules_fire_and_clear(tmp_path):
+    src = ("import functools\n\nimport jax\n\n\n"
+           "@jax.jit\n"
+           "def covered_metric(labels, scores):\n"
+           "    return labels\n\n\n"
+           "@functools.partial(jax.jit, static_argnames=('k',))\n"
+           "def covered_cutoff(rels, scores, *, k):\n"
+           "    return rels\n")
+    good = tmp_path / "metrics.py"
+    good.write_text(src)
+    sf = core.SourceFile(good, tmp_path)
+    env_ok = core.Env(
+        repo=tmp_path,
+        eval_oracle_keys=frozenset({"covered_metric", "covered_cutoff"}),
+        tests_text="parity sweep of covered_metric and covered_cutoff")
+    assert kernel_contract.run([sf], env_ok) == []
+    # no oracle row, no test mention: both rules fire per entry point
+    rules = sorted(f.rule for f in kernel_contract.run(
+        [sf], core.Env(repo=tmp_path)))
+    assert rules == ["MET-ORACLE", "MET-ORACLE", "MET-TEST", "MET-TEST"]
+    # the MET contract is scoped to metrics modules by name
+    other = tmp_path / "other.py"
+    other.write_text(src)
+    assert kernel_contract.run([core.SourceFile(other, tmp_path)],
+                               core.Env(repo=tmp_path)) == []
 
 
 def test_suppression_marks_but_never_drops(tmp_path):

@@ -1,0 +1,163 @@
+"""The eval harness's core contract: the SAME quality numbers whichever
+graph scored the items.  Covers ``score_split`` (one-trace chunked
+scoring, label validation, the bf16 dtype-promotion fix),
+``evaluate_pointwise`` vs ``evaluate_streaming``, the deterministic
+``ranking_eval_set`` construction, and ``serving_parity`` across the
+training graph / ``CorpusRankingEngine`` / ``QueryFrontend`` paths —
+bit-exact with ZERO scorer retraces on the jnp backend, tolerance-bounded
+on the Pallas kernel backend, and bit-exact again on a sharded mesh."""
+import numpy as np
+import pytest
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.fields import uniform_layout
+from repro.data.synthetic_ctr import SyntheticCTR
+from repro.eval import harness
+from repro.launch.mesh import make_host_mesh
+from repro.models.recsys import fwfm
+
+
+def _setup(nC=5, nI=4, vocab=50, k=8, rho=2, seed=0):
+    layout = uniform_layout(nC, nI, vocab)
+    cfg = fwfm.FwFMConfig(layout=layout, embed_dim=k, interaction="dplr",
+                          rank=rho)
+    params = fwfm.init(jax.random.PRNGKey(seed), cfg)
+    data = SyntheticCTR(layout, embed_dim=4, seed=seed)
+    return cfg, params, data
+
+
+# ---------------------------------------------------------------------------
+# score_split + pointwise evaluation
+# ---------------------------------------------------------------------------
+
+def test_score_split_matches_whole_batch_apply():
+    cfg, params, data = _setup()
+    n = 500                              # 500 = 3*128 + 116: pads the tail
+    labels, logits = harness.score_split(params, cfg, data, n=n,
+                                         batch_size=128)
+    assert labels.shape == logits.shape == (n,)
+    assert labels.dtype == np.int32 and logits.dtype == np.float32
+    b = data.batch(n, 10**6)
+    np.testing.assert_array_equal(labels, np.asarray(b["label"], np.int32))
+    want = fwfm.apply(params, cfg, {"ids": jnp.asarray(b["ids"]),
+                                    "weights": jnp.asarray(b["weights"])})
+    np.testing.assert_allclose(logits, np.asarray(want, np.float32),
+                               atol=1e-6)
+
+
+def test_score_split_rejects_non_binary_labels():
+    cfg, params, data = _setup()
+
+    class _Corrupted:
+        def batch(self, n, seed):
+            b = dict(data.batch(n, seed))
+            b["label"] = np.asarray(b["label"], np.float64) + 0.5
+            return b
+
+    with pytest.raises(ValueError, match="binary"):
+        harness.score_split(params, cfg, _Corrupted(), n=64)
+
+
+def test_score_split_bf16_weights_not_promoted():
+    """The fix for _common.evaluate_fwfm's silent promotion: a bf16 model
+    must see bf16 weights, bit-identically to casting them by hand."""
+    layout = uniform_layout(5, 4, 50)
+    cfg = fwfm.FwFMConfig(layout=layout, embed_dim=8, interaction="dplr",
+                          rank=2, dtype=jnp.bfloat16)
+    params = fwfm.init(jax.random.PRNGKey(0), cfg)
+    data = SyntheticCTR(layout, embed_dim=4, seed=0)
+    n = 256
+    _, logits = harness.score_split(params, cfg, data, n=n)
+    b = data.batch(n, 10**6)
+    want = fwfm.apply(params, cfg, {
+        "ids": jnp.asarray(np.asarray(b["ids"], np.int32)),
+        "weights": jnp.asarray(np.asarray(b["weights"], np.float32),
+                               jnp.bfloat16)})
+    np.testing.assert_array_equal(logits, np.asarray(want, np.float32))
+
+
+def test_streaming_matches_pointwise():
+    cfg, params, data = _setup()
+    exact = harness.evaluate_pointwise(params, cfg, data, n=4096,
+                                       batch_size=512)
+    stream = harness.evaluate_streaming(params, cfg, data, n=4096,
+                                        batch_size=512)
+    assert stream["n"] == exact["n"] == 4096
+    assert abs(stream["logloss"] - exact["logloss"]) <= 1e-5
+    assert abs(stream["calibration_ratio"]
+               - exact["calibration_ratio"]) <= 1e-5
+    # streamed AUC is the binned approximation of the exact one
+    assert abs(stream["auc"] - exact["auc"]) <= 5e-3
+
+
+# ---------------------------------------------------------------------------
+# ranking_eval_set construction
+# ---------------------------------------------------------------------------
+
+def test_ranking_eval_set_layout_and_determinism():
+    cfg, params, data = _setup()
+    es = harness.ranking_eval_set(data, n_queries=5, n_items=16, seed=3)
+    assert es.n_queries == 5 and es.n_items == 16
+    assert es.context_ids.shape == (5, cfg.layout.n_context)
+    assert es.item_ids.shape[0] == 16
+    assert es.rel.shape == es.rel01.shape == (5, 16)
+    assert np.all((es.rel > 0) & (es.rel < 1))          # teacher CTRs
+    # binary relevance: exactly n/2 above-median positives per query
+    np.testing.assert_array_equal(es.rel01.sum(-1), np.full(5, 8.0))
+    # deterministic reconstruction
+    es2 = harness.ranking_eval_set(data, n_queries=5, n_items=16, seed=3)
+    np.testing.assert_array_equal(es.rel, es2.rel)
+    np.testing.assert_array_equal(es.context_ids, es2.context_ids)
+    q = es.query()
+    assert q["item_ids"].shape == (5, 16, es.item_ids.shape[1])
+
+
+# ---------------------------------------------------------------------------
+# serving-path parity: model vs engine vs frontend
+# ---------------------------------------------------------------------------
+
+def test_serving_parity_jnp_bit_exact_zero_retraces():
+    cfg, params, data = _setup()
+    es = harness.ranking_eval_set(data, n_queries=6, n_items=32, seed=1)
+    rep = harness.serving_parity(params, cfg, es, k=5)
+    assert rep["retraces"] == 0
+    assert rep["bit_exact"] == {"engine": True, "frontend": True}
+    assert rep["max_abs_diff"] == {"engine": 0.0, "frontend": 0.0}
+    for path in ("model", "engine", "frontend"):
+        m = rep["paths"][path]
+        assert set(m) == {"ndcg@5", "precision@5", "recall@5", "mrr"}
+        assert m == rep["paths"]["model"]               # identical metrics
+    assert 0.0 < rep["paths"]["model"]["ndcg@5"] <= 1.0
+
+
+def test_serving_parity_pallas_kernel_path():
+    cfg, params, data = _setup()
+    es = harness.ranking_eval_set(data, n_queries=4, n_items=32, seed=2)
+    rep = harness.serving_parity(params, cfg, es, k=5,
+                                 use_pallas_kernel=True, block_n=16)
+    assert rep["retraces"] == 0
+    # kernel reduction order differs from the jnp graph: tolerance-bounded
+    assert rep["max_abs_diff"]["engine"] <= 1e-5
+    assert rep["max_abs_diff"]["frontend"] <= 1e-5
+    for key, got in rep["paths"]["engine"].items():
+        assert abs(got - rep["paths"]["model"][key]) <= 1e-5
+
+
+def test_serving_parity_sharded_mesh_bit_exact():
+    cfg, params, data = _setup()
+    es = harness.ranking_eval_set(data, n_queries=4, n_items=32, seed=4)
+    mesh = make_host_mesh(model=jax.device_count())
+    rep = harness.serving_parity(params, cfg, es, k=5, mesh=mesh)
+    assert rep["retraces"] == 0
+    assert rep["bit_exact"]["engine"] and rep["bit_exact"]["frontend"]
+
+
+def test_model_scores_shape_and_pruned_path():
+    cfg, params, data = _setup()
+    es = harness.ranking_eval_set(data, n_queries=3, n_items=8, seed=5)
+    s = harness.model_scores(params, cfg, es)
+    assert s.shape == (3, 8) and s.dtype == np.float32
+    got = harness.ranking_metrics(s, es, k=3)
+    assert set(got) == {"ndcg@3", "precision@3", "recall@3", "mrr"}

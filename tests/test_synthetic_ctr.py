@@ -1,0 +1,128 @@
+"""The synthetic CTR generator the eval harness (and every benchmark)
+draws from: query-layout invariants of ``context_query``/``ranking_query``,
+teacher determinism (same seed -> same planted teacher, batches replayable
+by key), and the Zipf head-heaviness the id streams are supposed to have."""
+import numpy as np
+
+from repro.core.fields import uniform_layout
+from repro.data.synthetic_ctr import SyntheticCTR
+
+
+def _data(seed=0, **kw):
+    layout = uniform_layout(5, 4, 50)
+    return layout, SyntheticCTR(layout, embed_dim=4, seed=seed, **kw)
+
+
+# ---------------------------------------------------------------------------
+# query layouts
+# ---------------------------------------------------------------------------
+
+def test_context_query_layout():
+    layout, data = _data()
+    q = data.context_query(3)
+    nC = len(layout.slots_of("context"))
+    assert q["context_ids"].shape == (1, nC)
+    assert q["context_weights"].shape == (1, nC)
+    assert q["context_ids"].dtype == np.int32
+    assert np.all(q["context_weights"] == 1.0)
+    assert np.all((q["context_ids"] >= 0) & (q["context_ids"] < 50))
+
+
+def test_ranking_query_layout():
+    layout, data = _data()
+    n = 17
+    q = data.ranking_query(n, 3)
+    nC = len(layout.slots_of("context"))
+    nI = len(layout.slots_of("item"))
+    assert q["context_ids"].shape == (1, nC)
+    assert q["item_ids"].shape == (1, n, nI)
+    assert q["item_weights"].shape == (1, n, nI)
+    assert q["item_ids"].dtype == np.int32
+    assert np.all((q["item_ids"] >= 0) & (q["item_ids"] < 50))
+    # a context + item row reassembles to the full slot layout
+    assert nC + nI == len(layout.slot_to_field)
+
+
+def test_batch_layout_and_labels():
+    layout, data = _data()
+    b = data.batch(256, 0)
+    n_slots = len(layout.slot_to_field)
+    assert b["ids"].shape == b["weights"].shape == (256, n_slots)
+    assert set(np.unique(b["label"])) <= {0.0, 1.0}
+    assert 0.0 < b["label"].mean() < 1.0
+
+
+# ---------------------------------------------------------------------------
+# teacher determinism
+# ---------------------------------------------------------------------------
+
+def test_teacher_deterministic_across_instances():
+    _, a = _data(seed=11)
+    _, b = _data(seed=11)
+    np.testing.assert_array_equal(a.R_true, b.R_true)
+    np.testing.assert_array_equal(a.emb_true, b.emb_true)
+    np.testing.assert_array_equal(a.lin_true, b.lin_true)
+    assert a.b0 == b.b0
+    _, c = _data(seed=12)
+    assert not np.array_equal(a.R_true, c.R_true)
+
+
+def test_teacher_logits_deterministic_and_pure():
+    _, data = _data()
+    b = data.batch(64, 5)
+    z1 = data.logits(b["ids"], b["weights"])
+    z2 = data.logits(b["ids"], b["weights"])
+    np.testing.assert_array_equal(z1, z2)
+    assert z1.shape == (64,) and np.all(np.isfinite(z1))
+    # zero weights silence every embedding and linear term: phi == b0
+    z0 = data.logits(b["ids"], np.zeros_like(b["weights"]))
+    np.testing.assert_allclose(z0, np.full(64, data.b0), atol=1e-7)
+
+
+def test_batches_replayable_by_seed_key():
+    _, data = _data()
+    b1, b2 = data.batch(128, 9), data.batch(128, 9)
+    np.testing.assert_array_equal(b1["ids"], b2["ids"])
+    np.testing.assert_array_equal(b1["label"], b2["label"])
+    b3 = data.batch(128, 10)
+    assert not np.array_equal(b1["ids"], b3["ids"])
+    # drawing a batch does not mutate generator state (replayable later)
+    np.testing.assert_array_equal(data.batch(128, 9)["ids"], b1["ids"])
+
+
+def test_queries_replayable_by_seed_key():
+    _, data = _data()
+    np.testing.assert_array_equal(data.context_query(4)["context_ids"],
+                                  data.context_query(4)["context_ids"])
+    np.testing.assert_array_equal(data.ranking_query(8, 4)["item_ids"],
+                                  data.ranking_query(8, 4)["item_ids"])
+
+
+def test_teacher_field_matrix_shape():
+    layout, data = _data()
+    m = layout.n_fields
+    assert data.R_true.shape == (m, m)
+    np.testing.assert_array_equal(data.R_true, data.R_true.T)
+    assert np.all(np.diagonal(data.R_true) == 0.0)
+    assert np.abs(data.R_true).max() > 0.0
+
+
+# ---------------------------------------------------------------------------
+# Zipf id traffic
+# ---------------------------------------------------------------------------
+
+def test_zipf_ids_are_head_heavy():
+    _, data = _data()
+    ids = data.batch(20000, 0)["ids"][:, 0]
+    counts = np.bincount(ids, minlength=50)
+    assert counts.argmax() == 0                 # id 0 is the head
+    assert counts[0] > 5 * counts[10]           # ~11^1.3 = 22x in theory
+    assert counts[0] < 20000                    # but not degenerate
+
+
+def test_zipf_alpha_controls_head_mass():
+    _, flat = _data(zipf_alpha=1.1)
+    _, peaked = _data(zipf_alpha=2.5)
+    head_flat = (flat.batch(20000, 0)["ids"][:, 0] == 0).mean()
+    head_peaked = (peaked.batch(20000, 0)["ids"][:, 0] == 0).mean()
+    assert head_peaked > head_flat + 0.1

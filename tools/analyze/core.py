@@ -81,7 +81,8 @@ class SourceFile:
 class Env:
     """Repo-level facts shared by the packs (see module docstring)."""
     repo: Path
-    oracle_keys: frozenset[str] = frozenset()     # ref.ORACLES keys
+    oracle_keys: frozenset[str] = frozenset()     # kernels/ref.py ORACLES
+    eval_oracle_keys: frozenset[str] = frozenset()  # eval/ref.py ORACLES
     fault_sites: frozenset[str] = frozenset()     # faults.SITES
     serving_errors: frozenset[str] = frozenset()  # ServingError subclasses
     allowed_builtins: frozenset[str] = frozenset()

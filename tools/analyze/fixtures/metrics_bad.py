@@ -1,0 +1,26 @@
+# expect: MET-ORACLE MET-TEST
+"""Known-bad fixture for the kernel_contract MET rules (self-test input
+only): jitted metric entry points with no declared eval/ref.py oracle
+and no parity test under tests/."""
+import functools
+
+import jax
+import jax.numpy as jnp
+
+
+@jax.jit
+def mystery_metric(labels, scores):
+    # not an eval/ref.py ORACLES key -> MET-ORACLE; never named under
+    # tests/ -> MET-TEST
+    return jnp.mean((labels > 0) == (scores > 0))
+
+
+@functools.partial(jax.jit, static_argnames=("k",))
+def mystery_cutoff_metric(rels, scores, *, k: int):
+    # the partial(jax.jit, ...) decorator form must be detected too
+    return jnp.float32(k)
+
+
+def _private_helper(x):
+    # private -> never a metric entry point, no findings expected
+    return x

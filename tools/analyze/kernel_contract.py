@@ -20,14 +20,26 @@ entry point:
 
 The helper module itself (``blocks.py``) and the oracle module
 (``ref.py``) are exempt from KRN-BLOCKSPEC by name.
+
+The eval-metrics subsystem extends the same contract to its jitted
+surface: in a metrics module (``eval/metrics.py``), a "metric entry
+point" is a public module-level function decorated with ``jax.jit``
+(directly or via ``functools.partial(jax.jit, ...)``).  Per entry point:
+
+    MET-ORACLE     the entry name is a key of the declared eval oracle
+                   map (``eval/ref.py`` ``ORACLES``) — a float64 numpy
+                   reference exists and is discoverable.
+    MET-TEST       the entry name appears in the tests corpus — a
+                   numeric parity sweep actually exercises the pair.
 """
 from __future__ import annotations
 
 import ast
 
-from core import Finding, SourceFile, call_name
+from core import Finding, SourceFile, call_name, dotted_name
 
 HELPER_MODULES = ("blocks.py",)
+METRIC_MODULES = ("metrics.py", "metrics_bad.py")
 TILE_PARAM_PREFIXES = ("block_", "tile_")
 
 
@@ -45,10 +57,50 @@ def _entry_points(sf: SourceFile):
                 break
 
 
+def _is_jit_decorator(dec: ast.expr) -> bool:
+    """``@jax.jit``, ``@jit(...)``, ``@functools.partial(jax.jit, ...)``."""
+    if dotted_name(dec).split(".")[-1] == "jit":
+        return True
+    if isinstance(dec, ast.Call):
+        head = call_name(dec).split(".")[-1]
+        if head == "jit":
+            return True
+        if head == "partial":
+            return any(dotted_name(a).split(".")[-1] == "jit"
+                       for a in dec.args)
+    return False
+
+
+def _metric_entry_points(sf: SourceFile):
+    """Public module-level jit-decorated functions of a metrics module."""
+    for node in sf.tree.body:
+        if not isinstance(node, (ast.FunctionDef, ast.AsyncFunctionDef)):
+            continue
+        if node.name.startswith("_"):
+            continue
+        if any(_is_jit_decorator(d) for d in node.decorator_list):
+            yield node
+
+
 def run(files: list[SourceFile], env) -> list[Finding]:
     findings: list[Finding] = []
     for sf in files:
         is_helper = sf.path.name in HELPER_MODULES
+
+        if sf.path.name in METRIC_MODULES:
+            for entry in _metric_entry_points(sf):
+                if entry.name not in env.eval_oracle_keys:
+                    findings.append(Finding(
+                        "MET-ORACLE", "error", sf.rel, entry.lineno,
+                        f"jitted metric {entry.name}() has no declared "
+                        f"oracle (add a float64 numpy reference and an "
+                        f"eval/ref.py ORACLES entry)"))
+                if entry.name not in env.tests_text:
+                    findings.append(Finding(
+                        "MET-TEST", "error", sf.rel, entry.lineno,
+                        f"jitted metric {entry.name}() never appears "
+                        f"under tests/ — no oracle parity sweep covers "
+                        f"it"))
 
         for entry in _entry_points(sf):
             if entry.name not in env.oracle_keys:

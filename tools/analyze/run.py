@@ -57,6 +57,7 @@ FIXTURES = {
     "trace_bad.py": "trace_safety",
     "lock_bad.py": "lock_discipline",
     "kernel_bad.py": "kernel_contract",
+    "metrics_bad.py": "kernel_contract",
     "error_bad.py": "error_taxonomy",
 }
 
@@ -108,12 +109,14 @@ def _serving_error_closure(repo: Path) -> frozenset[str]:
 
 def build_env(repo: Path) -> core.Env:
     ref = ast.parse((repo / "src/repro/kernels/ref.py").read_text())
+    eref = ast.parse((repo / "src/repro/eval/ref.py").read_text())
     faults = ast.parse((repo / "src/repro/serving/faults.py").read_text())
     tests = "\n".join(p.read_text()
                       for p in sorted((repo / "tests").glob("*.py")))
     return core.Env(
         repo=repo,
         oracle_keys=_dict_str_keys(ref, "ORACLES"),
+        eval_oracle_keys=_dict_str_keys(eref, "ORACLES"),
         fault_sites=_set_str_values(faults, "SITES"),
         serving_errors=_serving_error_closure(repo),
         allowed_builtins=ALLOWED_BUILTINS,
@@ -127,12 +130,14 @@ def analyze(repo: Path) -> list[core.Finding]:
         repo, (repo / "src/repro/serving").glob("*.py"))
     kernels = core.load_files(
         repo, (repo / "src/repro/kernels").glob("*.py"))
+    evals = core.load_files(
+        repo, (repo / "src/repro/eval").glob("*.py"))
     tree = core.load_files(repo, core.walk_files(repo, "src/repro"))
 
     findings: list[core.Finding] = []
     findings += trace_safety.run(tree, env)
     findings += lock_discipline.run(serving, env)
-    findings += kernel_contract.run(kernels, env)
+    findings += kernel_contract.run(kernels + evals, env)
     findings += error_taxonomy.run(serving, env)
 
     core.apply_suppressions(findings, tree + serving + kernels)
