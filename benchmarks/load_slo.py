@@ -1,0 +1,262 @@
+"""Load SLO gate: the RPC serving surface under an open-loop client fleet.
+
+The network PR's operational claim is a LATENCY CONTRACT, not a
+throughput number: with the multi-tenant frontend behind the binary RPC
+server on a real TCP socket, a seeded many-users trace — Zipfian tenant
+and query popularity, exponential inter-arrivals with 3x burst windows,
+scripted mid-trace reconnects — must come back within tail-latency SLOs
+and an error budget, with zero scorer retraces and wire replies
+bit-exact vs in-process submission.  Five claims, each a hard CI gate:
+
+  * **tails** — reply latency measured open-loop (receipt minus the
+    request's SCHEDULED send time, so a stalled server cannot hide
+    behind a stalled sender) holds p50/p99/p999 SLOs scaled off the
+    calibrated Bq=1 engine time (floors keep slow shared runners from
+    flapping the gate);
+  * **error budget** — at most 0.5% of requests may resolve to an error
+    frame (none are expected: the offered load is calibrated below
+    saturation and no deadlines are set);
+  * **every request resolves** — the reader threads account for every
+    scheduled request: a reply landed or an error was recorded, zero
+    silent drops across reconnects;
+  * **bit-exact** — a spread sample of wire replies is re-submitted
+    through the SAME ``QueryFrontend`` in-process and must match
+    byte-for-byte (the wire adds framing, not arithmetic);
+  * **flat traces** — the socket path adds ZERO traces to the shared
+    runtime beyond the one-tenant grid warmup: open-loop bursts,
+    reconnect storms and mixed per-request K never reach the compiler.
+
+Method: 3 tenant corpora on ONE ``ScorerRuntime`` behind a frontend with
+``auto_pump=False`` (the server's event loop owns the pump), served by
+``serve_in_thread`` on an ephemeral port.  The trace assigns requests
+round-robin to C connections; each connection runs a sender thread
+(fires frames at their scheduled times, never waiting for replies) and a
+reader thread (stamps receipt).  Half the connections tear down and
+re-dial mid-trace at scripted segment boundaries.  Request ids are
+pre-assigned so readers never race senders on correlation state.
+
+Output lines:
+    load_slo: calib,s1_ms=<t>,conns=<c>,reconnects=<r>,reqs=<n>,rate_rps=<q>
+    load_slo: tails,p50_ms=<a>,p99_ms=<b>,p999_ms=<c>,slo_p50_ms=<x>,slo_p99_ms=<y>,slo_p999_ms=<z>,<ok|FAIL>
+    load_slo: errors,total=<n>,errored=<e>,unresolved=<u>,budget_pct=0.5,<ok|FAIL>
+    load_slo: bitexact,checked=<n>,<ok|FAIL>
+    load_slo: traces,warm=<n>,after=<n>,<flat|RETRACED>
+The driver exits nonzero unless every line ends ``ok``/``flat``.
+"""
+from __future__ import annotations
+
+import threading
+import time
+
+import numpy as np
+
+MAX_K = 16
+N_CTX_POOL = 64      # distinct contexts; popularity is Zipfian over these
+TENANTS = 3
+BURST_BLOCK = 50     # every 5th block of this many requests arrives at 3x
+ERROR_BUDGET = 0.005
+ZIPF_A = 1.3
+
+
+def _zipf_idx(rng, n: int) -> int:
+    return min(int(rng.zipf(ZIPF_A)) - 1, n - 1)
+
+
+def _run_conn(host, port, segments, t0, lat_s, replies, errors, crashes):
+    """One connection's open-loop life: per segment, dial, fire frames at
+    their scheduled offsets from ``t0``, read every reply, re-dial."""
+    from repro.serving import RpcClient
+
+    for seg in segments:
+        try:
+            cli = RpcClient(host, port)
+        except OSError:
+            crashes.append(("dial", len(seg)))
+            continue
+        rid_of = {gi + 1: gi for gi, _, _, _, _ in seg}
+
+        def read_all():
+            for _ in range(len(seg)):
+                try:
+                    reply = cli.recv()
+                except Exception as e:      # noqa: BLE001 — accounted below
+                    crashes.append(("read", repr(e)))
+                    return
+                now = time.perf_counter()
+                gi = rid_of[reply.request_id]
+                if reply.ok:
+                    replies[gi] = (reply.scores, reply.slots)
+                else:
+                    errors[gi] = reply.error
+                lat_s[gi] = now - (t0 + seg_sched[gi])
+
+        seg_sched = {gi: sched for gi, sched, _, _, _ in seg}
+        reader = threading.Thread(target=read_all, daemon=True)
+        reader.start()
+        try:
+            for gi, sched, ctx, k, tenant in seg:
+                wait = t0 + sched - time.perf_counter()
+                if wait > 0:
+                    time.sleep(wait)
+                cli.send_rank(ctx, k=k, tenant=tenant, request_id=gi + 1)
+        except OSError as e:
+            crashes.append(("send", repr(e)))
+        reader.join(timeout=120)
+        cli.close()
+
+
+def main(quick: bool = False) -> None:
+    import jax
+
+    from repro.core.fields import uniform_layout
+    from repro.data.synthetic_ctr import SyntheticCTR
+    from repro.models.recsys import fwfm
+    from repro.serving import (CorpusState, QueryFrontend, ScorerRuntime,
+                               serve_in_thread)
+    from repro.serving.corpus import next_pow2
+
+    n_items = 256 if quick else 512
+    n_req = 400 if quick else 2000
+    n_conns = 4 if quick else 8
+
+    layout = uniform_layout(15, 20, 500)
+    cfg = fwfm.FwFMConfig(layout=layout, embed_dim=16, interaction="dplr",
+                          rank=3)
+    params = fwfm.init(jax.random.PRNGKey(0), cfg)
+    data = SyntheticCTR(layout, embed_dim=8, seed=0)
+    rng = np.random.default_rng(0)
+
+    runtime = ScorerRuntime(cfg)
+    names = [f"t{i}" for i in range(TENANTS)]
+    states = {}
+    for i, name in enumerate(names):
+        c = data.ranking_query(n_items, 1000 + i)
+        states[name] = CorpusState(cfg, c["item_ids"][0],
+                                   c["item_weights"][0],
+                                   capacity=next_pow2(n_items),
+                                   runtime=runtime)
+        states[name].refresh(params, step=0)
+    fe = QueryFrontend(states, max_batch=8, max_k=MAX_K, max_wait=1e-3,
+                       auto_pump=False)
+    ctx_pool = [data.context_query(s)["context_ids"]
+                for s in range(N_CTX_POOL)]
+    fe.warmup(ctx_pool[0], tenant="t0")
+
+    # calibrate: warm Bq=1 engine time sets the offered rate and the SLO
+    # scale (floors below keep slow shared runners from flapping)
+    ctx0 = np.asarray(ctx_pool[0]).reshape(1, -1)
+    for _ in range(3):
+        jax.block_until_ready(states["t0"].topk(ctx0, MAX_K)[0])
+    t0 = time.perf_counter()
+    for _ in range(10):
+        jax.block_until_ready(states["t0"].topk(ctx0, MAX_K)[0])
+    s1 = (time.perf_counter() - t0) / 10
+    warm = runtime.trace_count
+
+    # seeded open-loop trace: Zipfian tenant + query popularity, mixed K,
+    # exponential inter-arrivals, every 5th block a 3x burst
+    gap = max(1.5 * s1, 0.75e-3)
+    sched, t_acc = [], 0.0
+    for i in range(n_req):
+        burst = (i // BURST_BLOCK) % 5 == 4
+        t_acc += float(rng.exponential(gap / 3 if burst else gap))
+        sched.append(t_acc)
+    reqs = [(i, sched[i], ctx_pool[_zipf_idx(rng, N_CTX_POOL)],
+             int(rng.integers(1, MAX_K + 1)),
+             names[_zipf_idx(rng, TENANTS)])
+            for i in range(n_req)]
+
+    server = serve_in_thread(fe)
+    lat_s = [None] * n_req
+    replies = [None] * n_req
+    errors = [None] * n_req
+    crashes: list = []
+
+    # round-robin requests onto connections; the first half of the fleet
+    # tears down and re-dials twice mid-trace (scripted reconnects)
+    per_conn = [[r for r in reqs if r[0] % n_conns == ci]
+                for ci in range(n_conns)]
+    segments, reconnects = [], 0
+    for ci, mine in enumerate(per_conn):
+        if ci < n_conns // 2 and len(mine) >= 3:
+            third = len(mine) // 3
+            segments.append([mine[:third], mine[third:2 * third],
+                             mine[2 * third:]])
+            reconnects += 2
+        else:
+            segments.append([mine])
+
+    rate = n_req / sched[-1]
+    print(f"load_slo: calib,s1_ms={s1 * 1e3:.3f},conns={n_conns},"
+          f"reconnects={reconnects},reqs={n_req},rate_rps={rate:.0f}",
+          flush=True)
+
+    t_start = time.perf_counter() + 0.05   # common epoch for all senders
+    threads = [threading.Thread(
+        target=_run_conn,
+        args=("127.0.0.1", server.port, segments[ci], t_start,
+              lat_s, replies, errors, crashes), daemon=True)
+        for ci in range(n_conns)]
+    for t in threads:
+        t.start()
+    for t in threads:
+        t.join(timeout=300)
+
+    # -- tails: open-loop latency vs calibrated SLOs ------------------------
+    done = [x for x in lat_s if x is not None]
+    lat_ms = np.asarray([x * 1e3 for x in done])
+    p50 = float(np.percentile(lat_ms, 50)) if len(lat_ms) else float("inf")
+    p99 = float(np.percentile(lat_ms, 99)) if len(lat_ms) else float("inf")
+    p999 = float(np.percentile(lat_ms, 99.9)) if len(lat_ms) else float("inf")
+    slo50 = max(30.0, 25 * s1 * 1e3)
+    slo99 = max(120.0, 100 * s1 * 1e3)
+    slo999 = max(300.0, 250 * s1 * 1e3)
+    tails_ok = p50 <= slo50 and p99 <= slo99 and p999 <= slo999
+    print(f"load_slo: tails,p50_ms={p50:.2f},p99_ms={p99:.2f},"
+          f"p999_ms={p999:.2f},slo_p50_ms={slo50:.0f},slo_p99_ms={slo99:.0f},"
+          f"slo_p999_ms={slo999:.0f},{'ok' if tails_ok else 'FAIL'}",
+          flush=True)
+
+    # -- error budget + full resolution -------------------------------------
+    errored = sum(1 for e in errors if e is not None)
+    unresolved = n_req - len(done)
+    err_ok = (errored / n_req <= ERROR_BUDGET and unresolved == 0
+              and not crashes)
+    print(f"load_slo: errors,total={n_req},errored={errored},"
+          f"unresolved={unresolved},budget_pct={ERROR_BUDGET * 100:g},"
+          f"{'ok' if err_ok else 'FAIL'}", flush=True)
+    if crashes:
+        print(f"load_slo: crash detail: {crashes[:4]}", flush=True)
+
+    # -- bit-exact: wire replies vs in-process submission --------------------
+    # (the server is still pumping; submit() rides its event-loop ticks)
+    sample = [i for i in range(0, n_req, max(n_req // 32, 1))
+              if replies[i] is not None]
+    pend = [(i, fe.submit(reqs[i][2], k=reqs[i][3], tenant=reqs[i][4]))
+            for i in sample]
+    exact = True
+    for i, p in pend:
+        sc, sl = p.result()
+        wire_sc, wire_sl = replies[i]
+        exact &= (np.array_equal(wire_sc, np.asarray(sc))
+                  and np.array_equal(wire_sl, np.asarray(sl)))
+    print(f"load_slo: bitexact,checked={len(pend)},"
+          f"{'ok' if exact else 'FAIL'}", flush=True)
+
+    # -- flat traces across the whole socket replay --------------------------
+    after = runtime.trace_count
+    flat = after == warm
+    print(f"load_slo: traces,warm={warm},after={after},"
+          + ("flat" if flat else "RETRACED"), flush=True)
+
+    server.stop()
+    if not (tails_ok and err_ok and exact and flat):
+        raise SystemExit(
+            "load_slo invariants violated: "
+            f"tails={tails_ok} errors={err_ok} bitexact={exact} "
+            f"traces_flat={flat}")
+
+
+if __name__ == "__main__":
+    import sys
+    main(quick="--quick" in sys.argv)

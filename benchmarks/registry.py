@@ -80,6 +80,13 @@ BENCHMARKS: dict[str, tuple[str, str]] = {
         "back within 2x quiet baseline after faults clear, zero "
         "retraces from any recovery path",
     ),
+    "load_slo": (
+        "benchmarks.load_slo",
+        "RPC load SLO gate: an open-loop Zipfian client fleet with "
+        "bursts and reconnects against the socket serving surface — "
+        "p50/p99/p999 tail SLOs, a 0.5% error budget, wire replies "
+        "bit-exact vs in-process submission, zero scorer retraces",
+    ),
     "quality_tradeoff": (
         "benchmarks.quality_tradeoff",
         "Rank-vs-pruning quality gate: DPLR AUC beats matched-parameter "

@@ -3,7 +3,7 @@ queries, each scoring N candidates for one context.
 
 Serving engine
 --------------
-Six paths, in increasing order of precomputation, coalescing, and
+Seven paths, in increasing order of precomputation, coalescing, and
 sharing:
 
   1. per-call Algorithm 1 (``fwfm.rank_items``): the context cache is
@@ -33,6 +33,11 @@ sharing:
      tenant-routed frontend; after tenant 0 warms the (Bq, K) grid,
      every other tenant serves with zero retraces, and churn on one
      tenant never drains another's in-flight micro-batches.
+  7. network serving (``repro.serving.rpc``): the tenant frontend behind
+     an asyncio RPC server speaking the length-prefixed binary protocol
+     (docs/network.md) on a real TCP socket — pipelined client requests,
+     typed error frames reconstructing the ``ServingError`` taxonomy,
+     and replies bit-exact vs in-process submission.
 
 Reports latency percentiles — the paper's Table 3 quantities.
 
@@ -235,6 +240,47 @@ def main():
           f"{np.percentile(lat, 95):8.2f} ms   (3 tenants on ONE runtime, "
           f"{traced} traces all from tenant-0 warmup, {wall:.1f} ms wall, "
           f"t0 churned mid-stream)")
+
+    # -- path 7: the tenant frontend behind the RPC server (real socket) --
+    from repro.serving import RpcClient, serve_in_thread
+    rstates = {}
+    for i in range(2):
+        c = data.ranking_query(args.items, 5000 + i)
+        rstates[f"t{i}"] = CorpusState(cfg, c["item_ids"][0],
+                                       c["item_weights"][0],
+                                       capacity=next_pow2(args.items),
+                                       runtime=runtime)   # SAME runtime:
+        rstates[f"t{i}"].refresh(params, step=0)          # still 0 traces
+    # auto_pump off — the server's event loop owns pump/resolve
+    rfe = QueryFrontend(rstates, max_batch=8, max_k=max_k, max_wait=1e-3,
+                        auto_pump=False)
+    rfe.warmup(data.context_query(0)["context_ids"], tenant="t0")
+    traced = runtime.trace_count
+    server = serve_in_thread(rfe)
+    pend, lat = [], []
+    t0 = time.perf_counter()
+    with RpcClient("127.0.0.1", server.port) as cli:
+        for s in range(args.queries):     # pipelined in windows of 8
+            lane = f"t{s % 2}"
+            pend.append((cli.send_rank(
+                data.context_query(6000 + s)["context_ids"],
+                k=int(rng.integers(1, max_k + 1)), tenant=lane),
+                lane, time.perf_counter()))
+            if len(pend) == 8 or s == args.queries - 1:
+                for rid, lane, ts in pend:
+                    reply = cli.recv_for(rid)
+                    reply.raise_for_status()
+                    assert rstates[lane].is_live(reply.slots).all()
+                    lat.append((time.perf_counter() - ts) * 1e3)
+                pend = []
+    wall = (time.perf_counter() - t0) * 1e3
+    assert runtime.trace_count == traced, "socket traffic retraced"
+    server.stop()                         # graceful drain + close
+    print(f"rpc            : avg {np.mean(lat):8.2f} ms   P95 "
+          f"{np.percentile(lat, 95):8.2f} ms   ({args.queries} pipelined "
+          f"requests over 127.0.0.1:{server.port}, "
+          f"{server.stats['replies']} ok / {server.stats['errors']} typed "
+          f"errors, {wall:.1f} ms wall, 0 retraces)")
 
     # graceful shutdown (the same path the SIGTERM handler takes)
     for f in _live_frontends:

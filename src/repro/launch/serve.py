@@ -80,6 +80,17 @@ every request resolves with a result or a typed error.  Asserts zero
 scorer retraces across ALL recovery paths.  Composes with ``--mesh``
 and ``--use-pallas`` (which adds the sticky kernel->jnp fallback leg).
 
+Network serving: ``--rpc`` puts the multi-tenant frontend behind the
+length-prefixed binary RPC protocol (``repro.serving.rpc``, spec in
+docs/network.md) on a real TCP socket (``--port``, 0 = ephemeral) and
+replays a mixed-tenant pipelined client trace against it.  The frontend
+runs with ``auto_pump=False`` — the server's event loop owns the pump —
+and the demo asserts the wire contract: every socket reply is BIT-EXACT
+vs direct in-process ``QueryFrontend`` submission, protocol and serving
+errors come back as typed error frames that reconstruct the
+``ServingError`` taxonomy client-side, zero scorer retraces across the
+replay, and ``server.stop()`` drains gracefully.
+
 ``--mp`` switches to the model-parallel DPLR scorer (EXPERIMENTS.md §Perf
 cell 3) — on this 1-device container it exercises the same shard_map code
 path the production mesh runs; ``--bf16`` serves bf16 tables.
@@ -366,6 +377,102 @@ def _tenant_demo(args, cfg, params, data) -> None:
           f"{per_tenant}")
     print(f"  admission : 5x burst -> {accepted} accepted / {sheds} shed "
           f"fast (Overloaded), 0 deadline expiries")
+
+
+def _rpc_demo(args, cfg, params, data) -> None:
+    """Serve ``--tenants`` corpora over the binary RPC protocol on a real
+    socket and replay a pipelined mixed-tenant client trace, asserting
+    the wire contract: socket replies bit-exact vs direct frontend
+    submission, typed error frames, zero retraces, graceful drain."""
+    from repro.serving import (CorpusState, DeadlineExceeded, QueryFrontend,
+                               RpcClient, ScorerRuntime, serve_in_thread)
+    from repro.serving.corpus import next_pow2
+
+    rng = np.random.default_rng(args.seed)
+    T = max(args.tenants, 2)
+    corpus_mesh = _corpus_mesh(args.mesh)
+    n_shards = 1 if corpus_mesh is None else int(corpus_mesh.shape["model"])
+    runtime = ScorerRuntime(cfg, mesh=corpus_mesh,
+                            use_pallas_kernel=args.use_pallas)
+    capacity = max(args.capacity or next_pow2(2 * args.items), n_shards)
+    names = [f"t{i}" for i in range(T)]
+    states = {}
+    for i, name in enumerate(names):
+        c = data.ranking_query(args.items, 1000 + i)
+        states[name] = CorpusState(cfg, c["item_ids"][0],
+                                   c["item_weights"][0],
+                                   capacity=capacity, runtime=runtime)
+        states[name].refresh(params, step=0)
+    max_k = max(args.topk or 10, 1)
+    # auto_pump=False: the RPC server's event loop owns pump/resolve
+    fe = QueryFrontend(states, max_batch=args.fe_batch, max_k=max_k,
+                       max_wait=args.max_wait_ms * 1e-3,
+                       inflight=args.inflight, auto_pump=False)
+    fe.warmup(data.context_query(0)["context_ids"], tenant="t0")
+    traced = runtime.trace_count
+
+    server = serve_in_thread(fe, port=args.port)
+    print(f"rpc: {T} tenants x {args.items} items (capacity {capacity}"
+          f"{f', {n_shards} shards' if n_shards > 1 else ''}) on ONE "
+          f"ScorerRuntime, listening on 127.0.0.1:{server.port}")
+
+    n = args.queries
+    ctxs = [data.context_query(s)["context_ids"] for s in range(n)]
+    ks = rng.integers(1, max_k + 1, n)
+    lanes = [names[int(rng.integers(T))] for _ in range(n)]
+    window = 16                       # pipelined in-flight frames per burst
+    lat, replies = [], {}
+    with assert_no_retrace(runtime, label="rpc traffic"):
+        with RpcClient("127.0.0.1", server.port) as cli:
+            t_start = time.perf_counter()
+            sent = []
+            for s in range(n):
+                sent.append((s, cli.send_rank(ctxs[s], k=int(ks[s]),
+                                              tenant=lanes[s]),
+                             time.perf_counter()))
+                if len(sent) >= window or s == n - 1:
+                    for si, rid, ti in sent:
+                        reply = cli.recv_for(rid)
+                        reply.raise_for_status()
+                        replies[si] = reply
+                        lat.append((time.perf_counter() - ti) * 1e3)
+                    sent = []
+            wall = time.perf_counter() - t_start
+
+            # typed error frames reconstruct the taxonomy client-side
+            bad_k = cli.recv_for(cli.send_rank(ctxs[0], k=max_k + 90,
+                                               tenant="t0"))
+            assert isinstance(bad_k.error, ValueError), bad_k.error
+            expired = cli.recv_for(cli.send_rank(ctxs[0], k=1, tenant="t0",
+                                                 deadline_rel=1e-9))
+            assert isinstance(expired.error, DeadlineExceeded), expired.error
+            assert expired.error.tenant == "t0"
+
+        # socket replies must be BIT-EXACT vs direct frontend submission
+        # (the server keeps pumping; submit() from here rides its ticks)
+        check = list(range(0, n, max(n // 16, 1)))
+        pend = [(s, fe.submit(ctxs[s], k=int(ks[s]), tenant=lanes[s]))
+                for s in check]
+        for s, p in pend:
+            sc, sl = p.result()
+            assert np.array_equal(replies[s].scores, np.asarray(sc)) and \
+                np.array_equal(replies[s].slots, np.asarray(sl)), \
+                f"socket reply {s} != direct frontend submission"
+
+    server.stop()                     # graceful drain, then loop teardown
+    st = server.stats
+    lat_a = np.asarray(lat)
+    print(f"  traces    : {traced} total — 0 added by {n} socket requests "
+          f"across {T} tenants")
+    print(f"  replies   : p50 {np.percentile(lat_a, 50):.2f}  "
+          f"p95 {np.percentile(lat_a, 95):.2f}  "
+          f"p99 {np.percentile(lat_a, 99):.2f} ms over the wire "
+          f"({n / wall:.0f} rps pipelined x{window}); {len(check)} checked "
+          f"bit-exact vs in-process submission")
+    print(f"  wire      : {st['requests']} requests, {st['replies']} ok, "
+          f"{st['errors']} typed error frames, "
+          f"{st['protocol_errors']} protocol errors; graceful drain ok")
+    fe.close()
 
 
 def _churn_demo(args, engine, data) -> None:
@@ -667,7 +774,17 @@ def main(argv=None):
                          "bit-exact replies, churn isolation, admission "
                          "shedding)")
     ap.add_argument("--tenants", type=int, default=4,
-                    help="tenant count for --tenant-demo (min 2)")
+                    help="tenant count for --tenant-demo/--rpc (min 2)")
+    ap.add_argument("--rpc", action="store_true",
+                    help="serve the tenant-routed frontend over the "
+                         "length-prefixed binary RPC protocol on a real "
+                         "socket and replay a pipelined mixed-tenant "
+                         "client trace (asserts bit-exact replies vs "
+                         "direct frontend submission, typed error "
+                         "frames, zero retraces, graceful drain; see "
+                         "docs/network.md)")
+    ap.add_argument("--port", type=int, default=0,
+                    help="--rpc listen port (0 = ephemeral)")
     ap.add_argument("--arrival-rate", type=float, default=0.0,
                     help="frontend demo offered load in qps "
                          "(0 = auto: ~2x the sync per-query capacity)")
@@ -698,10 +815,10 @@ def main(argv=None):
             ap.error("--engine corpus requires a dplr model (and not --mp)")
     elif (args.topk or args.refresh_demo or args.use_pallas
           or args.churn_demo or args.frontend or args.tenant_demo
-          or args.chaos_demo or args.mesh != "none"):
+          or args.rpc or args.chaos_demo or args.mesh != "none"):
         ap.error("--topk/--refresh-demo/--use-pallas/--churn-demo/"
-                 "--frontend/--tenant-demo/--chaos-demo/--mesh require "
-                 "--engine corpus")
+                 "--frontend/--tenant-demo/--rpc/--chaos-demo/--mesh "
+                 "require --engine corpus")
 
     params = mod.init(jax.random.PRNGKey(args.seed), cfg)
     mgr = None
@@ -742,6 +859,8 @@ def main(argv=None):
 
         if args.tenant_demo:
             return _tenant_demo(args, cfg, params, data)
+        if args.rpc:
+            return _rpc_demo(args, cfg, params, data)
 
         # initial candidate corpus: the item side of a fixed ranking query,
         # living in a capacity-padded slab so the catalog can churn.

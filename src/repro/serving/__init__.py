@@ -23,7 +23,8 @@ compute, per-tenant state, shared request routing:
     runtime.
   * ``QueryFrontend`` (SHARED) is the online request path: per-tenant
     EDF queues coalescing into power-of-two padded micro-batches,
-    round-robin fairness across tenants into one double-buffered
+    weighted (SWRR + QPS-quota) fairness across tenants into one
+    double-buffered
     in-flight window (host assembly overlaps device scoring), admission
     control that sheds with ``Overloaded`` instead of queueing doomed
     requests, and a per-tenant writer barrier — tenant-A churn never
@@ -41,10 +42,16 @@ compute, per-tenant state, shared request routing:
                   (striped slot ownership, shard-grouped churn deltas,
                   bit-exact candidate merge)
     frontend.py - QueryFrontend (tenant routing, request coalescing,
-                  bucketed Bq/K, EDF + round-robin dispatch, admission
-                  control, overlapped dispatch, deadlines, per-tenant
-                  churn/read serialization, retry/backoff + circuit
-                  breakers + pressure clamp + pump watchdog + health)
+                  bucketed Bq/K, EDF + weighted-SWRR dispatch with QPS
+                  quotas, admission control, overlapped dispatch,
+                  deadlines, per-tenant churn/read serialization,
+                  retry/backoff + circuit breakers + pressure clamp +
+                  occupancy autoscaling + pump watchdog + health)
+    rpc.py      - RpcServer/RpcClient (asyncio length-prefixed binary
+                  protocol over the frontend: typed error frames from
+                  the ServingError taxonomy, per-connection
+                  backpressure, graceful SIGTERM drain) — see
+                  docs/network.md
     errors.py   - the typed ServingError hierarchy (one base, one
                   subclass per failure domain; FrontendError is a
                   compatibility alias of the base)
@@ -60,6 +67,9 @@ from repro.serving.errors import (Degraded, DeadlineExceeded, DispatchFailed,
                                   RefreshFailed, ServingError, Unservable)
 from repro.serving.faults import FaultInjector, InjectedFault
 from repro.serving.frontend import PendingQuery, QueryFrontend
+from repro.serving.rpc import (RpcClient, RpcDisconnected,
+                               RpcProtocolError, RpcServer,
+                               serve_in_thread)
 from repro.serving.runtime import ScorerRuntime
 from repro.serving.sanitize import (assert_no_retrace, check_scores,
                                     sanitize_enabled, scoring_guard)
@@ -70,5 +80,7 @@ __all__ = ["ItemCorpusCache", "build_corpus_cache", "corpus_rows",
            "ServingError", "Overloaded", "DeadlineExceeded", "Unservable",
            "DispatchFailed", "RefreshFailed", "Degraded", "NotReady",
            "FrontendError", "FaultInjector", "InjectedFault",
+           "RpcServer", "RpcClient", "RpcProtocolError", "RpcDisconnected",
+           "serve_in_thread",
            "assert_no_retrace", "check_scores", "sanitize_enabled",
            "scoring_guard"]

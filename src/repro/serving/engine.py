@@ -226,6 +226,29 @@ class CorpusState:
         return self.capacity - self._n_free
 
     @property
+    def occupancy(self) -> float:
+        """Live fraction of the slab, ``n_items / capacity`` — i.e.
+        1 − free-list fraction.  The autoscaling signal: a slab near 1.0
+        is one ``add_items`` burst away from a reactive mid-call grow."""
+        return 1.0 - self._n_free / self.capacity
+
+    def maybe_autoscale(self, high: float) -> bool:
+        """Proactively double the slab once ``occupancy >= high`` —
+        the same ``_grow`` path ``add_items`` falls back on, behind the
+        same writer barrier (in-flight reads drain first), but paid at a
+        scheduled tick instead of inside an unlucky hot-path insert.
+        Costs one trace per NEW capacity on the (shared) runtime; a
+        no-op before the first ``refresh`` (nothing to re-pad) or below
+        the mark.  Returns True when it grew."""
+        if not 0.0 < high <= 1.0:
+            raise ValueError(f"high={high} outside (0, 1]")
+        if self.cache is None or self.occupancy < high:
+            return False
+        self._begin_write()
+        self._grow(1)                  # doubles: new = max(2*old, ...)
+        return True
+
+    @property
     def n_shards(self) -> int:
         """Corpus shard count D (1 when unsharded)."""
         return self._D

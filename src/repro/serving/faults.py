@@ -28,6 +28,14 @@ Sites wired through the stack (docs/robustness.md has the full map):
                 (outside the lock)                thread (GC pause, NFS
                                                   hang, deadlocked hook)
     clock       ``wrap_clock`` time source        deadline-clock skew
+    rpc_accept  RpcServer connection accept       a listener refusing /
+                                                  dropping a new client
+    rpc_read    RpcServer per-frame read          a connection dying (or
+                                                  stalling: ``delay=``)
+                                                  mid-request
+    rpc_write   RpcServer reply write             a client gone before
+                                                  its reply could be
+                                                  written back
 
 Arming semantics — ``arm(site, count=, rate=, after=, delay=, error=)``:
 
@@ -81,6 +89,9 @@ SITES = frozenset({
     "write",      # CorpusState mutation scatter
     "pump",       # QueryFrontend background pump tick
     "clock",      # wrap_clock()/skew_value() time skew
+    "rpc_accept",  # RpcServer new-connection accept
+    "rpc_read",    # RpcServer per-frame request read
+    "rpc_write",   # RpcServer reply frame write
 })
 
 

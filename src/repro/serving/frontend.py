@@ -55,15 +55,43 @@ per-query Ks, and tenant mixes cause ZERO retraces (asserted by
 ``tests/test_frontend.py``, ``tests/test_multitenant.py``, and the
 ``--frontend``/``--tenant-demo`` drivers).
 
-Dispatch order: EDF within a tenant, round-robin across tenants
----------------------------------------------------------------
+Dispatch order: EDF within a tenant, weighted fairness across tenants
+---------------------------------------------------------------------
 Within a tenant's queue, requests that carry deadlines pop
 earliest-deadline-first; deadline-less requests keep FIFO order (and
 sort after any deadlined request) — a tight-deadline late arrival
 overtakes a slack early one (tested).  Across tenants, ``pump`` and
-``flush`` rotate a round-robin cursor over the non-empty queues, taking
-at most one micro-batch per tenant per turn, so one tenant's backlog can
-never starve another's traffic out of the shared window.
+``flush`` run smooth weighted round-robin (SWRR) over the eligible
+lanes: every turn each candidate lane earns ``weight`` credit, the
+richest lane wins the turn and pays back the sum of the candidates'
+weights, so over any window each tenant's share of dispatch turns
+converges to its weight share — with equal weights (the default) this
+IS plain round-robin, turn for turn.  At most one micro-batch is taken
+per turn, so one tenant's backlog can never starve another's traffic
+out of the shared window, and removing a tenant mid-stream cannot skew
+the schedule (credits live on the lanes, not in a cursor).
+
+On top of the weights, an optional per-tenant **QPS quota** (requests
+per second, token bucket with burst capacity ``max_batch``) bounds how
+fast the *scheduler* serves a lane: a lane with no tokens is skipped by
+``pump`` until its bucket refills (``lane_stats``'s
+``quota_deferred``).  Quotas shape scheduling only — explicit blocking
+paths (``PendingQuery.result``, ``drain``, ``close``, the writer
+barrier) bypass them, so an accepted request can ALWAYS be resolved and
+a quota-starved tenant never wedges its own drain, let alone another
+tenant's traffic.  Weights and quotas are set at ``add_tenant`` time
+and re-tunable live via ``set_tenant_policy``.
+
+Capacity autoscaling (the occupancy signal)
+-------------------------------------------
+With ``autoscale_high=f`` the pump tick watches each tenant's slab
+occupancy (``n_items / capacity``, i.e. 1 − free-list fraction) and
+proactively doubles a slab that crossed the high-water mark via
+``CorpusState.maybe_autoscale`` — the same ``_grow`` path churn uses,
+behind the same writer barrier.  The trade: growth costs ONE trace per
+new capacity on the shared runtime, paid at a scheduled pump tick
+instead of inside some unlucky ``add_items`` call on the hot path.
+Off by default (``None``); ``stats["autoscales"]`` counts grows.
 
 Admission control (load shedding)
 ---------------------------------
@@ -261,24 +289,34 @@ class _InFlight:
 
 class _TenantLane:
     """Per-tenant frontend state: the engine (CorpusState), the EDF
-    request queue, per-tenant counters, and the tenant's circuit
-    breaker (``closed`` -> ``open`` on consecutive dispatch failures ->
-    ``half_open`` after cooldown -> ``closed`` on probe success)."""
+    request queue, per-tenant counters, the tenant's circuit breaker
+    (``closed`` -> ``open`` on consecutive dispatch failures ->
+    ``half_open`` after cooldown -> ``closed`` on probe success), and
+    the tenant's share of the cross-tenant scheduler — its SWRR
+    ``weight``/``credit`` pair and, when a QPS ``quota`` is set, a token
+    bucket (``tokens`` refilled at ``quota``/s from the ``tok_t``
+    stamp, burst-capped at the frontend's ``max_batch``)."""
 
     __slots__ = ("name", "engine", "heap", "arrivals", "n_ctx", "stats",
-                 "breaker", "fails", "opened_at")
+                 "breaker", "fails", "opened_at", "weight", "quota",
+                 "tokens", "tok_t", "credit")
 
-    def __init__(self, name, engine):
+    def __init__(self, name, engine, weight=1.0, quota=None):
         self.name = name
         self.engine = engine
         self.heap: list = []                      # (deadline|inf, seq, req)
         self.arrivals: collections.deque = collections.deque()  # FIFO view
         self.n_ctx = len(engine.cfg.layout.slots_of("context"))
         self.stats = {"submitted": 0, "completed": 0, "shed": 0,
-                      "failed": 0, "trips": 0}
+                      "failed": 0, "trips": 0, "quota_deferred": 0}
         self.breaker = "closed"                   # closed|open|half_open
         self.fails = 0                            # consecutive exhausted
         self.opened_at = None                     # frontend-clock stamp
+        self.weight = float(weight)               # SWRR share
+        self.quota = None if quota is None else float(quota)
+        self.tokens = 0.0                         # earned from tok_t on
+        self.tok_t = None                         # last refill stamp
+        self.credit = 0.0                         # SWRR running credit
 
 
 class QueryFrontend:
@@ -345,6 +383,13 @@ class QueryFrontend:
     pressure_k : int | None
         The clamped K (required with ``pressure_depth``; must be
         ``<= max_k`` so the clamped bucket is already warm).
+    autoscale_high : float | None
+        Slab-occupancy high-water mark in (0, 1]: each pump tick asks
+        every lane's state to ``maybe_autoscale`` (proactive double via
+        the churn ``_grow`` path) once ``n_items / capacity`` reaches
+        it.  Costs one trace per NEW capacity — paid at a pump tick,
+        not inside a hot-path ``add_items``.  ``None`` (default)
+        disables autoscaling.
     fault_injector : FaultInjector | None
         Chaos hook: an armed injector's ``dispatch``/``resolve``/``pump``
         sites fire inside this frontend (see ``repro.serving.faults``).
@@ -360,7 +405,9 @@ class QueryFrontend:
                  breaker_threshold: int | None = None,
                  breaker_cooldown: float = 0.05,
                  pressure_depth: int | None = None,
-                 pressure_k: int | None = None, fault_injector=None):
+                 pressure_k: int | None = None,
+                 autoscale_high: float | None = None,
+                 fault_injector=None):
         if max_batch < 1 or max_batch & (max_batch - 1):
             raise ValueError(f"max_batch must be a power of two, "
                              f"got {max_batch}")
@@ -380,6 +427,9 @@ class QueryFrontend:
         if pressure_k is not None and not 1 <= pressure_k <= max_k:
             raise ValueError(f"pressure_k={pressure_k} outside "
                              f"[1, max_k={max_k}]")
+        if autoscale_high is not None and not 0.0 < autoscale_high <= 1.0:
+            raise ValueError(f"autoscale_high={autoscale_high} outside "
+                             f"(0, 1]")
         self.max_batch = max_batch
         self.max_k = max_k
         self.max_wait = float(max_wait)
@@ -394,11 +444,11 @@ class QueryFrontend:
         self.breaker_cooldown = float(breaker_cooldown)
         self.pressure_depth = pressure_depth
         self.pressure_k = pressure_k
+        self.autoscale_high = autoscale_high
         self._injector = fault_injector
         self._rng = np.random.default_rng(0)     # retry jitter (seeded)
         self._closed = False
         self._lanes: dict[str, _TenantLane] = {}
-        self._rr = 0                 # round-robin cursor over lane order
         self._seq = 0                # global FIFO tie-break for EDF
         self._svc = None             # EWMA batch service time (seconds)
         self._window: collections.deque[_InFlight] = collections.deque()
@@ -423,7 +473,8 @@ class QueryFrontend:
                       "failed": 0, "shed": 0, "dispatches": 0,
                       "dispatched_rows": 0, "padded_rows": 0, "drains": 0,
                       "retries": 0, "degraded": 0, "clamped": 0,
-                      "pump_restarts": 0, "pump_errors": 0}
+                      "pump_restarts": 0, "pump_errors": 0,
+                      "autoscales": 0}
         self.last_pump_error: BaseException | None = None
         if hasattr(engines, "topk"):         # single engine, classic API
             engines = {"default": engines}
@@ -432,28 +483,61 @@ class QueryFrontend:
 
     # -- tenant management --------------------------------------------------
 
-    def add_tenant(self, name: str, engine) -> None:
+    def add_tenant(self, name: str, engine, *, weight: float = 1.0,
+                   quota: float | None = None) -> None:
         """Register a tenant lane and install its writer barrier
         (``engine.on_mutate`` -> drain THIS tenant only).  The new tenant
         serves with zero retraces if its state's shape signature —
-        runtime + capacity — is already warm."""
+        runtime + capacity — is already warm.
+
+        ``weight`` is the lane's SWRR share of cross-tenant dispatch
+        turns (default 1.0 = equal); ``quota`` is an optional QPS cap
+        (token bucket, burst ``max_batch``) the pump scheduler honors —
+        a fresh lane starts with an empty bucket and earns tokens from
+        registration time on."""
+        if weight <= 0.0:
+            raise ValueError(f"weight must be > 0, got {weight}")
+        if quota is not None and quota <= 0.0:
+            raise ValueError(f"quota must be > 0 requests/s, got {quota}")
         with self._lock:
             if name in self._lanes:
                 raise ValueError(f"tenant {name!r} already registered")
-            self._lanes[name] = _TenantLane(name, engine)
+            lane = _TenantLane(name, engine, weight, quota)
+            lane.tok_t = self.clock()    # an empty bucket earns from here
+            self._lanes[name] = lane
             # the per-tenant writer barrier: any mutation of THIS state
             # drains THIS lane before touching the corpus — other
             # tenants' queues and in-flight batches are untouched
             engine.on_mutate = partial(self._drain_tenant, name)
 
+    def set_tenant_policy(self, name: str, *, weight: float | None = None,
+                          quota: float | None = None) -> None:
+        """Re-tune a live lane's scheduler share: ``weight`` replaces its
+        SWRR weight, ``quota`` its QPS cap (pass ``math.inf`` to lift a
+        cap — ``None`` means "leave unchanged" here).  Takes effect on
+        the next pump turn; queued requests are untouched."""
+        with self._lock:
+            lane = self._lane(name)
+            if weight is not None:
+                if weight <= 0.0:
+                    raise ValueError(f"weight must be > 0, got {weight}")
+                lane.weight = float(weight)
+            if quota is not None:
+                if quota <= 0.0:
+                    raise ValueError(f"quota must be > 0 requests/s, "
+                                     f"got {quota}")
+                lane.quota = None if math.isinf(quota) else float(quota)
+                lane.tokens = min(lane.tokens, float(self.max_batch))
+
     def remove_tenant(self, name: str) -> None:
         """Drain and deregister a tenant (its queued + in-flight requests
-        are answered first; the state's writer barrier is detached)."""
+        are answered first; the state's writer barrier is detached).
+        SWRR credits live on the lanes, so removal cannot skew the
+        surviving tenants' schedule."""
         with self._lock:
             self._drain_tenant(name)
             lane = self._lanes.pop(name)
             lane.engine.on_mutate = None
-            self._rr = 0
 
     @property
     def tenants(self) -> tuple:
@@ -620,20 +704,57 @@ class QueryFrontend:
 
     # -- batching policy ----------------------------------------------------
 
-    def _rotation(self) -> list[_TenantLane]:
-        lanes = list(self._lanes.values())
-        return lanes[self._rr:] + lanes[:self._rr]
+    def _has_quota(self, lane, now) -> bool:
+        """Refill the lane's token bucket to ``now`` (at ``quota``
+        tokens/s, burst-capped at ``max_batch``) and report whether it
+        can afford a scheduler turn.  No quota => always eligible."""
+        if lane.quota is None:
+            return True
+        if lane.tok_t is None:
+            lane.tok_t = now
+        dt = now - lane.tok_t
+        if dt > 0.0:
+            lane.tokens = min(float(self.max_batch),
+                              lane.tokens + dt * lane.quota)
+            lane.tok_t = now
+        return lane.tokens >= 1.0
 
-    def _pick(self, pred) -> _TenantLane | None:
-        """Next lane satisfying ``pred`` in round-robin order; advances
-        the cursor past it, so repeated picks rotate across tenants."""
-        lanes = list(self._lanes.values())
-        for i in range(len(lanes)):
-            j = (self._rr + i) % len(lanes)
-            if pred(lanes[j]):
-                self._rr = (j + 1) % len(lanes)
-                return lanes[j]
-        return None
+    def _consume_quota(self, lane, n: int) -> None:
+        """Pay ``n`` dispatched requests out of the bucket.  The balance
+        may go negative (a turn is granted on >= 1 token but a batch
+        carries up to ``max_batch`` requests); the deficit is clamped at
+        ``-max_batch`` so one burst never mortgages the lane forever."""
+        if lane.quota is not None:
+            lane.tokens = max(lane.tokens - n, -float(self.max_batch))
+
+    def _pick(self, pred, now, *,
+              respect_quota: bool = True) -> _TenantLane | None:
+        """One smooth-weighted-round-robin turn over the lanes passing
+        ``pred`` (and, on the scheduler path, holding quota tokens):
+        every candidate earns its ``weight`` in credit, the richest lane
+        wins the turn and pays back the candidates' combined weight, so
+        dispatch turns converge to the weight shares over any window —
+        with equal weights this is exactly round-robin, turn for turn.
+        Ties break by registration order.  Returns None when no lane is
+        eligible; credits persist on the lanes, so tenant removal cannot
+        skew the surviving schedule."""
+        eligible = []
+        for lane in self._lanes.values():
+            if not pred(lane):
+                continue
+            if respect_quota and not self._has_quota(lane, now):
+                lane.stats["quota_deferred"] += 1
+                continue
+            eligible.append(lane)
+        if not eligible:
+            return None
+        total = 0.0
+        for lane in eligible:
+            lane.credit += lane.weight
+            total += lane.weight
+        best = max(eligible, key=lambda ln: ln.credit)
+        best.credit -= total
+        return best
 
     def _oldest_age(self, lane, now) -> float | None:
         """Age of the lane's oldest still-queued request (arrival order —
@@ -646,25 +767,34 @@ class QueryFrontend:
 
     def pump(self, now: float | None = None) -> int:
         """Advance the frontend: dispatch every full ``max_batch`` bucket
-        (round-robin across tenants), plus each lane's partial tail once
-        its oldest request has aged past ``max_wait``.  Call this from
-        the serving loop on every arrival (and on ticks while idle);
-        non-blocking unless the in-flight window must evict.  Returns the
-        number of batches dispatched."""
+        (weighted SWRR turns across tenants, quota-gated), plus each
+        lane's partial tail once its oldest request has aged past
+        ``max_wait``.  With ``autoscale_high`` set, first give every
+        lane's slab its occupancy check.  Call this from the serving
+        loop on every arrival (and on ticks while idle); non-blocking
+        unless the in-flight window must evict.  Returns the number of
+        batches dispatched."""
         with self._lock:
             if now is None:
                 now = self.clock()
+            if self.autoscale_high is not None:
+                for lane in self._lanes.values():
+                    if lane.engine.maybe_autoscale(self.autoscale_high):
+                        self.stats["autoscales"] += 1
             n = 0
             while True:
                 lane = self._pick(
-                    lambda ln: len(ln.heap) >= self.max_batch)
+                    lambda ln: len(ln.heap) >= self.max_batch, now)
                 if lane is None:
                     break
                 self._dispatch(lane, self._take(lane, self.max_batch), now)
                 n += 1
-            for lane in self._rotation():
+            for lane in list(self._lanes.values()):
                 age = self._oldest_age(lane, now)
                 if age is not None and age >= self.max_wait:
+                    if not self._has_quota(lane, now):
+                        lane.stats["quota_deferred"] += 1
+                        continue
                     self._dispatch(lane, self._take(lane, len(lane.heap)),
                                    now)
                     n += 1
@@ -672,13 +802,17 @@ class QueryFrontend:
 
     def flush(self) -> int:
         """Dispatch everything queued on every tenant regardless of age,
-        one micro-batch per tenant per round-robin turn (still async —
-        does not resolve).  Returns the number of batches dispatched."""
+        one micro-batch per tenant per SWRR turn (still async — does not
+        resolve).  QUOTAS ARE BYPASSED: flush backs the blocking paths
+        (``result``/``drain``/``close``), where liveness beats pacing —
+        an accepted request can always be resolved.  Returns the number
+        of batches dispatched."""
         with self._lock:
             now = self.clock()
             n = 0
             while True:
-                lane = self._pick(lambda ln: len(ln.heap) > 0)
+                lane = self._pick(lambda ln: len(ln.heap) > 0, now,
+                                  respect_quota=False)
                 if lane is None:
                     break
                 self._dispatch(
@@ -788,6 +922,7 @@ class QueryFrontend:
         neither poisons its batchmates.  A dispatch that fails all its
         bounded retries fails the whole batch with ``DispatchFailed`` and
         feeds the lane's circuit breaker."""
+        self._consume_quota(lane, len(reqs))
         n_live_items = lane.engine.n_items
         live = []
         for r in reqs:
@@ -898,6 +1033,20 @@ class QueryFrontend:
             self.stats["completed"] += 1
             if lane is not None:
                 lane.stats["completed"] += 1
+
+    def resolve(self, max_batches: int | None = None) -> int:
+        """Resolve up to ``max_batches`` of the OLDEST in-flight
+        micro-batches (all of them when ``None``), blocking on their
+        device reads.  The event-loop server's tick calls this right
+        after ``pump`` so replies materialize on the tick instead of in
+        some caller's ``result()``.  Returns the number resolved."""
+        with self._lock:
+            n = 0
+            while self._window and (max_batches is None
+                                    or n < max_batches):
+                self._resolve_oldest()
+                n += 1
+            return n
 
     def _resolve_oldest(self) -> None:
         self._resolve(self._window.popleft())
@@ -1037,6 +1186,9 @@ class QueryFrontend:
                     "breaker": lane.breaker,
                     "consecutive_failures": lane.fails,
                     "trips": lane.stats["trips"],
+                    "weight": lane.weight,
+                    "quota": lane.quota,
+                    "quota_deferred": lane.stats["quota_deferred"],
                     "queued": len(lane.heap),
                     "n_items": eng.n_items,
                     "model_step": getattr(eng, "model_step", None),

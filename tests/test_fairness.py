@@ -1,0 +1,254 @@
+"""Cross-tenant fairness policy: weighted SWRR dispatch, per-tenant QPS
+quotas, and occupancy-driven slab autoscaling.
+
+The scheduler contract:
+
+  * **weights** — over a saturated interleave, smooth weighted
+    round-robin gives each tenant dispatch share proportional to its
+    weight (within ±10%; with integer-ratio weights the SWRR sequence
+    is in fact exact);
+  * **quotas** — a token-bucket QPS quota defers a lane at the pump (and
+    counts ``quota_deferred``) without ever blocking OTHER lanes, and
+    ``drain``/``flush`` bypass quotas so a starved lane's accepted work
+    still resolves;
+  * **removal** — removing a tenant mid-replay leaves the survivors'
+    alternation unskewed (no stale-credit starvation);
+  * **autoscaling** — ``CorpusState.maybe_autoscale(high)`` doubles the
+    slab when free-list occupancy crosses the watermark, and a frontend
+    with ``autoscale_high`` set triggers it from the pump tick exactly
+    once (``stats["autoscales"]``), costing one trace for the NEW
+    capacity only.
+"""
+import math
+
+import numpy as np
+import pytest
+
+import jax
+
+from repro.core.fields import uniform_layout
+from repro.data.synthetic_ctr import SyntheticCTR
+from repro.models.recsys import fwfm
+from repro.serving import (CorpusState, QueryFrontend, ScorerRuntime)
+
+MAX_K = 8
+
+
+def _base(seed=0):
+    layout = uniform_layout(5, 4, 50)
+    cfg = fwfm.FwFMConfig(layout=layout, embed_dim=8, interaction="dplr",
+                          rank=2)
+    params = fwfm.init(jax.random.PRNGKey(seed), cfg)
+    data = SyntheticCTR(layout, embed_dim=4, seed=seed)
+    return cfg, params, data
+
+
+def _tenants(cfg, params, data, names, *, n=20, capacity=32, runtime=None):
+    rt = runtime or ScorerRuntime(cfg)
+    states = {}
+    for i, name in enumerate(names):
+        q = data.ranking_query(n, 100 + i)
+        states[name] = CorpusState(cfg, q["item_ids"][0],
+                                   q["item_weights"][0],
+                                   capacity=capacity, runtime=rt)
+        states[name].refresh(params, step=0)
+    return rt, states
+
+
+def _ctx(data, s):
+    return data.context_query(s)["context_ids"]
+
+
+class FakeClock:
+    def __init__(self):
+        self.t = 0.0
+
+    def __call__(self) -> float:
+        return self.t
+
+
+def _record_order(fe) -> list:
+    """Wrap ``fe._dispatch`` so every dispatch appends its lane name —
+    the observable SWRR schedule (pump drains all full buckets in one
+    call, evicting through the window, so the order must be taped at
+    the dispatch point)."""
+    order = []
+    orig = fe._dispatch
+
+    def taped(lane, reqs, now):
+        order.append(lane.name)
+        return orig(lane, reqs, now)
+
+    fe._dispatch = taped
+    return order
+
+
+# ---------------------------------------------------------------------------
+# Weighted SWRR: dispatch share tracks weight over a saturated interleave
+# ---------------------------------------------------------------------------
+
+def test_swrr_honors_3_to_1_weights_within_tolerance():
+    cfg, params, data = _base()
+    rt, states = _tenants(cfg, params, data, ["a", "b"])
+    fe = QueryFrontend(states, max_batch=2, max_k=4, max_wait=1e9,
+                       inflight=2, auto_pump=False)
+    fe.set_tenant_policy("a", weight=3.0)
+    order = _record_order(fe)
+    for s in range(24):                    # 12 full a-buckets
+        fe.submit(_ctx(data, s), k=2, tenant="a")
+    for s in range(8):                     # 4 full b-buckets
+        fe.submit(_ctx(data, 50 + s), k=2, tenant="b")
+    fe.pump()                              # drains all 16 full buckets
+    assert len(order) == 16
+    share_a = order.count("a") / len(order)
+    assert math.isclose(share_a, 0.75, abs_tol=0.075), order
+    # the SMOOTH property: b is interleaved from the start (the SWRR
+    # period for 3:1 is a,a,b,a), never pushed to the tail
+    assert "b" in order[:4], order
+    fe.drain()
+    assert fe.health()["tenants"]["a"]["weight"] == 3.0
+    fe.close()
+
+
+def test_equal_weights_degenerate_to_exact_round_robin():
+    cfg, params, data = _base()
+    rt, states = _tenants(cfg, params, data, ["a", "b", "c"])
+    fe = QueryFrontend(states, max_batch=2, max_k=4, max_wait=1e9,
+                       inflight=2, auto_pump=False)
+    order = _record_order(fe)
+    for s in range(4):
+        for t in ["a", "b", "c"]:
+            fe.submit(_ctx(data, s), k=2, tenant=t)
+    fe.pump()
+    assert order == ["a", "b", "c", "a", "b", "c"]
+    fe.drain()
+    fe.close()
+
+
+def test_tenant_removal_midreplay_keeps_survivors_unskewed():
+    cfg, params, data = _base()
+    rt, states = _tenants(cfg, params, data, ["a", "b", "c"])
+    fe = QueryFrontend(states, max_batch=2, max_k=4, max_wait=1e9,
+                       inflight=2, auto_pump=False)
+    order = _record_order(fe)
+    for s in range(4):                     # two full buckets per tenant
+        for t in ["a", "b", "c"]:
+            fe.submit(_ctx(data, s), k=2, tenant=t)
+    fe.pump()                              # two full rotations incl. c
+    assert order == ["a", "b", "c", "a", "b", "c"], order
+    fe.drain()
+    fe.remove_tenant("c")                  # c's queue is empty: legal
+    del order[:]
+    # survivors alternate evenly — no stale-credit skew from the removal
+    for s in range(6):                     # three full buckets per tenant
+        for t in ["a", "b"]:
+            fe.submit(_ctx(data, 10 + s), k=2, tenant=t)
+    fe.pump()
+    assert order.count("a") == order.count("b") == 3, order
+    assert all(x != y for x, y in zip(order, order[1:])), order
+    fe.drain()
+    fe.close()
+
+
+# ---------------------------------------------------------------------------
+# QPS quotas: starved lanes defer without blocking others; drain bypasses
+# ---------------------------------------------------------------------------
+
+def test_quota_starved_lane_never_blocks_others_and_drain_resolves():
+    cfg, params, data = _base()
+    clock = FakeClock()
+    rt, states = _tenants(cfg, params, data, ["a", "b"])
+    fe = QueryFrontend(states, max_batch=2, max_k=4, max_wait=1e9,
+                       inflight=2, auto_pump=False, clock=clock)
+    fe.set_tenant_policy("a", quota=2.0)   # 2 requests/sec, bucket empty
+    pa = [fe.submit(_ctx(data, s), k=2, tenant="a") for s in range(4)]
+    pb = [fe.submit(_ctx(data, 50 + s), k=2, tenant="b") for s in range(4)]
+    fe.pump()                              # t=0: a has 0 tokens -> deferred
+    assert [fl.tenant for fl in fe._window] == ["b", "b"]
+    assert fe.lane_stats("a")["quota_deferred"] >= 1
+    assert fe.resolve() == 2
+    for p in pb:
+        assert p.result()[0].shape == (2,)
+    assert not any(p.done() for p in pa)   # a still parked, b fully served
+
+    clock.t = 1.0                          # bucket refills: 2 tokens
+    fe.pump()
+    assert [fl.tenant for fl in fe._window] == ["a"]
+    assert fe.resolve() == 1
+    # the second a-bucket is quota-deferred again (tokens spent) — but
+    # drain BYPASSES quotas: accepted work always resolves
+    fe.drain()
+    for p in pa:
+        assert p.result()[0].shape == (2,)
+    assert fe.health()["tenants"]["a"]["quota"] == 2.0
+    fe.close()
+
+
+def test_policy_validation_and_quota_lift():
+    cfg, params, data = _base()
+    rt, states = _tenants(cfg, params, data, ["a"])
+    fe = QueryFrontend(states, max_batch=2, max_k=4, auto_pump=False)
+    with pytest.raises(ValueError, match="weight"):
+        fe.set_tenant_policy("a", weight=0.0)
+    with pytest.raises(ValueError, match="quota"):
+        fe.set_tenant_policy("a", quota=-1.0)
+    with pytest.raises(ValueError, match="unknown tenant"):
+        fe.set_tenant_policy("ghost", weight=2.0)
+    fe.set_tenant_policy("a", quota=5.0)
+    assert fe.health()["tenants"]["a"]["quota"] == 5.0
+    fe.set_tenant_policy("a", quota=math.inf)   # lift: back to unmetered
+    assert fe.health()["tenants"]["a"]["quota"] is None
+    fe.close()
+
+
+# ---------------------------------------------------------------------------
+# Occupancy autoscaling: the slab doubles at the watermark
+# ---------------------------------------------------------------------------
+
+def test_engine_maybe_autoscale_doubles_at_watermark():
+    cfg, params, data = _base()
+    q = data.ranking_query(28, 100)
+    st = CorpusState(cfg, q["item_ids"][0], q["item_weights"][0],
+                     capacity=32)
+    with pytest.raises(ValueError, match="high"):
+        st.maybe_autoscale(1.5)
+    assert not st.maybe_autoscale(0.9)     # no cache yet: never grows
+    st.refresh(params, step=0)
+    assert st.occupancy == 28 / 32
+    assert not st.maybe_autoscale(0.95)    # below THAT watermark
+    assert st.maybe_autoscale(0.8)         # 0.875 >= 0.8: double
+    assert st.capacity == 64 and st.n_items == 28
+    assert st.occupancy == 28 / 64
+    assert not st.maybe_autoscale(0.8)     # hysteresis by construction
+
+
+def test_frontend_autoscale_high_grows_from_pump_tick():
+    cfg, params, data = _base()
+    rt, states = _tenants(cfg, params, data, ["a", "b"], n=28, capacity=32)
+    fe = QueryFrontend(states, max_batch=2, max_k=4, max_wait=1e-3,
+                       auto_pump=False, autoscale_high=0.8)
+    before = rt.trace_count
+    p = fe.submit(_ctx(data, 0), k=2, tenant="a")
+    fe.pump()                              # the tick autoscales BOTH lanes
+    fe.drain()
+    assert fe.stats["autoscales"] == 2
+    assert states["a"].capacity == 64 and states["b"].capacity == 64
+    assert p.result()[0].shape == (2,)
+    # the grow retraced for the NEW capacity (expected, once) ...
+    assert rt.trace_count > before
+    p2 = fe.submit(_ctx(data, 1), k=2, tenant="b")
+    fe.pump()
+    fe.drain()
+    assert p2.result()[0].shape == (2,)
+    assert fe.stats["autoscales"] == 2     # steady state: no more grows
+    # ... and once the buckets have served at capacity 64, identical
+    # traffic is zero-retrace again
+    for s in range(2, 6):
+        fe.submit(_ctx(data, s), k=2, tenant=["a", "b"][s % 2])
+    fe.drain()
+    snap = rt.trace_count
+    for s in range(2, 6):
+        fe.submit(_ctx(data, s), k=2, tenant=["a", "b"][s % 2])
+    fe.drain()
+    assert rt.trace_count == snap
+    fe.close()

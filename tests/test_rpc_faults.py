@@ -1,0 +1,277 @@
+"""Socket-layer chaos: the RPC server under armed faults, hostile clients,
+and a seeded storm — end to end through the frontend's recovery machinery.
+
+The contract: network failure modes stay CONNECTION-scoped and serving
+failure modes stay TYPED.  An armed ``rpc_accept``/``rpc_read``/
+``rpc_write`` fault (faults.SITES) kills at most one connection; a
+slow-loris writer or a reconnect flood never stalls a healthy neighbor;
+the PR-6 breaker semantics hold across the wire (trip -> fast
+``Degraded`` frames -> half-open probe -> recovery); and under a seeded
+dispatch-fault storm every wire request resolves to an ok frame or a
+typed error frame, survivors bit-exact, zero scorer retraces.
+"""
+import socket
+import struct
+import threading
+import time
+
+import numpy as np
+import pytest
+
+import jax
+
+from repro.core.fields import uniform_layout
+from repro.data.synthetic_ctr import SyntheticCTR
+from repro.models.recsys import fwfm
+from repro.serving import (CorpusState, Degraded, DispatchFailed,
+                           FaultInjector, QueryFrontend, RpcClient,
+                           ScorerRuntime, ServingError, serve_in_thread)
+from repro.serving.rpc import frame
+
+MAX_K = 8
+
+
+def _stack(*, tenants=("a", "b"), inj=None, **fe_kwargs):
+    layout = uniform_layout(5, 4, 50)
+    cfg = fwfm.FwFMConfig(layout=layout, embed_dim=8, interaction="dplr",
+                          rank=2)
+    params = fwfm.init(jax.random.PRNGKey(0), cfg)
+    data = SyntheticCTR(layout, embed_dim=4, seed=0)
+    runtime = ScorerRuntime(cfg)
+    states = {}
+    for i, name in enumerate(tenants):
+        q = data.ranking_query(20, 100 + i)
+        states[name] = CorpusState(cfg, q["item_ids"][0],
+                                   q["item_weights"][0], capacity=32,
+                                   runtime=runtime)
+        states[name].refresh(params, step=0)
+    fe_kwargs.setdefault("max_batch", 4)
+    fe_kwargs.setdefault("max_wait", 1e-3)
+    fe = QueryFrontend(states, max_k=MAX_K, auto_pump=False,
+                       fault_injector=inj, **fe_kwargs)
+    fe.warmup(data.context_query(0)["context_ids"], tenant=tenants[0])
+    server = serve_in_thread(fe, fault_injector=inj)
+    return fe, server, data, runtime
+
+
+def _ctx(data, s):
+    return data.context_query(s)["context_ids"]
+
+
+# ---------------------------------------------------------------------------
+# Armed socket sites: each fault costs one connection, never the server
+# ---------------------------------------------------------------------------
+
+def test_rpc_accept_fault_drops_one_dial_reconnect_lands():
+    inj = FaultInjector(seed=0)
+    fe, server, data, _ = _stack(inj=inj)
+    try:
+        inj.arm("rpc_accept", count=1)
+        # the refused dial: server closes immediately; the client sees
+        # EOF on its first read
+        with RpcClient("127.0.0.1", server.port) as refused:
+            refused.send_rank(_ctx(data, 0), k=2, tenant="a")
+            with pytest.raises(ConnectionError):
+                refused.recv()
+        assert server.stats["accept_faults"] == 1
+        # the reconnect lands on the (now spent) site and serves
+        with RpcClient("127.0.0.1", server.port) as cli:
+            assert cli.rank(_ctx(data, 0), k=2, tenant="a")[0].shape == (2,)
+    finally:
+        server.stop()
+
+
+def test_rpc_read_fault_kills_conn_neighbor_survives():
+    inj = FaultInjector(seed=0)
+    fe, server, data, _ = _stack(inj=inj)
+    try:
+        with RpcClient("127.0.0.1", server.port) as neighbor:
+            # neighbor's frame passes BEFORE the site arms
+            assert neighbor.rank(_ctx(data, 1), k=1,
+                                 tenant="b")[0].shape == (1,)
+            inj.arm("rpc_read", count=1)
+            with RpcClient("127.0.0.1", server.port) as victim:
+                victim.send_rank(_ctx(data, 0), k=2, tenant="a")
+                with pytest.raises(ConnectionError):
+                    victim.recv()          # conn died at the read probe
+            assert server.stats["read_faults"] == 1
+            # the neighbor's stream never noticed
+            assert neighbor.rank(_ctx(data, 2), k=3,
+                                 tenant="a")[0].shape == (3,)
+    finally:
+        server.stop()
+
+
+def test_rpc_write_fault_request_resolves_only_bytes_lost():
+    inj = FaultInjector(seed=0)
+    fe, server, data, _ = _stack(inj=inj)
+    try:
+        completed = fe.stats["completed"]
+        inj.arm("rpc_write", count=1)
+        with RpcClient("127.0.0.1", server.port) as victim:
+            victim.send_rank(_ctx(data, 0), k=2, tenant="a")
+            with pytest.raises(ConnectionError):
+                victim.recv()              # reply write fired the fault
+        deadline = time.monotonic() + 5.0
+        while (server.stats["write_errors"] < 1
+               and time.monotonic() < deadline):
+            time.sleep(0.01)
+        assert server.stats["write_errors"] == 1
+        # the REQUEST was not lost: the frontend completed it; only the
+        # reply bytes were undeliverable
+        assert fe.stats["completed"] == completed + 1
+        with RpcClient("127.0.0.1", server.port) as cli:
+            assert cli.rank(_ctx(data, 1), k=1, tenant="b")[0].shape == (1,)
+    finally:
+        server.stop()
+
+
+# ---------------------------------------------------------------------------
+# Hostile clients: slow-loris and a reconnect flood
+# ---------------------------------------------------------------------------
+
+def test_slow_loris_writer_never_stalls_neighbor():
+    fe, server, data, _ = _stack()
+    try:
+        loris = socket.create_connection(("127.0.0.1", server.port))
+        stop = threading.Event()
+
+        def dribble():
+            # a declared 200-byte frame fed one byte every 25 ms (~5 s):
+            # the read loop for THIS conn blocks mid-frame the whole time
+            loris.sendall(struct.pack("<I", 200))
+            for _ in range(200):
+                if stop.is_set():
+                    return
+                loris.sendall(b"\x01")
+                time.sleep(0.025)
+
+        t = threading.Thread(target=dribble, daemon=True)
+        t.start()
+        with RpcClient("127.0.0.1", server.port) as cli:
+            done = 0
+            for s in range(20):
+                sc, _ = cli.rank(_ctx(data, s), k=(s % MAX_K) + 1,
+                                 tenant=["a", "b"][s % 2])
+                assert sc.shape == ((s % MAX_K) + 1,)
+                done += 1
+            # 20 round trips completed while the loris was still
+            # dribbling its FIRST frame
+            assert done == 20 and t.is_alive()
+        stop.set()
+        loris.close()
+        t.join(timeout=5)
+    finally:
+        server.stop()
+
+
+def test_reconnect_flood_every_dial_served():
+    fe, server, data, runtime = _stack()
+    try:
+        before = runtime.trace_count
+        for i in range(30):
+            with RpcClient("127.0.0.1", server.port) as cli:
+                sc, sl = cli.rank(_ctx(data, i), k=(i % MAX_K) + 1,
+                                  tenant=["a", "b"][i % 2])
+                assert sc.shape == ((i % MAX_K) + 1,)
+        assert server.stats["connections"] >= 30
+        assert runtime.trace_count == before
+    finally:
+        server.stop()
+
+
+# ---------------------------------------------------------------------------
+# Breaker semantics hold across the wire (PR-6 end to end)
+# ---------------------------------------------------------------------------
+
+def test_breaker_trips_sheds_and_recovers_over_the_wire():
+    inj = FaultInjector(seed=0)
+    fe, server, data, _ = _stack(inj=inj, retries=0, retry_backoff=0.0,
+                                 breaker_threshold=2, breaker_cooldown=0.3)
+    try:
+        with RpcClient("127.0.0.1", server.port) as cli:
+            inj.arm("dispatch")
+            for s in range(2):             # two exhausted dispatches: trip
+                reply = cli.recv_for(cli.send_rank(_ctx(data, s), k=2,
+                                                   tenant="a"))
+                assert isinstance(reply.error, DispatchFailed)
+            assert fe.health()["tenants"]["a"]["breaker"] == "open"
+            # an open breaker sheds AT SUBMIT: a fast typed Degraded
+            # frame, no dispatch attempted
+            reply = cli.recv_for(cli.send_rank(_ctx(data, 2), k=2,
+                                               tenant="a"))
+            assert isinstance(reply.error, Degraded)
+            assert reply.error.tenant == "a"
+            # tenant b's lane is untouched by a's open breaker
+            inj.clear()
+            assert cli.rank(_ctx(data, 3), k=2, tenant="b")[0].shape == (2,)
+            # cooldown elapses; the next wire request is the half-open
+            # probe and its success closes the breaker
+            time.sleep(0.35)
+            assert cli.rank(_ctx(data, 4), k=2, tenant="a")[0].shape == (2,)
+            assert fe.health()["tenants"]["a"]["breaker"] == "closed"
+            assert fe.lane_stats("a")["trips"] == 1
+    finally:
+        server.stop()
+
+
+# ---------------------------------------------------------------------------
+# Seeded storm: every wire request resolves ok-or-typed, survivors exact
+# ---------------------------------------------------------------------------
+
+def test_dispatch_storm_every_wire_request_resolves_typed():
+    inj = FaultInjector(seed=7)
+    fe, server, data, runtime = _stack(inj=inj, retries=1,
+                                       retry_backoff=1e-4)
+    try:
+        rng = np.random.default_rng(7)
+        n = 60
+        reqs = [(s, int(rng.integers(1, MAX_K + 1)), ["a", "b"][s % 2])
+                for s in range(n)]
+        before = runtime.trace_count
+        # rate 0.5 with one retry: a batch fails typed at p=0.25, so the
+        # seeded storm reliably produces BOTH survivors and typed errors
+        inj.arm("dispatch", rate=0.5)
+        replies = {}
+        with RpcClient("127.0.0.1", server.port) as cli:
+            rids = {cli.send_rank(_ctx(data, s), k=k, tenant=t): s
+                    for s, k, t in reqs}
+            for rid, s in rids.items():
+                replies[s] = cli.recv_for(rid)
+        inj.clear()
+        ok = sum(1 for r in replies.values() if r.ok)
+        typed = sum(1 for r in replies.values()
+                    if not r.ok and isinstance(r.error, ServingError))
+        assert ok + typed == n             # nothing dropped, nothing untyped
+        assert typed > 0 and ok > 0        # the storm bit, but not fatally
+        assert runtime.trace_count == before
+        # survivors are bit-exact vs the fault-free in-process path
+        for s, k, t in reqs:
+            if not replies[s].ok:
+                continue
+            wv, wi = fe.submit(_ctx(data, s), k=k, tenant=t).result()
+            np.testing.assert_array_equal(replies[s].scores, np.asarray(wv))
+            np.testing.assert_array_equal(replies[s].slots, np.asarray(wi))
+    finally:
+        server.stop()
+
+
+def test_unparseable_frame_during_storm_is_isolated():
+    """A framing-level attack mid-storm: the garbage stream dies alone;
+    pipelined requests on a healthy conn all resolve."""
+    inj = FaultInjector(seed=3)
+    fe, server, data, _ = _stack(inj=inj, retries=1, retry_backoff=1e-4)
+    try:
+        inj.arm("dispatch", rate=0.2)
+        with RpcClient("127.0.0.1", server.port) as cli:
+            rids = [cli.send_rank(_ctx(data, s), k=2, tenant="a")
+                    for s in range(10)]
+            bad = socket.create_connection(("127.0.0.1", server.port))
+            bad.sendall(struct.pack("<I", 0))      # zero-length frame
+            bad.close()
+            for rid in rids:
+                reply = cli.recv_for(rid)
+                assert reply.ok or isinstance(reply.error, ServingError)
+        assert server.stats["protocol_errors"] >= 1
+    finally:
+        server.stop()

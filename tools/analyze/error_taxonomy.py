@@ -20,6 +20,13 @@ map so chaos scenarios and production probes stay in sync.
                     member of the documented site map
                     (``faults.SITES`` / docs/robustness.md) — an
                     unmapped probe is a probe no scenario can arm.
+    ERR-WIRE        a module that declares a wire-code table (a
+                    module-level ``WIRE_ERRORS`` str-key dict) must
+                    cover the ENTIRE ServingError closure — a taxonomy
+                    class missing from the table would cross the
+                    network as the generic base and stop being
+                    catchable by type on the client.  Files without
+                    the dict are skipped.
 """
 from __future__ import annotations
 
@@ -48,12 +55,37 @@ def _scope_names(fn) -> set[str]:
     return names
 
 
+def _wire_error_keys(tree: ast.AST) -> tuple[set[str], int] | None:
+    """(string keys, lineno) of a module-level ``WIRE_ERRORS`` dict
+    literal, or ``None`` when the module declares no wire-code table."""
+    for node in tree.body:
+        if isinstance(node, ast.Assign) and any(
+                isinstance(t, ast.Name) and t.id == "WIRE_ERRORS"
+                for t in node.targets):
+            if isinstance(node.value, ast.Dict):
+                return ({k.value for k in node.value.keys
+                         if isinstance(k, ast.Constant)
+                         and isinstance(k.value, str)}, node.lineno)
+    return None
+
+
 def run(files: list[SourceFile], env) -> list[Finding]:
     findings: list[Finding] = []
     allowed = set(env.allowed_builtins)
     serving = set(env.serving_errors)
 
     for sf in files:
+        wire = _wire_error_keys(sf.tree)
+        if wire is not None:
+            keys, lineno = wire
+            missing = serving - keys
+            if missing:
+                findings.append(Finding(
+                    "ERR-WIRE", "error", sf.rel, lineno,
+                    f"WIRE_ERRORS is missing taxonomy classes "
+                    f"{', '.join(sorted(missing))} — they would cross "
+                    f"the wire untyped (as the ServingError base)"))
+
         # map each raise to its innermost enclosing function (for the
         # tenant-scope check)
         owner: dict[int, ast.AST] = {}

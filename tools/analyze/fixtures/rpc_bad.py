@@ -1,0 +1,25 @@
+# expect: ERR-TYPE ERR-TENANT ERR-BARE ERR-FAULT-SITE ERR-WIRE
+"""Known-bad fixture for the error_taxonomy pack's RPC-era rules
+(self-test input only; names are intentionally undefined — the pack
+reads the AST, it never imports this file).
+
+The wire-code table below forgets most of the taxonomy: every missing
+class would cross the network as the generic base and stop being
+catchable by type on the client — ERR-WIRE."""
+
+WIRE_ERRORS = {
+    "Overloaded": 1,
+    "DeadlineExceeded": 2,
+    # ERR-WIRE: the rest of the ServingError closure is absent
+}
+
+
+def handle_frame(tenant, payload, injector):
+    injector.check("rpc_teleport")          # ERR-FAULT-SITE (unmapped)
+    try:
+        return decode(payload)              # noqa: F821
+    except Exception:
+        pass                                # ERR-BARE (swallowed)
+    if not payload:
+        raise Unservable("empty frame")     # noqa: F821  ERR-TENANT
+    raise ConnectionError("peer gone")      # ERR-TYPE (untyped failure)

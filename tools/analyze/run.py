@@ -59,6 +59,7 @@ FIXTURES = {
     "kernel_bad.py": "kernel_contract",
     "metrics_bad.py": "kernel_contract",
     "error_bad.py": "error_taxonomy",
+    "rpc_bad.py": "error_taxonomy",
 }
 
 
