@@ -7,7 +7,7 @@ per corpus: T trace caches, T warmup passes, and a recompilation stall
 every time a tenant comes online.  The refactored stack shares ONE
 ``ScorerRuntime`` (jit dispatch + trace cache, keyed by shape+dtype)
 across per-tenant ``CorpusState`` slabs behind a tenant-routed
-``QueryFrontend``.  Three claims, each a hard CI gate:
+``QueryFrontend``.  Four claims, each a hard CI gate:
 
   * **parity** — a tenant on the shared runtime returns bit-exact scores
     and top-K vs a dedicated single-tenant engine over the same corpus
@@ -19,7 +19,13 @@ across per-tenant ``CorpusState`` slabs behind a tenant-routed
     burst at every arrival, through the frontend's writer wrappers),
     tenant B's reply p99 stays within 2x its quiet baseline: the
     PER-TENANT writer barrier drains only A's in-flight batches, so A's
-    churn never force-resolves or flushes B's micro-batches.
+    churn never force-resolves or flushes B's micro-batches;
+  * **fused dispatch** — at 16 tenants x Bq=4 (the many-tenants/
+    small-batches regime where per-dispatch overhead dominates),
+    ``pack=True`` fuses each wave's 16 micro-batches into ONE
+    ``fused_topk`` launch and delivers >= 1.5x the aggregate throughput
+    of one-dispatch-per-tenant, with every reply bit-exact vs the
+    unpacked frontend and ZERO retraces across the timed waves.
 
 Method: fixed arrival pacing at 1.5x the measured Bq=1 dispatch time
 (steady, below saturation), latency = completion minus submit, p99 over
@@ -33,6 +39,8 @@ Output lines:
     multitenant: parity,T=<t>,checked=<n>,<ok|FAIL>
     multitenant: traces,T=1:<n>;T=4:<n>;T=16:<n>,<flat|RETRACED>
     multitenant: isolation,quiet_p99_ms=<q>,storm_p99_ms=<s>,ratio=<r>,<ok|FAIL>
+    multitenant: packed,T=16,Bq=4,reqs=<n>,unpacked_qps=<u>,packed_qps=<p>,
+                 speedup=<r>x,fused=<f>,mean_group=<g>,<ok|FAIL>
 The driver exits nonzero unless every line ends ``ok``/``flat``.
 """
 from __future__ import annotations
@@ -77,6 +85,74 @@ def _check_parity(cfg, params, data, states, corpora, capacity, ctxs):
                    and np.array_equal(gi, wi))
             checked += 1
     return checked, ok
+
+
+def _packed_throughput(cfg, params, data, ctxs, quick):
+    """(d) fused multi-tenant dispatch: 16 tenants x Bq=4 waves through
+    a ``pack=True`` frontend vs the identical sequence through a classic
+    one-dispatch-per-tenant frontend.  Returns (unpacked_qps, packed_qps,
+    speedup, fused_dispatches, mean_group, bitexact, traces_flat)."""
+    import time as _time
+
+    from repro.serving import CorpusState, QueryFrontend, ScorerRuntime
+    from repro.serving.corpus import next_pow2
+
+    T, bq, kk = 16, 4, 8
+    n = 256
+    capacity = next_pow2(2 * n)
+    waves = 6 if quick else 16
+
+    def build(pack):
+        rt = ScorerRuntime(cfg)
+        states = {}
+        for i in range(T):
+            q = data.ranking_query(n, 1000 + i)
+            st = CorpusState(cfg, q["item_ids"][0], q["item_weights"][0],
+                             capacity=capacity, runtime=rt)
+            st.refresh(params, step=0)
+            states[f"t{i}"] = st
+        fe = QueryFrontend(states, max_batch=bq, max_k=kk,
+                           auto_pump=False, pack=pack, pack_max=T)
+        fe.warmup(ctxs[0], tenant="t0")
+        if pack:
+            fe.warmup_packed(ctxs[0], tenant="t0", s_counts=[T])
+        return rt, fe
+
+    def run(fe, n_waves):
+        res = []
+        for w in range(n_waves):
+            pend = []
+            for i in range(T):
+                for j in range(bq):
+                    s = (w * T * bq + i * bq + j) % len(ctxs)
+                    pend.append(fe.submit(ctxs[s], k=kk, tenant=f"t{i}"))
+            fe.pump()
+            fe.resolve()
+            res.extend(p.result() for p in pend)
+        return res
+
+    rt_p, fe_p = build(True)
+    rt_u, fe_u = build(False)
+    run(fe_p, 2)                                  # warm the leg path
+    run(fe_u, 2)
+    tc_p, tc_u = rt_p.trace_count, rt_u.trace_count
+    t0 = _time.perf_counter()
+    rows_p = run(fe_p, waves)
+    t_packed = _time.perf_counter() - t0
+    t0 = _time.perf_counter()
+    rows_u = run(fe_u, waves)
+    t_unpacked = _time.perf_counter() - t0
+    flat = rt_p.trace_count == tc_p and rt_u.trace_count == tc_u
+    exact = all(
+        np.array_equal(np.asarray(a[0]), np.asarray(b[0]))
+        and np.array_equal(np.asarray(a[1]), np.asarray(b[1]))
+        for a, b in zip(rows_p, rows_u))
+    nreq = waves * T * bq
+    packing = fe_p.health()["packing"]
+    fe_p.close()
+    fe_u.close()
+    return (nreq / t_unpacked, nreq / t_packed, t_unpacked / t_packed,
+            packing["fused_dispatches"], packing["mean_group"], exact, flat)
 
 
 def main(quick: bool = False) -> None:
@@ -196,10 +272,22 @@ def main(quick: bool = False) -> None:
           f"storm_p99_ms={storm:.2f},ratio={ratio:.2f},"
           f"{'ok' if iso_ok else 'FAIL'}", flush=True)
 
-    if not (flat and ok and iso_ok):
+    # -- (d) fused multi-tenant dispatch throughput --------------------------
+    (u_qps, p_qps, speedup, fused, mean_group, pk_exact,
+     pk_flat) = _packed_throughput(cfg, params, data, ctxs, quick)
+    pk_ok = speedup >= 1.5 and pk_exact and pk_flat and fused > 0
+    print(f"multitenant: packed,T=16,Bq=4,reqs={16 * 4 * (6 if quick else 16)},"
+          f"unpacked_qps={u_qps:.0f},packed_qps={p_qps:.0f},"
+          f"speedup={speedup:.2f}x,fused={fused},"
+          f"mean_group={mean_group:.1f},"
+          f"{'ok' if pk_ok else 'FAIL'}", flush=True)
+
+    if not (flat and ok and iso_ok and pk_ok):
         raise SystemExit(
             "multitenant invariants violated: "
-            f"traces_flat={flat} parity={ok} isolation={iso_ok}")
+            f"traces_flat={flat} parity={ok} isolation={iso_ok} "
+            f"packed(speedup={speedup:.2f}x,exact={pk_exact},"
+            f"flat={pk_flat})={pk_ok}")
 
 
 if __name__ == "__main__":

@@ -46,6 +46,14 @@ BENCHMARKS: dict[str, tuple[str, str]] = {
         "Roofline: per-device compute/memory/collective bounds for every "
         "(arch x shape x mesh) cell from the dry-run HLO artifacts",
     ),
+    "kernel_autotune": (
+        "benchmarks.kernel_autotune",
+        "Kernel autotuner gate: the tuned dplr_corpus_score tile beats "
+        "the fixed default on a CI-reachable shape cell with ref-oracle "
+        "parity on every swept (block_n, acc_dtype) configuration, the "
+        "block_n=None resolution path returns the registered winner "
+        "bit-exactly, and an oversized candidate clamps visibly",
+    ),
     "serving": (
         "benchmarks.serving_engine",
         "Corpus-cached serving engine vs per-query Algorithm 1: per-query "
@@ -70,8 +78,9 @@ BENCHMARKS: dict[str, tuple[str, str]] = {
         "benchmarks.multitenant",
         "Multi-tenant serving: per-tenant bit-exact parity vs dedicated "
         "engines, flat trace count from 1 to 16 tenants on one shared "
-        "ScorerRuntime, and tenant-B p99 isolation under a tenant-A "
-        "churn storm",
+        "ScorerRuntime, tenant-B p99 isolation under a tenant-A churn "
+        "storm, and fused packed dispatch at >= 1.5x the aggregate "
+        "throughput of one-dispatch-per-tenant at 16 tenants",
     ),
     "fault_recovery": (
         "benchmarks.fault_recovery",

@@ -1,7 +1,7 @@
 """Roofline analysis (deliverable g): derive the three per-device roofline
 terms for every (arch x shape x mesh) cell from the dry-run artifacts.
 
-    compute    = HLO_FLOPs / peak_FLOPs            (197 TFLOP/s bf16, v5e)
+    compute    = HLO_FLOPs / peak_FLOPs            (e.g. 197 TFLOP/s, v5e)
     memory     = HLO_bytes / HBM_bw                (819 GB/s)
     collective = collective_bytes / link_bw        (50 GB/s/link ICI)
 
@@ -9,18 +9,45 @@ All inputs are PER-DEVICE (the compiled HLO is the per-device program;
 launch/hlo_cost.py multiplies while-loop trip counts, which XLA's own
 cost_analysis does not).  The bottleneck is the max term; the "useful
 fraction" MODEL_FLOPS / HLO_FLOPs exposes remat/dispatch/masking waste.
+
+The per-chip peak numbers come from the NAMED hardware-profile table in
+``repro.kernels.autotune.HW_PROFILES`` — one source shared with the
+kernel autotuner — selected by ``--hw`` (default v5e).  The module-level
+``PEAK_FLOPS``/``HBM_BW``/``ICI_BW`` names remain as the active
+profile's bindings for backward compatibility; ``set_hw`` rebinds them.
 """
 from __future__ import annotations
 
 import glob
 import json
 import os
+import sys
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
 
 import numpy as np
 
-PEAK_FLOPS = 197e12        # bf16 per chip
-HBM_BW = 819e9             # bytes/s per chip
-ICI_BW = 50e9              # bytes/s per link (conservative: 1 link)
+from repro.kernels.autotune import DEFAULT_HW, HW_PROFILES
+
+# Active-profile bindings (back-compat names; see set_hw).
+PEAK_FLOPS = HW_PROFILES[DEFAULT_HW]["peak_flops"]   # bf16 per chip
+HBM_BW = HW_PROFILES[DEFAULT_HW]["hbm_bw"]           # bytes/s per chip
+ICI_BW = HW_PROFILES[DEFAULT_HW]["ici_bw"]           # bytes/s per link
+ACTIVE_HW = DEFAULT_HW
+
+
+def set_hw(name: str) -> None:
+    """Select the active hardware profile (rebinds the module constants
+    every term below reads)."""
+    global PEAK_FLOPS, HBM_BW, ICI_BW, ACTIVE_HW
+    if name not in HW_PROFILES:
+        raise ValueError(f"unknown hw profile {name!r}; "
+                         f"have {sorted(HW_PROFILES)}")
+    prof = HW_PROFILES[name]
+    PEAK_FLOPS = prof["peak_flops"]
+    HBM_BW = prof["hbm_bw"]
+    ICI_BW = prof["ici_bw"]
+    ACTIVE_HW = name
 
 RESULTS_DIR = os.path.join(os.path.dirname(__file__), "..", "results",
                            "dryrun")
@@ -190,7 +217,12 @@ def render_markdown(rows) -> str:
     return "\n".join(out)
 
 
-def main(quick: bool = False):
+def main(quick: bool = False, hw: str | None = None):
+    if hw is not None:
+        set_hw(hw)
+    print(f"roofline: hw profile {ACTIVE_HW} "
+          f"(peak {PEAK_FLOPS/1e12:.0f} TFLOP/s, HBM {HBM_BW/1e9:.0f} "
+          f"GB/s, ICI {ICI_BW/1e9:.0f} GB/s)")
     rows = load_all("single")
     if not rows:
         print("roofline: no dry-run records found — run "
@@ -211,4 +243,11 @@ def main(quick: bool = False):
 
 
 if __name__ == "__main__":
-    main()
+    import argparse
+
+    ap = argparse.ArgumentParser(description=__doc__.splitlines()[0])
+    ap.add_argument("--hw", choices=sorted(HW_PROFILES), default=DEFAULT_HW,
+                    help="hardware profile for the peak numbers "
+                         f"(default: {DEFAULT_HW})")
+    args = ap.parse_args()
+    main(hw=args.hw)

@@ -15,6 +15,22 @@ Conventions: all helpers target either a 1-D grid over tiles of axis 0
 attention ``(B, KV, n_q, n_k)`` grid (``attn_tiles``), or the
 scalar-prefetch gather grid (``prefetch_*``).  Tile-size defaults live
 here as module constants.
+
+Two tile-size services beyond the static defaults:
+
+  * **clamp events** — ``clamp_tile`` no longer shrinks a tile silently:
+    every clamp is recorded (trace-time Python side effect, like the
+    runtime's ``trace_count``) and drainable via ``drain_clamp_events``,
+    so the autotuner and benchmarks can report requested-vs-effective
+    tile divergence instead of hiding it (the "no silent caps" rule).
+  * **tuned-tile registry** — ``kernels/autotune.py`` registers the
+    winning ``(block_n, acc_dtype)`` per parity-gated shape cell via
+    ``register_tuned_tile``; ``corpus_tile`` is the lookup every call
+    site that passes ``block_n=None`` resolves through (exact cell
+    first, then the newest winner for the same ``(n, rho, k, dtype,
+    backend)``, then ``CORPUS_TILE_N``).  Lookups happen at TRACE time
+    inside the jitted callers, so tuning must run before warmup to take
+    effect — a registry change never retraces an already-warm shape.
 """
 from __future__ import annotations
 
@@ -29,11 +45,79 @@ ITEM_TILE_N = 1024      # dplr_score_items: item-axis tile of (n, mI, k)
 PAIRWISE_TILE_B = 512   # fwfm_pairwise: example-axis tile of (B, m, k)
 ATTN_TILE = 128         # flash_attention: q/k row tile (MXU lane width)
 
+# Bounded log of tile clamps (requested > axis length).  Appended at
+# trace time by clamp_tile; drained by the autotuner / benchmarks.
+_CLAMP_EVENTS: list[dict] = []
+_CLAMP_EVENTS_MAX = 256
+
 
 def clamp_tile(tile: int, n: int) -> int:
     """Shrink a default tile to the axis length (tiny inputs trace a
-    single-step grid instead of over-padding)."""
-    return min(tile, n)
+    single-step grid instead of over-padding).  Never silent: each clamp
+    is recorded for ``drain_clamp_events`` readers."""
+    clamped = min(tile, n)
+    if clamped != tile and len(_CLAMP_EVENTS) < _CLAMP_EVENTS_MAX:
+        _CLAMP_EVENTS.append(
+            {"requested": int(tile), "effective": int(clamped),
+             "n": int(n)})
+    return clamped
+
+
+def drain_clamp_events() -> list[dict]:
+    """Return and clear the recorded clamp events (bounded at
+    ``_CLAMP_EVENTS_MAX``): ``{"requested", "effective", "n"}`` dicts in
+    occurrence order."""
+    out = list(_CLAMP_EVENTS)
+    _CLAMP_EVENTS.clear()
+    return out
+
+
+# -- tuned-tile registry (written by kernels/autotune.py) -------------------
+
+# exact cell (n, rho, k, Bq, K, dtype, backend) -> (block_n, acc_dtype)
+_TUNED_TILES: dict[tuple, tuple[int, str]] = {}
+# newest winner per shape family (n, rho, k, dtype, backend), used when a
+# call's (Bq, K) cell was never tuned directly
+_TUNED_FAMILY: dict[tuple, tuple[int, str]] = {}
+
+
+def tile_cell(n: int, rho: int, k: int, Bq: int, K: int | None,
+              dtype: str, backend: str) -> tuple:
+    """The registry key of one autotuned shape cell."""
+    return (int(n), int(rho), int(k), int(Bq),
+            None if K is None else int(K), str(dtype), str(backend))
+
+
+def register_tuned_tile(cell: tuple, block_n: int,
+                        acc_dtype: str = "float32") -> None:
+    """Record a parity-gated autotune winner for ``cell`` (a
+    ``tile_cell`` tuple).  Only ``kernels/autotune.py`` should call this,
+    and only AFTER the candidate passed its oracle parity gate — the
+    KRN-TUNE analyzer rule enforces that pairing statically."""
+    cell = tuple(cell)
+    winner = (int(block_n), str(acc_dtype))
+    _TUNED_TILES[cell] = winner
+    _TUNED_FAMILY[cell[:3] + cell[5:]] = winner
+
+
+def corpus_tile(n: int, rho: int, k: int, Bq: int, K: int | None,
+                dtype: str, backend: str) -> tuple[int, str]:
+    """Resolve the ``(block_n, acc_dtype)`` a ``block_n=None`` corpus-
+    scorer call should use: the exact tuned cell if registered, else the
+    newest winner of the same ``(n, rho, k, dtype, backend)`` family,
+    else ``(CORPUS_TILE_N, 'float32')`` — so untuned processes behave
+    exactly as before."""
+    cell = tile_cell(n, rho, k, Bq, K, dtype, backend)
+    hit = _TUNED_TILES.get(cell)
+    if hit is None:
+        hit = _TUNED_FAMILY.get(cell[:3] + cell[5:])
+    return hit if hit is not None else (CORPUS_TILE_N, "float32")
+
+
+def clear_tuned_tiles() -> None:
+    """Drop every registered tuned tile (tests / benchmark hygiene)."""
+    _TUNED_TILES.clear()
+    _TUNED_FAMILY.clear()
 
 
 def pad_amount(n: int, tile: int) -> int:

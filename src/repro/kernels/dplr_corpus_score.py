@@ -45,6 +45,25 @@ compare them; ``index_offset``/``index_stride`` relabel row ``i`` of the
 local slice as ``index_offset + index_stride * i`` inside the running
 top-K (striped slot ownership uses ``offset=shard, stride=D``; the
 single-device engine keeps the identity labeling 0,1,2,...).
+
+Accumulation dtype: ``acc_dtype='bfloat16'`` runs the O(Bq n rho k)
+eigen-weighted square-sum reduction in bf16 (halving the MXU/VPU input
+traffic where the slab dtype already sacrificed the precision) and
+upcasts to f32 BEFORE masking and the running top-K merge, so sentinel
+comparisons and tie-breaking stay exact.  The default ``'float32'`` is
+byte-identical to the historical kernel.  The autotuner sweeps this
+knob only for bf16 slabs; scores are tolerance-gated, not bit-exact.
+
+Multi-segment mode: ``dplr_corpus_score_multi`` scores S tenants'
+micro-batches in ONE launch.  The per-segment corpus slabs concatenate
+on the item axis (each padded to a whole number of tiles), the S
+micro-batches stack into one (S*Bq, ...) context block, and a static
+per-tile ``(q_off, q_len, row_base)`` table tells each grid step which
+query rows its tile's segment owns: rows outside the window are pinned
+to NEG_INF before the running top-K merge, so a segment's top-K can
+NEVER surface a neighbor segment's slot, and emitted indices are
+segment-LOCAL (``row_base`` restarts at 0 per segment) relabeled by the
+same ``index_offset``/``index_stride`` rule as the single-tenant mode.
 """
 from __future__ import annotations
 
@@ -59,27 +78,37 @@ from repro.kernels import blocks
 NEG_INF = -1e30
 
 
-def _tile_scores(q, a_i, e, pc, a_c, m):
+def _einsum_acc(spec, pp, e, acc_dtype):
+    """The eigen-weighted reduction, in the requested accumulation dtype
+    (f32 path untouched — bit-identical to the historical kernel)."""
+    if acc_dtype == jnp.float32:
+        return jnp.einsum(spec, pp, e)
+    return jnp.einsum(spec, pp.astype(acc_dtype),
+                      e.astype(acc_dtype)).astype(jnp.float32)
+
+
+def _tile_scores(q, a_i, e, pc, a_c, m, acc_dtype=jnp.float32):
     """(Bq, block_n) scores for one item tile.  All operands f32 in VMEM;
     ``m`` is the tile's (block_n,) {0,1} validity mask — dead slots are
     pinned to exactly NEG_INF so they can never win a top-K slot."""
     # p: (Bq, bn, rho, k) — direct fused form, same reduction order as the
     # jnp reference so corpus-cached parity stays at float32 epsilon.
     p = pc[:, None, :, :] + q[None, :, :, :]
-    term_e = jnp.einsum("qnrk,r->qn", p * p, e)
+    term_e = _einsum_acc("qnrk,r->qn", p * p, e, acc_dtype)
     s = a_c[:, None] + a_i[None, :] + 0.5 * term_e
     return jnp.where((m != 0)[None, :], s, NEG_INF)
 
 
-def _kernel_full(q_ref, a_ref, e_ref, pc_ref, ac_ref, m_ref, out_ref):
+def _kernel_full(q_ref, a_ref, e_ref, pc_ref, ac_ref, m_ref, out_ref, *,
+                 acc_dtype):
     out_ref[...] = _tile_scores(
         q_ref[...], a_ref[:, 0], e_ref[:, 0], pc_ref[...], ac_ref[:, 0],
-        m_ref[:, 0])
+        m_ref[:, 0], acc_dtype)
 
 
 def _kernel_topk(q_ref, a_ref, e_ref, pc_ref, ac_ref, m_ref, off_ref,
                  val_ref, idx_ref, *, block_n: int, topk: int,
-                 index_stride: int):
+                 index_stride: int, acc_dtype):
     i = pl.program_id(0)
 
     @pl.when(i == 0)
@@ -89,7 +118,7 @@ def _kernel_topk(q_ref, a_ref, e_ref, pc_ref, ac_ref, m_ref, off_ref,
 
     scores = _tile_scores(
         q_ref[...], a_ref[:, 0], e_ref[:, 0], pc_ref[...], ac_ref[:, 0],
-        m_ref[:, 0])
+        m_ref[:, 0], acc_dtype)
     # row r of this tile is local slot i*block_n + r; the emitted index is
     # its caller-defined global label off + stride * local.
     tile_idx = off_ref[0, 0] + index_stride * (
@@ -103,7 +132,7 @@ def _kernel_topk(q_ref, a_ref, e_ref, pc_ref, ac_ref, m_ref, off_ref,
 
 @functools.partial(jax.jit,
                    static_argnames=("topk", "block_n", "interpret",
-                                    "index_stride"))
+                                    "index_stride", "acc_dtype"))
 def dplr_corpus_score(
     Q_I: jax.Array,    # (n, rho, k)  precomputed item projections
     a_I: jax.Array,    # (n,)         per-item scalar (lin_I + 0.5 * t_I)
@@ -117,6 +146,7 @@ def dplr_corpus_score(
     interpret: bool = False,
     index_offset: jax.Array | int = 0,
     index_stride: int = 1,
+    acc_dtype: str = "float32",
 ):
     """Corpus-cached batched scorer.  Returns ``(Bq, n)`` scores (dead
     slots exactly ``NEG_INF``), or with ``topk=K`` the fused ``((Bq, K)
@@ -126,9 +156,15 @@ def dplr_corpus_score(
     ``i`` reports as ``index_offset + index_stride * i`` (used by the
     sharded slab, whose shard ``s`` of ``D`` owns the striped global slots
     ``s, s + D, s + 2D, ...``).  ``index_offset`` may be traced (e.g. an
-    ``axis_index`` inside ``shard_map``); the stride is static."""
+    ``axis_index`` inside ``shard_map``); the stride is static.
+
+    ``acc_dtype``: accumulation dtype of the rank-space reduction
+    (``'float32'`` default = historical bit-exact path; ``'bfloat16'``
+    trades the reduction's precision for bandwidth — autotuner-gated,
+    tolerance-bounded vs the oracle, never used on f32 slabs)."""
     n, rho, k = Q_I.shape
     Bq = P_C.shape[0]
+    acc = jnp.dtype(acc_dtype)
     Q_I = Q_I.astype(jnp.float32)
     a_I = a_I.astype(jnp.float32)
     e = e.astype(jnp.float32)
@@ -158,7 +194,7 @@ def dplr_corpus_score(
 
     if topk is None:
         return pl.pallas_call(
-            _kernel_full,
+            functools.partial(_kernel_full, acc_dtype=acc),
             grid=grid,
             in_specs=in_specs,
             out_specs=blocks.col_tiles(Bq, block_n),
@@ -172,7 +208,7 @@ def dplr_corpus_score(
     in_specs = in_specs + [blocks.broadcast(1, 1)]
     args = args + (off,)
     kernel = functools.partial(_kernel_topk, block_n=block_n, topk=topk,
-                               index_stride=index_stride)
+                               index_stride=index_stride, acc_dtype=acc)
     return pl.pallas_call(
         kernel,
         grid=grid,
@@ -189,3 +225,166 @@ def dplr_corpus_score(
         ],
         interpret=interpret,
     )(*args)
+
+
+# ---------------------------------------------------------------------------
+# Multi-segment mode: S tenants' micro-batches in ONE launch
+# ---------------------------------------------------------------------------
+
+def _tile_scores_multi(q, a_i, e_q, pc, a_c, m, acc_dtype=jnp.float32):
+    """(SB, block_n) scores of one item tile against EVERY stacked query
+    row — the per-query ``e_q`` carries each row's own segment's eigen-
+    weights, so foreign rows compute garbage that the caller masks to
+    NEG_INF before the merge (they can never win a slot)."""
+    p = pc[:, None, :, :] + q[None, :, :, :]
+    term_e = _einsum_acc("qnrk,qr->qn", p * p, e_q, acc_dtype)
+    s = a_c[:, None] + a_i[None, :] + 0.5 * term_e
+    return jnp.where((m != 0)[None, :], s, NEG_INF)
+
+
+def _kernel_multi_topk(q_ref, a_ref, m_ref, meta_ref, eq_ref, pc_ref,
+                       ac_ref, off_ref, val_ref, idx_ref, *, topk: int,
+                       index_stride: int, acc_dtype):
+    i = pl.program_id(0)
+
+    @pl.when(i == 0)
+    def _init():
+        val_ref[...] = jnp.full_like(val_ref, NEG_INF)
+        idx_ref[...] = jnp.zeros_like(idx_ref)
+
+    scores = _tile_scores_multi(
+        q_ref[...], a_ref[:, 0], eq_ref[...], pc_ref[...], ac_ref[:, 0],
+        m_ref[:, 0], acc_dtype)
+    # the tile's static metadata row: which stacked query rows this
+    # tile's segment owns, and the tile's first segment-LOCAL item row
+    q_off, q_len, row_base = meta_ref[0, 0], meta_ref[0, 1], meta_ref[0, 2]
+    qidx = jax.lax.broadcasted_iota(jnp.int32, scores.shape, 0)
+    own = (qidx >= q_off) & (qidx < q_off + q_len)
+    # a foreign row sees this tile as all-NEG_INF, so its running top-K
+    # is untouched by neighbor segments' item tiles (segment isolation)
+    scores = jnp.where(own, scores, NEG_INF)
+    tile_idx = off_ref[0, 0] + index_stride * (
+        row_base + jax.lax.broadcasted_iota(jnp.int32, scores.shape, 1))
+    cat_v = jnp.concatenate([val_ref[...], scores], axis=1)
+    cat_i = jnp.concatenate([idx_ref[...], tile_idx], axis=1)
+    top_v, top_pos = jax.lax.top_k(cat_v, topk)
+    val_ref[...] = top_v
+    idx_ref[...] = jnp.take_along_axis(cat_i, top_pos, axis=1)
+
+
+@functools.partial(jax.jit,
+                   static_argnames=("topk", "block_n", "interpret",
+                                    "index_stride", "acc_dtype"))
+def dplr_corpus_score_multi(
+    Q_parts: tuple,    # S x (n_s, rho, k) per-segment item projections
+    a_parts: tuple,    # S x (n_s,)        per-segment item scalars
+    valid_parts,       # S x (n_s,) liveness masks, or None = all live
+    e: jax.Array,      # (S, rho)          per-segment eigen-weights
+    P_C: jax.Array,    # (S, Bq, rho, k)   stacked context projections
+    a_C: jax.Array,    # (S, Bq)           stacked per-query scalars
+    *,
+    topk: int,
+    block_n: int = blocks.CORPUS_TILE_N,
+    interpret: bool = False,
+    index_offset: jax.Array | int = 0,
+    index_stride: int = 1,
+    acc_dtype: str = "float32",
+):
+    """Tenant-segmented fused top-K: scores S segments' micro-batches in
+    ONE kernel launch and returns ``((S, Bq, topk) scores, (S, Bq, topk)
+    int32 indices)`` — row ``[s, q]`` is bitwise the running top-K of
+    segment ``s``'s corpus alone (foreign tiles contribute only NEG_INF,
+    which ``lax.top_k``'s lowest-position tie-break can never promote
+    over a live score while ``topk <= n_live(s)``).
+
+    Indices are segment-LOCAL slots relabeled by ``index_offset``/
+    ``index_stride`` (same striping rule as the single-segment mode, so
+    the sharded path reuses it with ``offset=shard, stride=D``).
+
+    The per-segment corpus slabs concatenate on the item axis, each
+    padded to a whole number of ``block_n`` tiles with phantom dead
+    rows; a static per-tile ``(q_off, q_len, row_base)`` int32 table —
+    trace-time metadata, one row per grid step via a ``row_tiles(1, 3)``
+    spec — windows each tile to its own segment's stacked query rows.
+    Retrace keying: the tuple length S is part of the pytree structure,
+    so callers bucket S (the frontend pads to power-of-two segment
+    counts) exactly like Bq and K."""
+    S = len(Q_parts)
+    if S == 0:
+        raise ValueError("dplr_corpus_score_multi needs >= 1 segment")
+    S_a = len(a_parts)                  # tuple arity: trace-static
+    if not (S_a == S and P_C.shape[0] == S and a_C.shape[0] == S
+            and e.shape[0] == S):
+        raise ValueError(
+            f"segment-count mismatch: {S} Q_parts vs {S_a} "
+            f"a_parts, e {e.shape}, P_C {P_C.shape}, a_C {a_C.shape}")
+    if valid_parts is None:
+        valid_parts = (None,) * S
+    rho, k = Q_parts[0].shape[1:]
+    Bq = P_C.shape[1]
+    SB = S * Bq
+    acc = jnp.dtype(acc_dtype)
+    n_min = min(int(q.shape[0]) for q in Q_parts)
+    if not 0 < topk <= n_min:
+        raise ValueError(f"topk={topk} out of range for smallest segment "
+                         f"n={n_min}")
+    block_n = blocks.clamp_tile(block_n, max(int(q.shape[0])
+                                             for q in Q_parts))
+
+    q_cat, a_cat, m_cat, meta = [], [], [], []
+    for s in range(S):
+        q_s = Q_parts[s].astype(jnp.float32)
+        a_s = a_parts[s].astype(jnp.float32)
+        n_s = q_s.shape[0]
+        m_s = (jnp.ones((n_s,), jnp.int32) if valid_parts[s] is None
+               else jnp.asarray(valid_parts[s]).astype(jnp.int32))
+        pad = blocks.pad_amount(n_s, block_n)
+        if pad:
+            q_s = jnp.pad(q_s, ((0, pad), (0, 0), (0, 0)))
+            a_s = jnp.pad(a_s, (0, pad))
+            m_s = jnp.pad(m_s, (0, pad))    # phantom rows are dead slots
+        q_cat.append(q_s)
+        a_cat.append(a_s)
+        m_cat.append(m_s)
+        for j in range((n_s + pad) // block_n):
+            meta.append((s * Bq, Bq, j * block_n))
+    Q_cat = jnp.concatenate(q_cat)
+    a_cat = jnp.concatenate(a_cat)
+    m_cat = jnp.concatenate(m_cat)
+    meta = jnp.asarray(meta, jnp.int32)          # (n_tiles, 3), static
+    grid = blocks.grid_1d(Q_cat.shape[0], block_n)
+
+    e_q = jnp.repeat(e.astype(jnp.float32), Bq, axis=0)        # (SB, rho)
+    pc = P_C.astype(jnp.float32).reshape(SB, rho, k)
+    ac = a_C.astype(jnp.float32).reshape(SB)
+    off = jnp.asarray(index_offset, jnp.int32).reshape(1, 1)
+
+    in_specs = [
+        blocks.row_tiles(block_n, rho, k),
+        blocks.row_tiles(block_n, 1),
+        blocks.row_tiles(block_n, 1),
+        blocks.row_tiles(1, 3),
+        blocks.broadcast(SB, rho),
+        blocks.broadcast(SB, rho, k),
+        blocks.broadcast(SB, 1),
+        blocks.broadcast(1, 1),
+    ]
+    args = (Q_cat, a_cat[:, None], m_cat[:, None], meta, e_q, pc,
+            ac[:, None], off)
+    kernel = functools.partial(_kernel_multi_topk, topk=topk,
+                               index_stride=index_stride, acc_dtype=acc)
+    vals, idx = pl.pallas_call(
+        kernel,
+        grid=grid,
+        in_specs=in_specs,
+        out_specs=[
+            blocks.broadcast(SB, topk),
+            blocks.broadcast(SB, topk),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((SB, topk), jnp.float32),
+            jax.ShapeDtypeStruct((SB, topk), jnp.int32),
+        ],
+        interpret=interpret,
+    )(*args)
+    return vals.reshape(S, Bq, topk), idx.reshape(S, Bq, topk)

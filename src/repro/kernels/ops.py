@@ -5,6 +5,14 @@ CPU lowering); on TPU ``interpret=False`` compiles through Mosaic.  The
 wrappers pick that automatically and expose the same signatures as the
 pure-jnp references, so the serving stack can swap implementations with a
 flag (cfg.use_pallas_kernels).
+
+Corpus-scorer calls that leave ``block_n=None`` (the default) resolve
+their tile geometry through ``blocks.corpus_tile`` — the registry
+``kernels/autotune.py`` fills with parity-gated winners — so every call
+site (single-device runtime, sharded bodies, fused multi-segment path)
+inherits tuned tiles without threading a flag.  Resolution happens at
+Python time in the wrapper, BEFORE the jitted kernel: same shapes +
+same registry = same static args = zero retraces; tune before warmup.
 """
 from __future__ import annotations
 
@@ -30,16 +38,51 @@ def dplr_score_items(V_I, U_I, e, d_I, P_C, s_C, *,
                                   block_n=block_n, interpret=interp)
 
 
+def _resolve_tile(n, rho, k, Bq, K, dtype, block_n, acc_dtype):
+    """Explicit ``block_n``/``acc_dtype`` win; ``None`` falls through to
+    the autotuner registry (default-identical when nothing is tuned)."""
+    tuned_bn, tuned_acc = blocks.corpus_tile(
+        n, rho, k, Bq, K, str(dtype), jax.default_backend())
+    return (tuned_bn if block_n is None else block_n,
+            tuned_acc if acc_dtype is None else acc_dtype)
+
+
 def dplr_corpus_score(Q_I, a_I, e, P_C, a_C, valid=None, *, topk=None,
-                      block_n: int = blocks.CORPUS_TILE_N,
+                      block_n: int | None = None,
                       interpret: bool | None = None,
-                      index_offset=0, index_stride: int = 1):
+                      index_offset=0, index_stride: int = 1,
+                      acc_dtype: str | None = None):
     interp = (not _on_tpu()) if interpret is None else interpret
+    n, rho, k = Q_I.shape
+    block_n, acc_dtype = _resolve_tile(n, rho, k, P_C.shape[0], topk,
+                                       Q_I.dtype, block_n, acc_dtype)
     return _corpus.dplr_corpus_score(Q_I, a_I, e, P_C, a_C, valid,
                                      topk=topk, block_n=block_n,
                                      interpret=interp,
                                      index_offset=index_offset,
-                                     index_stride=index_stride)
+                                     index_stride=index_stride,
+                                     acc_dtype=acc_dtype)
+
+
+def dplr_corpus_score_multi(Q_parts, a_parts, valid_parts, e, P_C, a_C, *,
+                            topk: int, block_n: int | None = None,
+                            interpret: bool | None = None,
+                            index_offset=0, index_stride: int = 1,
+                            acc_dtype: str | None = None):
+    interp = (not _on_tpu()) if interpret is None else interpret
+    if not Q_parts:
+        raise ValueError("dplr_corpus_score_multi needs >= 1 segment")
+    # the fused launch reuses the largest segment's tuned cell (its tiles
+    # dominate the grid); per-segment retuning would fragment block_n
+    n, rho, k = max((q.shape for q in Q_parts), key=lambda s: s[0])
+    block_n, acc_dtype = _resolve_tile(n, rho, k, P_C.shape[1], topk,
+                                       Q_parts[0].dtype, block_n, acc_dtype)
+    return _corpus.dplr_corpus_score_multi(
+        tuple(Q_parts), tuple(a_parts),
+        valid_parts if valid_parts is None else tuple(valid_parts),
+        e, P_C, a_C, topk=topk, block_n=block_n, interpret=interp,
+        index_offset=index_offset, index_stride=index_stride,
+        acc_dtype=acc_dtype)
 
 
 def fwfm_pairwise(V, R, *, block_b: int = blocks.PAIRWISE_TILE_B,

@@ -41,6 +41,23 @@ def dplr_corpus_topk_ref(Q_I, a_I, e, P_C, a_C, topk, valid=None,
     return vals, index_offset + index_stride * idx
 
 
+def dplr_corpus_multi_topk_ref(Q_parts, a_parts, valid_parts, e, P_C, a_C,
+                               topk, index_offset=0, index_stride=1):
+    """Tenant-segmented top-K oracle: the fused multi-segment kernel must
+    equal S independent single-segment top-K passes stacked to
+    ``((S, Bq, K) scores, (S, Bq, K) indices)`` — segment ``s`` scored
+    only against its own corpus part with its own eigen-weights, indices
+    segment-local before the offset/stride relabel."""
+    if valid_parts is None:
+        valid_parts = (None,) * len(Q_parts)
+    vals, idx = zip(*(
+        dplr_corpus_topk_ref(Q_parts[s], a_parts[s], e[s], P_C[s], a_C[s],
+                             topk, valid_parts[s], index_offset,
+                             index_stride)
+        for s in range(len(Q_parts))))
+    return jnp.stack(vals), jnp.stack(idx)
+
+
 def fwfm_pairwise_ref(V, R):
     G = jnp.einsum("bik,bjk->bij", V, V)
     return 0.5 * jnp.einsum("bij,ij->b", G, R)
@@ -81,6 +98,7 @@ def flash_attention_ref(q, k, v, *, causal=True, window=None):
 ORACLES = {
     "dplr_score_items": (dplr_score_items_ref,),
     "dplr_corpus_score": (dplr_corpus_score_ref, dplr_corpus_topk_ref),
+    "dplr_corpus_score_multi": (dplr_corpus_multi_topk_ref,),
     "fwfm_pairwise": (fwfm_pairwise_ref,),
     "embedding_bag": (embedding_bag_ref,),
     "flash_attention": (flash_attention_ref,),

@@ -109,7 +109,8 @@ class CorpusState:
 
     def __init__(self, cfg, item_ids, item_weights=None, *,
                  capacity: int | None = None, mesh=None,
-                 use_pallas_kernel: bool = False, block_n: int = 2048,
+                 use_pallas_kernel: bool = False,
+                 block_n: int | None = None,
                  runtime: ScorerRuntime | None = None, fault_injector=None):
         if runtime is None:
             runtime = ScorerRuntime(cfg, mesh=mesh,
@@ -634,6 +635,67 @@ class CorpusState:
         """Convenience for ``rank_items``-style query dicts (item tensors,
         if present, are ignored — the corpus is the engine's)."""
         return self.score(query["context_ids"], query.get("context_weights"))
+
+
+def fused_topk(states, context_ids, K: int, context_weights=None):
+    """ONE device dispatch answering S tenants' micro-batches: returns
+    ``((S, Bq, K) scores, (S, Bq, K) int32 slot indices)`` where row
+    ``[s]`` is bit-exact ``states[s].topk(context_ids[s], K)`` — the
+    fused multi-tenant path the ``QueryFrontend`` packs same-runtime
+    tenants through (``pack=True``).
+
+    ``states`` must share one ``ScorerRuntime`` (that is what makes the
+    fusion a single trace) and each must be ready with ``K <= n_items``.
+    ``context_ids``: (S, Bq, m_C_slots) stacked micro-batches — one
+    common Bq, because the frontend buckets to a common power of two
+    before packing.  On a mesh, all states must also share one capacity
+    (the frontend's pack key guarantees both).
+
+    Kernel selection and self-healing mirror ``CorpusState.topk``: the
+    Pallas path runs only while NO packed state is kernel-degraded, each
+    state's armed ``kernel`` fault site is checked, and a launch failure
+    stickily degrades every packed state to the (bit-exact) jnp fused
+    path — a poisoned kernel never splits the pack's fate."""
+    states = tuple(states)
+    if not states:
+        raise ValueError("fused_topk needs at least one state")
+    rt = states[0].runtime
+    for st in states:
+        if st.runtime is not rt:
+            raise ValueError(
+                "fused_topk states must share one ScorerRuntime (tenants "
+                "on different runtimes cannot pack into one dispatch)")
+        st._require_ready()
+        if not 0 < K <= st.n_items:
+            raise ValueError(
+                f"fused_topk K={K} out of range for a corpus of "
+                f"{st.n_items} live items")
+    if rt.mesh is not None and len(
+            {st.local_capacity for st in states}) != 1:
+        raise ValueError("fused mesh top-K needs equal capacities; the "
+                         "frontend's pack key guarantees this")
+    ids = jnp.asarray(context_ids)
+    if ids.ndim != 3 or ids.shape[0] != len(states):
+        raise ValueError(f"context_ids must stack to (S={len(states)}, "
+                         f"Bq, m_C_slots), got {ids.shape}")
+    w = (jnp.ones(ids.shape, rt.wdtype) if context_weights is None
+         else jnp.asarray(context_weights, rt.wdtype))
+    params_parts = tuple(st.params for st in states)
+    cache_parts = tuple(st.cache for st in states)
+    if rt.use_pallas_kernel and not any(st.kernel_degraded
+                                        for st in states):
+        try:
+            for st in states:
+                if st._injector is not None:
+                    st._injector.check("kernel")
+            with scoring_guard():
+                return rt.kernel_multi_topk(params_parts, cache_parts,
+                                            ids, w, K=K)
+        except Exception:                 # noqa: BLE001 — launch failure
+            for st in states:             # sticky, pack-wide: see topk()
+                st.kernel_degraded = True
+    with scoring_guard():
+        return rt.multi_topk(params_parts, cache_parts, ids, w, K=K)
 
 
 # The historical single-tenant name: one CorpusState over a private

@@ -31,8 +31,39 @@ the set live.  Each tenant keeps its own queue, stats, and writer
 barrier; they share the dispatch window, the (Bq, K) bucket grid, and —
 when their states sit on one ``ScorerRuntime`` — the trace cache, so a
 new tenant with an already-warm shape signature serves with ZERO
-retraces.  A micro-batch never mixes tenants (different corpora), but
-batches from different tenants overlap freely in the in-flight window.
+retraces.  A micro-batch never mixes tenants' *rows* (different
+corpora), but batches from different tenants overlap freely in the
+in-flight window — and with ``pack=True`` they can share one LAUNCH
+(below).
+
+Fused multi-tenant dispatch (``pack=True``)
+-------------------------------------------
+At high tenant counts with small per-tenant micro-batches (16 tenants x
+Bq<=4 is the regime the multitenant benchmark gates), per-dispatch
+overhead dominates: each launch pays the Python->jit boundary, transfer,
+and kernel-launch cost for a handful of rows.  With ``pack=True`` the
+scheduler opportunistically FUSES ready same-shape tenants into one
+``engine.fused_topk`` launch: whenever a SWRR turn picks a lane, up to
+``pack_max - 1`` further turns are granted to other eligible lanes with
+the same **pack key** — ``(runtime identity, slab capacity, context
+width)`` — and the group dispatches as ONE device call whose kernel
+scores every tenant's segment against its own corpus slab (segmented
+top-K: a reply can never receive a neighbour segment's slot).  Each
+tenant's rows stay bit-exact vs its own unpacked ``engine.topk``.
+
+The retrace invariant survives packing because every packed axis is
+bucketed: one common Bq bucket (max over the group), one common K bucket
+(max over the group), and the SEGMENT COUNT pads up to a power of two
+``<= pack_max`` by repeating the last tenant's segment (phantom
+segments are scored and discarded, like padding rows).  The reachable
+fused shape set is thus (S buckets x Bq buckets x K buckets) per
+capacity — ``warmup_packed`` traces it once.  Groups degrade gracefully:
+a group whose common K bucket exceeds some member's live corpus unpacks
+into per-tenant dispatches, a single-lane "group" short-circuits to the
+classic path, and EDF order within every lane plus SWRR fairness across
+lanes are preserved (each packed lane pays a real scheduler turn).
+``stats["fused_dispatches"]``/``stats["fused_segments"]`` count the
+wins; ``health()["packing"]`` reports the running mean group size.
 
 Coalescing and the retrace invariant
 ------------------------------------
@@ -200,6 +231,7 @@ from functools import partial
 import numpy as np
 
 from repro.serving.corpus import next_pow2
+from repro.serving.engine import fused_topk
 from repro.serving.errors import (Degraded, DeadlineExceeded, DispatchFailed,
                                   Overloaded, ServingError, Unservable)
 
@@ -273,11 +305,21 @@ class _InFlight:
     the requests (in row order) awaiting truncation, the tenant it was
     scored against, and the ASSEMBLED batch (ctx/w/k_pad) so a failure
     surfacing at resolve time can re-dispatch the identical batch
-    (bit-exact recovery)."""
+    (bit-exact recovery).
 
-    __slots__ = ("requests", "vals", "idx", "tenant", "ctx", "w", "k_pad")
+    A batch that rode a fused multi-tenant launch carries ``launch``
+    (the shared ``_PackedLaunch``) and its segment row ``seg`` instead
+    of per-batch device arrays; its ``ctx``/``w`` still hold THIS
+    tenant's assembled rows, so the resolve-time recovery path can
+    re-dispatch just this segment as a classic single-tenant batch
+    (bit-exact: the fused kernel's per-segment rows equal the unpacked
+    dispatch)."""
 
-    def __init__(self, requests, vals, idx, tenant, ctx, w, k_pad):
+    __slots__ = ("requests", "vals", "idx", "tenant", "ctx", "w", "k_pad",
+                 "launch", "seg")
+
+    def __init__(self, requests, vals, idx, tenant, ctx, w, k_pad,
+                 launch=None, seg=None):
         self.requests = requests
         self.vals = vals
         self.idx = idx
@@ -285,6 +327,40 @@ class _InFlight:
         self.ctx = ctx
         self.w = w
         self.k_pad = k_pad
+        self.launch = launch
+        self.seg = seg
+
+
+class _PackedLaunch:
+    """The shared result of ONE fused multi-tenant dispatch: the (S, Bq,
+    K) device arrays plus a one-shot host materialization every member
+    segment's resolve reuses — the first resolve pays the blocking read,
+    the rest slice for free.  A read failure is remembered so every
+    segment takes its own single-tenant recovery path instead of
+    re-raising from a half-dead launch."""
+
+    __slots__ = ("vals", "idx", "np_vals", "np_idx", "error")
+
+    def __init__(self, vals, idx):
+        self.vals = vals
+        self.idx = idx
+        self.np_vals = None
+        self.np_idx = None
+        self.error = None
+
+    def read(self):
+        """((S, Bq, K) scores, (S, Bq, K) indices) as host arrays;
+        blocks on the device exactly once."""
+        if self.error is not None:
+            raise self.error
+        if self.np_vals is None:
+            try:
+                self.np_vals = np.asarray(self.vals)
+                self.np_idx = np.asarray(self.idx)
+            except Exception as e:        # noqa: BLE001 — deferred device
+                self.error = e
+                raise
+        return self.np_vals, self.np_idx
 
 
 class _TenantLane:
@@ -390,6 +466,17 @@ class QueryFrontend:
         it.  Costs one trace per NEW capacity — paid at a pump tick,
         not inside a hot-path ``add_items``.  ``None`` (default)
         disables autoscaling.
+    pack : bool
+        Fuse ready same-pack-key tenants into one ``fused_topk`` launch
+        per scheduler round (see the module docstring's fused-dispatch
+        section).  Default off — single-tenant and low-tenant-count
+        deployments keep the classic one-dispatch-per-tenant path.
+    pack_max : int
+        Largest tenant count per fused launch (power of two >= 2;
+        default 8).  The dispatched segment count pads up to a power of
+        two <= ``pack_max``, so the fused trace grid stays the fixed
+        (S buckets x Bq buckets x K buckets) set ``warmup_packed``
+        covers.
     fault_injector : FaultInjector | None
         Chaos hook: an armed injector's ``dispatch``/``resolve``/``pump``
         sites fire inside this frontend (see ``repro.serving.faults``).
@@ -407,6 +494,7 @@ class QueryFrontend:
                  pressure_depth: int | None = None,
                  pressure_k: int | None = None,
                  autoscale_high: float | None = None,
+                 pack: bool = False, pack_max: int = 8,
                  fault_injector=None):
         if max_batch < 1 or max_batch & (max_batch - 1):
             raise ValueError(f"max_batch must be a power of two, "
@@ -430,6 +518,11 @@ class QueryFrontend:
         if autoscale_high is not None and not 0.0 < autoscale_high <= 1.0:
             raise ValueError(f"autoscale_high={autoscale_high} outside "
                              f"(0, 1]")
+        if pack_max < 2 or pack_max & (pack_max - 1):
+            raise ValueError(f"pack_max must be a power of two >= 2, "
+                             f"got {pack_max}")
+        self.pack = bool(pack)
+        self.pack_max = pack_max
         self.max_batch = max_batch
         self.max_k = max_k
         self.max_wait = float(max_wait)
@@ -474,7 +567,8 @@ class QueryFrontend:
                       "dispatched_rows": 0, "padded_rows": 0, "drains": 0,
                       "retries": 0, "degraded": 0, "clamped": 0,
                       "pump_restarts": 0, "pump_errors": 0,
-                      "autoscales": 0}
+                      "autoscales": 0, "fused_dispatches": 0,
+                      "fused_segments": 0}
         self.last_pump_error: BaseException | None = None
         if hasattr(engines, "topk"):         # single engine, classic API
             engines = {"default": engines}
@@ -756,6 +850,43 @@ class QueryFrontend:
         best.credit -= total
         return best
 
+    def _pack_key(self, lane):
+        """Fused-dispatch compatibility key: lanes with equal keys can
+        share one ``fused_topk`` launch with zero retraces — same
+        runtime (same trace cache, same mesh), same slab capacity (same
+        cache shapes; on a mesh this also equalizes ``local_capacity``),
+        same context width.  ``None`` = unpackable (not ready)."""
+        eng = lane.engine
+        if getattr(eng, "cache", None) is None:
+            return None
+        return (id(eng.runtime), int(eng.capacity), lane.n_ctx)
+
+    def _collect_group(self, first, pred, now, *,
+                       respect_quota: bool = True) -> list[_TenantLane]:
+        """Grow a fused-dispatch group around the lane a scheduler turn
+        just picked: grant up to ``pack_max - 1`` FURTHER SWRR turns,
+        each restricted to lanes that pass ``pred`` and share ``first``'s
+        pack key.  Every member pays a real turn, so packing preserves
+        the weighted fairness schedule exactly; with ``pack=False`` (or
+        nobody compatible) the group is just ``[first]``."""
+        group = [first]
+        if not self.pack or len(self._lanes) < 2:
+            return group
+        key = self._pack_key(first)
+        if key is None:
+            return group
+        names = {first.name}
+        while len(group) < self.pack_max:
+            mate = self._pick(
+                lambda ln: (ln.name not in names and pred(ln)
+                            and self._pack_key(ln) == key),
+                now, respect_quota=respect_quota)
+            if mate is None:
+                break
+            names.add(mate.name)
+            group.append(mate)
+        return group
+
     def _oldest_age(self, lane, now) -> float | None:
         """Age of the lane's oldest still-queued request (arrival order —
         independent of the EDF dispatch order)."""
@@ -782,21 +913,38 @@ class QueryFrontend:
                     if lane.engine.maybe_autoscale(self.autoscale_high):
                         self.stats["autoscales"] += 1
             n = 0
+            full = lambda ln: len(ln.heap) >= self.max_batch  # noqa: E731
             while True:
-                lane = self._pick(
-                    lambda ln: len(ln.heap) >= self.max_batch, now)
+                lane = self._pick(full, now)
                 if lane is None:
                     break
-                self._dispatch(lane, self._take(lane, self.max_batch), now)
+                group = self._collect_group(lane, full, now)
+                if len(group) == 1:
+                    self._dispatch(lane, self._take(lane, self.max_batch),
+                                   now)
+                else:
+                    self._dispatch_group(
+                        [(ln, self._take(ln, self.max_batch))
+                         for ln in group], now)
                 n += 1
+            aged = lambda ln: (self._oldest_age(ln, now)  # noqa: E731
+                               or -1.0) >= self.max_wait
             for lane in list(self._lanes.values()):
                 age = self._oldest_age(lane, now)
                 if age is not None and age >= self.max_wait:
                     if not self._has_quota(lane, now):
                         lane.stats["quota_deferred"] += 1
                         continue
-                    self._dispatch(lane, self._take(lane, len(lane.heap)),
-                                   now)
+                    group = self._collect_group(lane, aged, now)
+                    if len(group) == 1:
+                        self._dispatch(lane,
+                                       self._take(lane, len(lane.heap)),
+                                       now)
+                    else:
+                        self._dispatch_group(
+                            [(ln, self._take(
+                                ln, min(len(ln.heap), self.max_batch)))
+                             for ln in group], now)
                     n += 1
             return n
 
@@ -810,15 +958,24 @@ class QueryFrontend:
         with self._lock:
             now = self.clock()
             n = 0
+            queued = lambda ln: len(ln.heap) > 0  # noqa: E731
             while True:
-                lane = self._pick(lambda ln: len(ln.heap) > 0, now,
-                                  respect_quota=False)
+                lane = self._pick(queued, now, respect_quota=False)
                 if lane is None:
                     break
-                self._dispatch(
-                    lane,
-                    self._take(lane, min(len(lane.heap), self.max_batch)),
-                    now)
+                group = self._collect_group(lane, queued, now,
+                                            respect_quota=False)
+                if len(group) == 1:
+                    self._dispatch(
+                        lane,
+                        self._take(lane,
+                                   min(len(lane.heap), self.max_batch)),
+                        now)
+                else:
+                    self._dispatch_group(
+                        [(ln, self._take(
+                            ln, min(len(ln.heap), self.max_batch)))
+                         for ln in group], now)
                 n += 1
             return n
 
@@ -914,15 +1071,17 @@ class QueryFrontend:
             k_pad //= 2
         return max(k_pad, k_max)
 
-    def _dispatch(self, lane, reqs: list[PendingQuery], now: float) -> None:
-        """Assemble one micro-batch for ONE tenant and launch it (async).
-        Requests fail here — before scoring — individually: past-deadline
-        ones with ``DeadlineExceeded``, ones whose k exceeds the lane's
-        live corpus (churn shrank it since submit) with ``Unservable``;
-        neither poisons its batchmates.  A dispatch that fails all its
-        bounded retries fails the whole batch with ``DispatchFailed`` and
-        feeds the lane's circuit breaker."""
-        self._consume_quota(lane, len(reqs))
+    def _filter_live(self, lane, reqs: list[PendingQuery],
+                     now: float) -> list[PendingQuery]:
+        """Pre-scoring request triage for one tenant's taken requests:
+        fail past-deadline ones with ``DeadlineExceeded`` and ones whose
+        k exceeds the lane's live corpus (churn shrank it since submit)
+        with ``Unservable`` — individually; neither poisons its
+        batchmates — then apply the pressure-K clamp to the survivors
+        (with the lane's queue still deep AFTER this batch was taken,
+        serve the exact top-``pressure_k`` prefix instead of the full K:
+        smaller, already-warm K bucket, less device work per batch,
+        replies flagged degraded but never wrong)."""
         n_live_items = lane.engine.n_items
         live = []
         for r in reqs:
@@ -940,25 +1099,40 @@ class QueryFrontend:
                     f"({n_live_items} items)", tenant=lane.name), now)
             else:
                 live.append(r)
-        if not live:
-            return
-        # pressure-K clamp: with the lane's queue still deep AFTER this
-        # batch was taken, serve the exact top-pressure_k prefix instead
-        # of the full K — smaller (already warm) K bucket, less device
-        # work per batch, replies flagged degraded but never wrong
-        if (self.pressure_depth is not None
+        if (live and self.pressure_depth is not None
                 and len(lane.heap) >= self.pressure_depth):
             for r in live:
                 if r.served_k > self.pressure_k:
                     r.served_k = self.pressure_k
                     r.degraded = True
                     self.stats["clamped"] += 1
-        bq = min(next_pow2(len(live)), self.max_batch)
+        return live
+
+    @staticmethod
+    def _assemble(live: list[PendingQuery], bq: int):
+        """Stack one tenant's live rows to the ``bq`` bucket.  Pads with
+        a REAL context row: per-row scoring is independent, so real rows
+        stay bit-identical and the filler rows cost no trace."""
         pad = bq - len(live)
-        # pad with a REAL context row: per-row scoring is independent, so
-        # real rows stay bit-identical and the filler rows cost no trace
         ctx = np.stack([r._ctx for r in live] + [live[0]._ctx] * pad)
         w = np.stack([r._w for r in live] + [live[0]._w] * pad)
+        return ctx, w
+
+    def _dispatch(self, lane, reqs: list[PendingQuery], now: float) -> None:
+        """Assemble one micro-batch for ONE tenant and launch it (async).
+        A dispatch that fails all its bounded retries fails the whole
+        batch with ``DispatchFailed`` and feeds the lane's circuit
+        breaker; see ``_filter_live`` for the per-request triage."""
+        self._consume_quota(lane, len(reqs))
+        live = self._filter_live(lane, reqs, now)
+        if not live:
+            return
+        self._dispatch_live(lane, live, now)
+
+    def _dispatch_live(self, lane, live: list[PendingQuery],
+                       now: float) -> None:
+        bq = min(next_pow2(len(live)), self.max_batch)
+        ctx, w = self._assemble(live, bq)
         k_pad = self._k_dispatch(lane, live)
         try:
             # async dispatch: engine.topk returns device arrays without
@@ -975,11 +1149,100 @@ class QueryFrontend:
         self._breaker_success(lane)
         self.stats["dispatches"] += 1
         self.stats["dispatched_rows"] += bq
-        self.stats["padded_rows"] += pad
+        self.stats["padded_rows"] += bq - len(live)
         self._window.append(_InFlight(live, vals, idx, lane.name,
                                       ctx, w, k_pad))
         while len(self._window) > self.inflight:
             self._resolve_oldest()
+
+    def _dispatch_group(self, pairs, now: float) -> None:
+        """Launch a ``_collect_group`` group as ONE fused dispatch:
+        triage each lane's requests, bucket the group to a common Bq
+        (max over lanes) and a common K bucket (max over lanes), pad the
+        segment count to a power of two <= ``pack_max`` by repeating the
+        last segment, and hand the stack to ``engine.fused_topk``.  Each
+        member batch enters the in-flight window as its own ``_InFlight``
+        slice of the shared ``_PackedLaunch``.  Degrades safely: one
+        surviving lane takes the classic path, and a common K bucket
+        exceeding some member's live corpus unpacks the group into
+        per-tenant dispatches (rare; churn between collect and launch)."""
+        live_pairs = []
+        for lane, reqs in pairs:
+            self._consume_quota(lane, len(reqs))
+            live = self._filter_live(lane, reqs, now)
+            if live:
+                live_pairs.append((lane, live))
+        if not live_pairs:
+            return
+        if len(live_pairs) == 1:
+            self._dispatch_live(*live_pairs[0], now)
+            return
+        bq = min(max(next_pow2(len(live)) for _, live in live_pairs),
+                 self.max_batch)
+        k_pad = max(self._k_dispatch(lane, live)
+                    for lane, live in live_pairs)
+        if any(k_pad > lane.engine.n_items for lane, _ in live_pairs):
+            for lane, live in live_pairs:
+                self._dispatch_live(lane, live, now)
+            return
+        rows = [self._assemble(live, bq) for _, live in live_pairs]
+        states = [lane.engine for lane, _ in live_pairs]
+        # pad the SEGMENT count to its power-of-two bucket (phantom
+        # segments repeat the last tenant's slab + rows and are simply
+        # never read back): the fused trace grid stays the fixed
+        # (S buckets x Bq buckets x K buckets) set warmup_packed warms
+        s_pad = next_pow2(len(live_pairs))
+        ctx = np.stack([c for c, _ in rows]
+                       + [rows[-1][0]] * (s_pad - len(rows)))
+        w = np.stack([wt for _, wt in rows]
+                     + [rows[-1][1]] * (s_pad - len(rows)))
+        states = tuple(states + [states[-1]] * (s_pad - len(states)))
+        try:
+            launch = self._launch_group(live_pairs, states, ctx, w, k_pad)
+        except DispatchFailed as e:
+            for lane, live in live_pairs:
+                for r in live:
+                    self.stats["failed"] += 1
+                    lane.stats["failed"] += 1
+                    r._fail(e, now)
+                self._breaker_failure(lane, now)
+            return
+        self.stats["fused_dispatches"] += 1
+        self.stats["fused_segments"] += len(live_pairs)
+        for seg, (lane, live) in enumerate(live_pairs):
+            self._breaker_success(lane)
+            self.stats["dispatches"] += 1
+            self.stats["dispatched_rows"] += bq
+            self.stats["padded_rows"] += bq - len(live)
+            self._window.append(_InFlight(live, None, None, lane.name,
+                                          rows[seg][0], rows[seg][1],
+                                          k_pad, launch=launch, seg=seg))
+        while len(self._window) > self.inflight:
+            self._resolve_oldest()
+
+    def _launch_group(self, live_pairs, states, ctx, w, k_pad):
+        """``_launch``'s fused twin: dispatch ONE packed batch with the
+        same bounded-retry/backoff discipline, re-dispatching the
+        identical (states, ctx, w, k_pad) stack every attempt."""
+        attempts = self.retries + 1
+        for i in range(attempts):
+            try:
+                if self._injector is not None:
+                    self._injector.check("dispatch")
+                vals, idx = fused_topk(states, ctx, k_pad, w)
+                return _PackedLaunch(vals, idx)
+            except Exception as e:        # noqa: BLE001 — typed below
+                if i + 1 >= attempts:
+                    names = tuple(lane.name for lane, _ in live_pairs)
+                    raise DispatchFailed(
+                        f"fused dispatch for tenants {names} failed "
+                        f"after {attempts} attempts: {e}",
+                        tenant=names[0], attempts=attempts) from e
+                self.stats["retries"] += 1
+                pause = self.retry_backoff * (2.0 ** i)
+                pause *= 0.5 + self._rng.random()     # jitter in [.5, 1.5)
+                if pause > 0.0:
+                    self._retry_wait.wait(timeout=pause)
 
     # -- resolution (the only blocking step) --------------------------------
 
@@ -989,8 +1252,15 @@ class QueryFrontend:
         try:
             if self._injector is not None:
                 self._injector.check("resolve")
-            vals = np.asarray(fl.vals)  # blocks until the device finishes
-            idx = np.asarray(fl.idx)
+            if fl.launch is not None:
+                # fused batch: the first member segment pays the one
+                # blocking read of the shared (S, Bq, K) launch; the
+                # rest slice the cached host arrays for free
+                all_vals, all_idx = fl.launch.read()
+                vals, idx = all_vals[fl.seg], all_idx[fl.seg]
+            else:
+                vals = np.asarray(fl.vals)  # blocks until device finishes
+                idx = np.asarray(fl.idx)
         except Exception:               # noqa: BLE001 — deferred device
             # failure surfaced at materialization: re-dispatch the SAME
             # assembled batch (fl.ctx/fl.w/fl.k_pad — bit-exact) and read
@@ -1076,6 +1346,67 @@ class QueryFrontend:
         return lane.engine.warmup_grid(context_ids, context_weights,
                                        max_batch=self.max_batch,
                                        max_k=self.max_k)
+
+    def warmup_packed(self, context_ids, context_weights=None,
+                      tenant: str | None = None, *,
+                      s_counts=None, batch_sizes=None, ks=None) -> int:
+        """Trace the FUSED (S bucket x Bq bucket x K bucket) grid once
+        for one tenant's pack key, so packed steady-state traffic — any
+        group size up to ``pack_max``, any Bq/K mix — retraces NOTHING
+        (``_dispatch_group`` pads every axis to these buckets).  The
+        representative tenant's state is repeated S times per cell,
+        which hits the exact trace a mixed-tenant group of the same pack
+        key lands on (the jit key is the cache pytree STRUCTURE, not the
+        member identities).  Lanes sharing a pack key are warm after any
+        one of them warms.
+
+        ``s_counts``/``batch_sizes``/``ks`` override the swept buckets
+        (each a subset of the reachable powers of two) when the caller
+        knows its traffic shape — e.g. a benchmark priming exactly one
+        cell.  Returns the number of warmup dispatches.  Call after the
+        state's ``refresh`` (and after kernel autotuning, which must
+        precede the first trace to take effect)."""
+        lane = self._lane(tenant)
+        eng = lane.engine
+        ctx = np.asarray(context_ids, np.int32).reshape(-1)
+        w = (np.ones(ctx.shape, np.float32) if context_weights is None
+             else np.asarray(context_weights, np.float32).reshape(-1))
+        if s_counts is None:
+            s_counts = [s for s in (2, 4, 8, 16, 32, 64)
+                        if s <= self.pack_max]
+        if batch_sizes is None:
+            batch_sizes = []
+            bq = 1
+            while bq <= self.max_batch:
+                batch_sizes.append(bq)
+                bq *= 2
+        if ks is None:
+            ks = []
+            k = 1
+            while k <= min(next_pow2(self.max_k), eng.n_items):
+                ks.append(k)
+                k *= 2
+        n = 0
+        for S in s_counts:
+            states = (eng,) * S
+            for bq in batch_sizes:
+                ids_b = np.broadcast_to(ctx, (S, bq, ctx.shape[0]))
+                w_b = np.broadcast_to(w, (S, bq, w.shape[0]))
+                for k in ks:
+                    fused_topk(states, ids_b, k, w_b)
+                    n += 1
+                    if eng.use_pallas_kernel and not eng.kernel_degraded:
+                        # warm the jnp fused fallback at the same shape:
+                        # sticky kernel degradation must cost ZERO
+                        # mid-serve traces when it fires (same contract
+                        # as warmup_grid)
+                        eng.runtime.multi_topk(
+                            (eng.params,) * S, (eng.cache,) * S,
+                            np.ascontiguousarray(ids_b),
+                            np.ascontiguousarray(w_b).astype(
+                                eng.runtime.wdtype), K=k)
+                        n += 1
+        return n
 
     # -- background pump + watchdog -----------------------------------------
 
@@ -1168,7 +1499,8 @@ class QueryFrontend:
         Top level: ``ready`` (accepting submits), ``closed``, ``degraded``
         (any lane breaker not closed, any engine on its fallback kernel,
         or a recorded refresh failure), ``queue_depth``,
-        ``inflight_depth``, and ``pump`` (running / restarts).  Per
+        ``inflight_depth``, ``pump`` (running / restarts), and
+        ``packing`` (fused-dispatch counters + mean group size).  Per
         tenant: breaker state and consecutive-failure count, queue depth,
         live item count, model step, seconds since the last model
         refresh, the last refresh error (if any), and whether the engine
@@ -1203,6 +1535,7 @@ class QueryFrontend:
                     degraded = True
                 lanes[name] = info
             pump = self._pump_thread
+            fused = self.stats["fused_dispatches"]
             return {
                 "ready": not self._closed,
                 "closed": self._closed,
@@ -1211,6 +1544,15 @@ class QueryFrontend:
                 "inflight_depth": len(self._window),
                 "pump": {"running": pump is not None and pump.is_alive(),
                          "restarts": self.stats["pump_restarts"]},
+                "packing": {
+                    "enabled": self.pack,
+                    "pack_max": self.pack_max,
+                    "fused_dispatches": fused,
+                    "fused_segments": self.stats["fused_segments"],
+                    "mean_group":
+                        self.stats["fused_segments"] / fused if fused
+                        else 0.0,
+                },
                 "tenants": lanes,
             }
 

@@ -23,6 +23,13 @@ Shapes and dtypes (one runtime, any number of tenants):
         ctx_ids (Bq, m_C_slots) int32, ctx_w matching float
     topk(params, cache, ctx_ids, ctx_w, K=K)    -> ((Bq, K) cfg.dtype,
                                                     (Bq, K) int32)  K static
+    multi_topk(params_parts, cache_parts, ctx_ids, ctx_w, K=K)
+        S-tuples + (S, Bq, ...) stacked contexts -> ((S, Bq, K) x 2)
+        — the fused multi-tenant dispatch: S tenants' micro-batches in
+        ONE device program, per-segment results bit-exact vs S separate
+        ``topk`` calls.  Keyed on the segment-count bucket S (a tuple
+        length is part of the jit pytree structure), so the frontend's
+        packing adds zero retraces beyond its warmed S buckets.
     build(params, slab_ids, slab_w, valid)      -> ItemCorpusCache
     write_rows(params, cache, slots, ids, w)    -> ItemCorpusCache (host API)
     drop_rows(cache, slots)                     -> ItemCorpusCache (host API)
@@ -74,12 +81,15 @@ class ScorerRuntime:
     use_pallas_kernel : bool
         Score through ``kernels.ops.dplr_corpus_score`` (one HBM pass,
         fused running top-K) instead of the fused-jnp form.
-    block_n : int
-        Pallas kernel corpus-block size.
+    block_n : int | None
+        Pallas kernel corpus-block size.  ``None`` (default) resolves
+        through the autotuner registry (``kernels.blocks.corpus_tile``)
+        per shape cell, falling back to ``blocks.CORPUS_TILE_N`` when
+        nothing is tuned — numerically identical to the fixed default.
     """
 
     def __init__(self, cfg, *, mesh=None, use_pallas_kernel: bool = False,
-                 block_n: int = 2048):
+                 block_n: int | None = None):
         if cfg.interaction != "dplr":
             raise ValueError("ScorerRuntime requires interaction='dplr'")
         self.cfg = cfg
@@ -109,6 +119,10 @@ class ScorerRuntime:
             self.topk = jax.jit(self._topk_impl, static_argnames=("K",))
             self.kernel_score = jax.jit(self._kernel_score_impl,
                                         static_argnames=("K",))
+            self.multi_topk = jax.jit(self._multi_topk_impl,
+                                      static_argnames=("K",))
+            self.kernel_multi_topk = jax.jit(self._kernel_multi_topk_impl,
+                                             static_argnames=("K",))
             self._write = jax.jit(self._write_impl)
             self._drop = jax.jit(self._drop_impl)
         else:
@@ -178,6 +192,48 @@ class ScorerRuntime:
         scores = self._score_impl(params, cache, ctx_ids, ctx_w)
         return jax.lax.top_k(scores, K)
 
+    def _multi_topk_impl(self, params_parts, cache_parts, ctx_ids, ctx_w,
+                         *, K):
+        """Fused multi-tenant scorer (jnp form): the segment loop runs at
+        TRACE time, so the S segments' context caches, slab scores, and
+        top-Ks fuse into one device program — one dispatch where the
+        per-tenant path pays S.  Per-segment math is ``_topk_impl``
+        verbatim, so results are bit-exact vs S separate calls."""
+        self.trace_count += 1     # python side effect: runs at trace time only
+        vals, idx = [], []
+        for s in range(len(params_parts)):
+            P_C, s_C, lin_C = self._context_impl(params_parts[s],
+                                                 ctx_ids[s], ctx_w[s])
+            c = cache_parts[s]
+            scores = masked_slab_scores(params_parts[s], c.Q_I, c.t_I,
+                                        c.lin_I, c.valid, P_C, s_C, lin_C)
+            v, i = jax.lax.top_k(scores, K)
+            vals.append(v)
+            idx.append(i)
+        return jnp.stack(vals), jnp.stack(idx)
+
+    def _kernel_multi_topk_impl(self, params_parts, cache_parts, ctx_ids,
+                                ctx_w, *, K):
+        """Pallas fused multi-tenant scorer: ONE tenant-segmented kernel
+        launch (``kernels.dplr_corpus_score_multi``) covers every
+        segment's slab — the per-segment running top-K never mixes
+        tenants' slots."""
+        self.trace_count += 1     # python side effect: runs at trace time only
+        from repro.kernels import ops as kops
+        pcs, acs, es = [], [], []
+        for s, params in enumerate(params_parts):
+            P_C, s_C, lin_C = self._context_impl(params, ctx_ids[s],
+                                                 ctx_w[s])
+            pcs.append(P_C)
+            acs.append(params["bias"] + lin_C + 0.5 * s_C)
+            es.append(params["e"])
+        return kops.dplr_corpus_score_multi(
+            tuple(c.Q_I for c in cache_parts),
+            tuple(c.a_I for c in cache_parts),
+            tuple(c.valid for c in cache_parts),
+            jnp.stack(es), jnp.stack(pcs), jnp.stack(acs),
+            topk=K, block_n=self.block_n)
+
     def _kernel_score_impl(self, params, cache, ctx_ids, ctx_w, *, K=None):
         """Pallas-backed scorer entry point — jitted at THIS level so
         ``trace_count`` tracks kernel-path retraces exactly like the jnp
@@ -208,10 +264,15 @@ class ScorerRuntime:
         self._drop = jax.jit(sharded.make_drop(mesh))
         score = sharded.make_score(self.cfg, mesh, self._context_impl)
         topk = sharded.make_topk(self.cfg, mesh, self._context_impl)
+        mtopk = sharded.make_multi_topk(self.cfg, mesh, self._context_impl)
         kscore = sharded.make_score(self.cfg, mesh, self._context_impl,
                                     use_kernel=True, block_n=self.block_n)
         ktopk = sharded.make_topk(self.cfg, mesh, self._context_impl,
                                   use_kernel=True, block_n=self.block_n)
+        kmtopk = sharded.make_multi_topk(self.cfg, mesh,
+                                         self._context_impl,
+                                         use_kernel=True,
+                                         block_n=self.block_n)
 
         def _score_impl(params, cache, ctx_ids, ctx_w):
             self.trace_count += 1    # python side effect: trace time only
@@ -227,9 +288,21 @@ class ScorerRuntime:
                 return kscore(params, cache, ctx_ids, ctx_w)
             return ktopk(params, cache, ctx_ids, ctx_w, K=K)
 
+        def _multi_impl(params_parts, cache_parts, ctx_ids, ctx_w, *, K):
+            self.trace_count += 1    # python side effect: trace time only
+            return mtopk(params_parts, cache_parts, ctx_ids, ctx_w, K=K)
+
+        def _kernel_multi_impl(params_parts, cache_parts, ctx_ids, ctx_w,
+                               *, K):
+            self.trace_count += 1    # python side effect: trace time only
+            return kmtopk(params_parts, cache_parts, ctx_ids, ctx_w, K=K)
+
         self.score = jax.jit(_score_impl)
         self.topk = jax.jit(_topk_impl, static_argnames=("K",))
         self.kernel_score = jax.jit(_kernel_impl, static_argnames=("K",))
+        self.multi_topk = jax.jit(_multi_impl, static_argnames=("K",))
+        self.kernel_multi_topk = jax.jit(_kernel_multi_impl,
+                                         static_argnames=("K",))
 
     # -- host-side churn helpers (bucketing + shard grouping) ---------------
 

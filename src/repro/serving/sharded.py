@@ -44,22 +44,28 @@ and row-independent (so grouped writes stay bit-exact vs the unsharded
 engine — tested), and the power-of-two bucketing keeps churn at zero
 scorer retraces.
 
-Top-K merge
------------
+Top-K merge (fused)
+-------------------
 ``topk`` runs the masked top-K device-locally over the local slice — the
 jnp path via ``jax.lax.top_k``, the Pallas path via the running-top-K mode
 of ``kernels.dplr_corpus_score`` with ``index_offset=shard``/
 ``index_stride=D`` so the kernel emits mesh-global ids.  Each shard
-contributes ``k_loc = min(K, local_cap)`` candidates; the merge gathers
-the D·k_loc candidates (O(D·K) traffic — never O(n)), sorts them by
-global slot id, and takes the final top-K.  The sort makes the merge's
-tie-breaking identical to a single ``lax.top_k`` over the unsharded slab
-(lowest global index wins), so the sharded engine is BIT-exact vs the
-single-device engine, ties included.  Correctness of the candidate union:
-any slot in the true global top-K is within its own shard's top-``k_loc``
-(if ``k_loc < K`` then ``k_loc = local_cap`` and the shard contributes
-everything), and with ``K <= n_items`` live candidates always outrank the
-``NEG_INF`` dead-slot fillers a sparse shard may contribute.
+contributes ``k_loc = min(K, local_cap)`` candidates; the candidate
+``all_gather`` AND the O(D·K) merge now run INSIDE the same shard_map
+body — one launch covers shard-local top-k, the gather (O(D·K) traffic,
+never O(n)), and the replicated merge, instead of paying a second
+dispatch for the merge.  The merge sorts candidates by global slot id
+before the final ``top_k``, making its tie-breaking identical to a
+single ``lax.top_k`` over the unsharded slab (lowest global index wins),
+so the sharded engine is BIT-exact vs the single-device engine, ties
+included.  Correctness of the candidate union: any slot in the true
+global top-K is within its own shard's top-``k_loc`` (if ``k_loc < K``
+then ``k_loc = local_cap`` and the shard contributes everything), and
+with ``K <= n_items`` live candidates always outrank the ``NEG_INF``
+dead-slot fillers a sparse shard may contribute.  ``make_multi_topk``
+extends the same fused launch to S tenants' micro-batches (one
+tenant-segmented kernel + per-segment merges, see
+``kernels.dplr_corpus_score_multi``).
 
 Public entry points (all consumed by ``ScorerRuntime``; callers —
 including ``CorpusState`` and the query frontend — never touch this
@@ -79,8 +85,16 @@ non-blocking under JAX async dispatch.  Caches use the physical
         -> (Bq, capacity) scores in GLOBAL slot order, dtype = cfg.dtype
     make_topk(cfg, mesh, context_fn)(params, cache, ctx_ids, ctx_w, K=...)
         -> ((Bq, K) values, (Bq, K) int32 global slot ids), K static
+    make_multi_topk(cfg, mesh, context_fn)(params_parts, cache_parts,
+                                           ctx_ids, ctx_w, K=...)
+        S-tuples of params/caches + (S, Bq, ...) contexts
+        -> ((S, Bq, K) values, (S, Bq, K) int32 global slot ids)
     merge_topk(cand_vals, cand_idx, K)
         (D, Bq, k_loc) per-shard candidates -> the global ((Bq, K) x 2)
+
+``make_score``/``make_topk``/``make_multi_topk`` leave ``block_n=None``
+by default so the Pallas bodies resolve tile geometry through the
+autotuner registry (``kernels.blocks.corpus_tile``) at trace time.
 """
 from __future__ import annotations
 
@@ -223,7 +237,7 @@ def make_drop(mesh):
 # ---------------------------------------------------------------------------
 
 def make_score(cfg, mesh, context_fn, *, use_kernel: bool = False,
-               block_n: int = 2048):
+               block_n: int | None = None):
     """impl(params, cache, ctx_ids, ctx_w) -> (Bq, capacity) scores in
     GLOBAL slot order (identical to the single-device engine).  The
     context cache is computed once (replicated — O(rho m_C k), independent
@@ -295,10 +309,15 @@ def merge_topk(cand_vals: jax.Array, cand_idx: jax.Array, K: int):
 
 
 def make_topk(cfg, mesh, context_fn, *, use_kernel: bool = False,
-              block_n: int = 2048):
+              block_n: int | None = None):
     """impl(params, cache, ctx_ids, ctx_w, *, K) -> ((Bq, K) values,
     (Bq, K) int32 GLOBAL slot ids), bit-exact vs the single-device
-    engine's ``topk`` (see ``merge_topk``)."""
+    engine's ``topk``.
+
+    Fused shard-local-topk+merge: the candidate ``all_gather`` and the
+    replicated ``merge_topk`` run INSIDE the shard_map body, so local
+    top-k, the O(D·K) gather, and the merge are ONE launch (the merge
+    used to be a second dispatch consuming per-shard candidates)."""
     ax = corpus_slab_axis()
     D = shard_count(mesh)
     specs = corpus_cache_specs(mesh)
@@ -306,7 +325,7 @@ def make_topk(cfg, mesh, context_fn, *, use_kernel: bool = False,
     if use_kernel:
         from repro.kernels import ops as kops
 
-        def body(params, cache, P_C, a_C, *, k_loc):
+        def body(params, cache, P_C, a_C, *, k_loc, K):
             c = _squeeze_cache(cache)
             # the kernel's running top-K carries mesh-global ids directly:
             # local row i on shard s is global slot s + D*i (striping)
@@ -314,37 +333,135 @@ def make_topk(cfg, mesh, context_fn, *, use_kernel: bool = False,
                 c.Q_I, c.lin_I + 0.5 * c.t_I, params["e"], P_C, a_C,
                 valid=c.valid, topk=k_loc, block_n=block_n,
                 index_offset=jax.lax.axis_index(ax), index_stride=D)
-            return vals[None], gi[None]             # (1, Bq, k_loc)
+            cv = jax.lax.all_gather(vals, ax)       # (D, Bq, k_loc)
+            ci = jax.lax.all_gather(gi, ax)
+            return merge_topk(cv, ci, K)            # replicated on shards
 
         def impl(params, cache, ctx_ids, ctx_w, *, K):
             k_loc = min(K, cache.Q_I.shape[0])
             P_C, s_C, lin_C = context_fn(params, ctx_ids, ctx_w)
             a_C = params["bias"] + lin_C + 0.5 * s_C
             sm = shard_map_norep(
-                partial(body, k_loc=k_loc), mesh=mesh,
+                partial(body, k_loc=k_loc, K=K), mesh=mesh,
                 in_specs=(P(), specs, P(None, None, None), P(None)),
-                out_specs=(P(ax, None, None), P(ax, None, None)))
-            cv, ci = sm(params, cache, P_C, a_C)    # (D, Bq, k_loc)
-            return merge_topk(cv, ci, K)
+                out_specs=(P(None, None), P(None, None)))
+            return sm(params, cache, P_C, a_C)
 
         return impl
 
-    def body(params, cache, P_C, s_C, lin_C, *, k_loc):
+    def body(params, cache, P_C, s_C, lin_C, *, k_loc, K):
         c = _squeeze_cache(cache)
         s = masked_slab_scores(params, c.Q_I, c.t_I, c.lin_I, c.valid,
                                P_C, s_C, lin_C)
         vals, li = jax.lax.top_k(s, k_loc)
         gi = li * D + jax.lax.axis_index(ax)        # striped global ids
-        return vals[None], gi[None]                 # (1, Bq, k_loc)
+        cv = jax.lax.all_gather(vals, ax)           # (D, Bq, k_loc)
+        ci = jax.lax.all_gather(gi, ax)
+        return merge_topk(cv, ci, K)                # replicated on shards
 
     def impl(params, cache, ctx_ids, ctx_w, *, K):
         k_loc = min(K, cache.Q_I.shape[0])
         P_C, s_C, lin_C = context_fn(params, ctx_ids, ctx_w)
-        sm = shard_map(partial(body, k_loc=k_loc), mesh=mesh,
-                       in_specs=(P(), specs, P(None, None, None), P(None),
-                                 P(None)),
-                       out_specs=(P(ax, None, None), P(ax, None, None)))
-        cv, ci = sm(params, cache, P_C, s_C, lin_C)
-        return merge_topk(cv, ci, K)
+        sm = shard_map_norep(
+            partial(body, k_loc=k_loc, K=K), mesh=mesh,
+            in_specs=(P(), specs, P(None, None, None), P(None), P(None)),
+            out_specs=(P(None, None), P(None, None)))
+        return sm(params, cache, P_C, s_C, lin_C)
+
+    return impl
+
+
+def _merge_multi(cv: jax.Array, ci: jax.Array, K: int):
+    """Per-segment merge of ``(D, S, Bq, k_loc)`` gathered candidates to
+    ``(S, Bq, K)`` — ``merge_topk`` vmapped over the segment axis, so
+    each tenant's merge sees only its own shards' candidates."""
+    cv = jnp.swapaxes(cv, 0, 1)                     # (S, D, Bq, k_loc)
+    ci = jnp.swapaxes(ci, 0, 1)
+    return jax.vmap(lambda v, i: merge_topk(v, i, K))(cv, ci)
+
+
+def make_multi_topk(cfg, mesh, context_fn, *, use_kernel: bool = False,
+                    block_n: int | None = None):
+    """impl(params_parts, cache_parts, ctx_ids, ctx_w, *, K) ->
+    ((S, Bq, K) values, (S, Bq, K) int32 GLOBAL slot ids): the fused
+    multi-tenant dispatch on the mesh — S tenants' micro-batches scored
+    (one tenant-segmented kernel launch on the Pallas path), shard-local
+    top-k'd, all-gathered, and per-segment merged in ONE shard_map
+    launch.  Bit-exact per segment vs S separate ``make_topk`` calls.
+
+    ``params_parts``/``cache_parts`` are S-tuples (each tenant's params
+    snapshot + physical sharded cache); ``ctx_ids``/``ctx_w`` stack the
+    micro-batches to (S, Bq, m_C_slots).  Segments must share ONE local
+    capacity (the frontend's pack key guarantees it): a common
+    ``k_loc = min(K, local_cap)`` is then merge-sufficient for every
+    segment."""
+    ax = corpus_slab_axis()
+    D = shard_count(mesh)
+    specs = corpus_cache_specs(mesh)
+
+    if use_kernel:
+        from repro.kernels import ops as kops
+
+        def kernel_body(params_parts, cache_parts, P_Cs, a_Cs, *,
+                        k_loc, K):
+            cs = [_squeeze_cache(c) for c in cache_parts]
+            vals, gi = kops.dplr_corpus_score_multi(
+                tuple(c.Q_I for c in cs),
+                tuple(c.lin_I + 0.5 * c.t_I for c in cs),
+                tuple(c.valid for c in cs),
+                jnp.stack([p["e"] for p in params_parts]),
+                P_Cs, a_Cs, topk=k_loc, block_n=block_n,
+                index_offset=jax.lax.axis_index(ax), index_stride=D)
+            cv = jax.lax.all_gather(vals, ax)       # (D, S, Bq, k_loc)
+            ci = jax.lax.all_gather(gi, ax)
+            return _merge_multi(cv, ci, K)
+
+    def jnp_body(params_parts, cache_parts, P_Cs, s_Cs, lin_Cs, *,
+                 k_loc, K):
+        vs, gs = [], []
+        for s, cache in enumerate(cache_parts):
+            c = _squeeze_cache(cache)
+            sc = masked_slab_scores(params_parts[s], c.Q_I, c.t_I,
+                                    c.lin_I, c.valid, P_Cs[s], s_Cs[s],
+                                    lin_Cs[s])
+            v, li = jax.lax.top_k(sc, k_loc)
+            vs.append(v)
+            gs.append(li * D + jax.lax.axis_index(ax))
+        cv = jax.lax.all_gather(jnp.stack(vs), ax)  # (D, S, Bq, k_loc)
+        ci = jax.lax.all_gather(jnp.stack(gs), ax)
+        return _merge_multi(cv, ci, K)
+
+    def impl(params_parts, cache_parts, ctx_ids, ctx_w, *, K):
+        S = len(params_parts)
+        caps = {int(c.Q_I.shape[0]) for c in cache_parts}
+        if len(caps) != 1:
+            raise ValueError("fused mesh top-K needs equal local "
+                             f"capacities, got {sorted(caps)}")
+        k_loc = min(K, caps.pop())
+        pcs, scs, lcs, acs = [], [], [], []
+        for s in range(S):
+            P_C, s_C, lin_C = context_fn(params_parts[s], ctx_ids[s],
+                                         ctx_w[s])
+            pcs.append(P_C)
+            scs.append(s_C)
+            lcs.append(lin_C)
+            acs.append(params_parts[s]["bias"] + lin_C + 0.5 * s_C)
+        P_Cs = jnp.stack(pcs)                       # (S, Bq, rho, k)
+        cache_specs = tuple(specs for _ in range(S))
+        if use_kernel:
+            sm = shard_map_norep(
+                partial(kernel_body, k_loc=k_loc, K=K), mesh=mesh,
+                in_specs=(P(), cache_specs, P(None, None, None, None),
+                          P(None, None)),
+                out_specs=(P(None, None, None), P(None, None, None)))
+            return sm(tuple(params_parts), tuple(cache_parts), P_Cs,
+                      jnp.stack(acs))
+        sm = shard_map_norep(
+            partial(jnp_body, k_loc=k_loc, K=K), mesh=mesh,
+            in_specs=(P(), cache_specs, P(None, None, None, None),
+                      P(None, None), P(None, None)),
+            out_specs=(P(None, None, None), P(None, None, None)))
+        return sm(tuple(params_parts), tuple(cache_parts), P_Cs,
+                  jnp.stack(scs), jnp.stack(lcs))
 
     return impl

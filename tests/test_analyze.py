@@ -29,7 +29,8 @@ def test_repo_tree_is_clean_at_fail_on_warn():
 def test_selftest_every_pack_fires():
     r = _run("--selftest")
     assert r.returncode == 0, r.stdout + r.stderr
-    assert "6/6 packs ok" in r.stdout
+    assert "7/7 packs ok" in r.stdout
+    assert "KRN-TUNE" in r.stdout
 
 
 def test_json_format_shape():

@@ -1,0 +1,200 @@
+"""Autotuner contract: parity-gated sweeps, registry resolution, the
+in-process memo, clamp visibility, and the on-disk cache round-trip.
+
+Every test clears BOTH the sweep memo (``autotune._RESULTS``) and the
+tuned-tile registry (``blocks._TUNED_TILES``) around itself — a tuned
+tile is process-global state that must never leak between tests (other
+suites call ``ops.dplr_corpus_score`` with ``block_n=None`` and rely on
+the untuned default).
+"""
+from __future__ import annotations
+
+import numpy as np
+import pytest
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels import autotune, blocks, ops
+
+# small-but-ragged cell: fast to sweep, exercises a non-pow2 last tile
+CELL = dict(n=200, rho=2, k=4, Bq=2, K=4)
+CANDS = (64, 128)
+
+
+@pytest.fixture(autouse=True)
+def _clean_registries():
+    autotune.clear_results()
+    blocks.clear_tuned_tiles()
+    blocks.drain_clamp_events()
+    yield
+    autotune.clear_results()
+    blocks.clear_tuned_tiles()
+    blocks.drain_clamp_events()
+
+
+def _tune(**kw):
+    args = dict(CELL)
+    args.update(candidates=CANDS, repeats=1)
+    args.update(kw)
+    return autotune.tune_corpus_score(
+        args.pop("n"), args.pop("rho"), args.pop("k"),
+        args.pop("Bq"), args.pop("K"), **args)
+
+
+def test_tune_registers_winner_and_ops_resolves():
+    tuned = _tune()
+    backend = jax.default_backend()
+    # the default tile always competes, even when not a candidate
+    swept_bns = {r.block_n for r in tuned.swept}
+    assert set(CANDS) <= swept_bns and blocks.CORPUS_TILE_N in swept_bns
+    assert all(r.parity_ok for r in tuned.swept)
+    assert tuned.block_n in swept_bns and tuned.us <= tuned.default_us
+
+    # registry: block_n=None resolution returns the registered winner
+    got = blocks.corpus_tile(CELL["n"], CELL["rho"], CELL["k"],
+                             CELL["Bq"], CELL["K"], "float32", backend)
+    assert got == (tuned.block_n, tuned.acc_dtype)
+
+    # and a block_n=None call is bit-identical to the explicit winner
+    Q, a, e, P, aC, valid = autotune._mk_inputs(
+        CELL["n"], CELL["rho"], CELL["k"], CELL["Bq"], "float32", seed=3)
+    v0, i0 = ops.dplr_corpus_score(Q, a, e, P, aC, valid=valid,
+                                   topk=CELL["K"])
+    v1, i1 = ops.dplr_corpus_score(Q, a, e, P, aC, valid=valid,
+                                   topk=CELL["K"], block_n=tuned.block_n,
+                                   acc_dtype=tuned.acc_dtype)
+    np.testing.assert_array_equal(np.asarray(v0), np.asarray(v1))
+    np.testing.assert_array_equal(np.asarray(i0), np.asarray(i1))
+
+
+def test_family_fallback_and_exact_precedence():
+    tuned = _tune()
+    backend = jax.default_backend()
+    # a DIFFERENT (Bq, K) of the same (n, rho, k, dtype, backend) family
+    # inherits the newest family winner instead of the blind default
+    fam = blocks.corpus_tile(CELL["n"], CELL["rho"], CELL["k"],
+                             8, 16, "float32", backend)
+    assert fam == (tuned.block_n, tuned.acc_dtype)
+    # but an unrelated shape family stays on the untuned default
+    other = blocks.corpus_tile(CELL["n"] + 1, CELL["rho"], CELL["k"],
+                               CELL["Bq"], CELL["K"], "float32", backend)
+    assert other == (blocks.CORPUS_TILE_N, "float32")
+
+
+def test_untuned_resolution_is_the_default():
+    got = blocks.corpus_tile(4096, 3, 8, 4, 10, "float32",
+                             jax.default_backend())
+    assert got == (blocks.CORPUS_TILE_N, "float32")
+
+
+def test_memo_returns_same_object_without_resweep(monkeypatch):
+    tuned = _tune()
+    # a second tune of the same cell must NOT re-run any kernel
+    def boom(*a, **k):  # pragma: no cover - would fail the test
+        raise AssertionError("memoised cell re-swept")
+    monkeypatch.setattr(ops, "dplr_corpus_score", boom)
+    again = _tune()
+    assert again is tuned
+    # the memo hit still re-registers (fresh registry, warm memo)
+    blocks.clear_tuned_tiles()
+    _tune()
+    got = blocks.corpus_tile(CELL["n"], CELL["rho"], CELL["k"],
+                             CELL["Bq"], CELL["K"], "float32",
+                             jax.default_backend())
+    assert got == (tuned.block_n, tuned.acc_dtype)
+
+
+def test_check_parity_gates():
+    ref_scores = np.array([[5.0, 4.0, 3.0, 2.0, 1.0]])
+    ref_vals = np.array([[5.0, 4.0]])
+    ref_idx = np.array([[0, 1]])
+    ok = dict(ref_scores=ref_scores, ref_vals=ref_vals, ref_idx=ref_idx,
+              bf16_tol=5e-2)
+    # f32: exact indices, epsilon values
+    assert autotune._check_parity(ref_vals, ref_idx,
+                                  acc_dtype="float32", **ok) is None
+    assert "indices" in autotune._check_parity(
+        ref_vals, np.array([[0, 2]]), acc_dtype="float32", **ok)
+    assert "values" in autotune._check_parity(
+        ref_vals + 1.0, ref_idx, acc_dtype="float32", **ok)
+    # bf16: judged by the selected items' ref scores — a rank swap among
+    # near-tied items within tolerance passes; selecting a genuinely
+    # worse item fails
+    tie = dict(ok, ref_scores=np.array([[5.0, 4.99, 3.0, 2.0, 1.0]]),
+               ref_vals=np.array([[5.0, 4.99]]))
+    swap = autotune._check_parity(np.array([[4.98, 5.01]]),
+                                  np.array([[1, 0]]),
+                                  acc_dtype="bfloat16", **tie)
+    assert swap is None
+    bad = autotune._check_parity(np.array([[5.0, 3.0]]),
+                                 np.array([[0, 2]]),
+                                 acc_dtype="bfloat16", **tie)
+    assert "tolerance" in bad
+
+
+def test_no_passing_candidate_raises(monkeypatch):
+    def broken(Q, a, e, P, aC, *, valid=None, topk=None, **kw):
+        return (jnp.zeros((P.shape[0], topk), jnp.float32),
+                jnp.zeros((P.shape[0], topk), jnp.int32))
+    monkeypatch.setattr(ops, "dplr_corpus_score", broken)
+    with pytest.raises(RuntimeError, match="no candidate passed"):
+        _tune()
+    # nothing was registered from the failed sweep
+    assert blocks.corpus_tile(CELL["n"], CELL["rho"], CELL["k"],
+                              CELL["Bq"], CELL["K"], "float32",
+                              jax.default_backend()) \
+        == (blocks.CORPUS_TILE_N, "float32")
+
+
+def test_oversized_candidate_clamps_visibly():
+    # clamp events record at TRACE time (clamp_tile runs inside the
+    # jitted kernel), so this cell's n must be one no other test traces
+    # in this process — a cached trace records nothing new
+    n = 130
+    tuned = autotune.tune_corpus_score(n, CELL["rho"], CELL["k"],
+                                       CELL["Bq"], CELL["K"],
+                                       candidates=(512,), repeats=1,
+                                       register=False)
+    over = [r for r in tuned.swept if r.block_n > n]
+    assert over, "sweep lost the oversized candidates"
+    for r in over:
+        assert r.effective_block_n == n
+        assert r.parity_ok
+        assert any(ev["requested"] == r.block_n
+                   and ev["effective"] == n for ev in r.clamps)
+    # register=False: the registry stays untouched
+    assert blocks.corpus_tile(n, CELL["rho"], CELL["k"],
+                              CELL["Bq"], CELL["K"], "float32",
+                              jax.default_backend()) \
+        == (blocks.CORPUS_TILE_N, "float32")
+
+
+def test_bf16_slab_sweeps_both_accumulators():
+    tuned = _tune(dtype="bfloat16", register=False)
+    accs = {r.acc_dtype for r in tuned.swept}
+    assert accs == {"float32", "bfloat16"}
+    # the winner passed its gate whichever accumulator it used
+    assert any(r.parity_ok and r.block_n == tuned.block_n
+               and r.acc_dtype == tuned.acc_dtype for r in tuned.swept)
+
+
+def test_cache_roundtrip(tmp_path):
+    path = tmp_path / "tiles.json"
+    # cold cache is not an error
+    assert autotune.load_cache(path) == 0
+    tuned = _tune()
+    assert autotune.save_cache(path) == 1
+
+    autotune.clear_results()
+    blocks.clear_tuned_tiles()
+    assert autotune.load_cache(path, register=False) == 1
+    assert blocks.corpus_tile(CELL["n"], CELL["rho"], CELL["k"],
+                              CELL["Bq"], CELL["K"], "float32",
+                              jax.default_backend()) \
+        == (blocks.CORPUS_TILE_N, "float32")
+    assert autotune.load_cache(path) == 1
+    got = blocks.corpus_tile(CELL["n"], CELL["rho"], CELL["k"],
+                             CELL["Bq"], CELL["K"], "float32",
+                             jax.default_backend())
+    assert got == (tuned.block_n, tuned.acc_dtype)

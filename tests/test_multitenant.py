@@ -479,3 +479,137 @@ def test_multitenant_on_sharded_runtime_parity_and_trace_flat():
         wv, wi = states[t].topk(np.asarray(_ctx(data, s)).reshape(1, -1), k)
         np.testing.assert_array_equal(sc, np.asarray(wv)[0])
         np.testing.assert_array_equal(sl, np.asarray(wi)[0])
+
+
+# ---------------------------------------------------------------------------
+# Fused multi-tenant dispatch (pack=True): one launch, many tenants
+# ---------------------------------------------------------------------------
+
+def _packed_pair(cfg, params, data, names, *, mesh=None, kernel=False,
+                 pack_max=8):
+    """A pack=True frontend and its pack=False twin over IDENTICAL
+    corpora (same seeds, same params) on separate runtimes."""
+    fes = []
+    for pack in (True, False):
+        rt = ScorerRuntime(cfg, mesh=mesh, use_pallas_kernel=kernel)
+        rt2, states = _tenants(cfg, params, data, names, runtime=rt)
+        fes.append(QueryFrontend(states, max_batch=4, max_k=8,
+                                 max_wait=1e9, auto_pump=False,
+                                 pack=pack, pack_max=pack_max))
+    return fes[0], fes[1]
+
+
+@pytest.mark.parametrize("kernel", [False, True])
+def test_packed_dispatch_bitexact_vs_unpacked_twin(kernel):
+    cfg, params, data = _base()
+    names = ["a", "b", "c", "d"]
+    fe_p, fe_u = _packed_pair(cfg, params, data, names, kernel=kernel)
+    rng = np.random.default_rng(2)
+    pend = []
+    for wave in range(3):
+        for t in names:
+            for j in range(4):              # one full bucket per tenant
+                s = wave * 16 + j
+                k = int(rng.integers(1, 9))
+                pend.append((fe_p.submit(_ctx(data, s), k=k, tenant=t),
+                             fe_u.submit(_ctx(data, s), k=k, tenant=t)))
+        fe_p.pump()
+        fe_u.pump()
+    fe_p.drain()
+    fe_u.drain()
+    for pp, pu in pend:
+        pv, pi = pp.result()
+        uv, ui = pu.result()
+        np.testing.assert_array_equal(pv, uv)
+        np.testing.assert_array_equal(pi, ui)
+    assert fe_p.stats["fused_dispatches"] >= 3
+    assert fe_p.stats["fused_segments"] >= 12
+    assert fe_u.stats["fused_dispatches"] == 0
+    h = fe_p.health()["packing"]
+    assert h["enabled"] and h["pack_max"] == 8
+    assert h["fused_dispatches"] == fe_p.stats["fused_dispatches"]
+    assert h["mean_group"] > 1.0
+
+
+def test_packed_odd_group_pads_and_stays_exact():
+    """3 live tenants pad to a 4-segment launch (phantom repeat of the
+    last segment) — replies stay bit-exact vs direct topk."""
+    cfg, params, data = _base()
+    rt, states = _tenants(cfg, params, data, ["a", "b", "c"])
+    fe = QueryFrontend(states, max_batch=4, max_k=8, max_wait=1e9,
+                       auto_pump=False, pack=True, pack_max=8)
+    pend = []
+    for t in ("a", "b", "c"):
+        for j in range(4):
+            pend.append((fe.submit(_ctx(data, j), k=5, tenant=t), t, j))
+    fe.pump()
+    fe.drain()
+    assert fe.stats["fused_dispatches"] == 1
+    assert fe.stats["fused_segments"] == 3
+    for p, t, j in pend:
+        sc, sl = p.result()
+        wv, wi = states[t].topk(np.asarray(_ctx(data, j)).reshape(1, -1), 5)
+        np.testing.assert_array_equal(sc, np.asarray(wv)[0])
+        np.testing.assert_array_equal(sl, np.asarray(wi)[0])
+
+
+def test_packed_single_tenant_traffic_uses_classic_path():
+    cfg, params, data = _base()
+    rt, states = _tenants(cfg, params, data, ["a", "b"])
+    fe = QueryFrontend(states, max_batch=4, max_k=8, max_wait=1e9,
+                       auto_pump=False, pack=True)
+    pend = [fe.submit(_ctx(data, j), k=4, tenant="a") for j in range(4)]
+    fe.pump()
+    fe.drain()
+    assert fe.stats["fused_dispatches"] == 0    # nothing to pack with
+    for j, p in enumerate(pend):
+        sc, sl = p.result()
+        wv, wi = states["a"].topk(np.asarray(_ctx(data, j)).reshape(1, -1), 4)
+        np.testing.assert_array_equal(sl, np.asarray(wi)[0])
+
+
+def test_pack_max_validation():
+    cfg, params, data = _base()
+    rt, states = _tenants(cfg, params, data, ["a"])
+    for bad in (0, 1, 3, 6):
+        with pytest.raises(ValueError, match="pack_max"):
+            QueryFrontend(states, max_batch=4, max_k=4, max_wait=1e9,
+                          pack=True, pack_max=bad)
+
+
+def test_packed_zero_retraces_after_warmup_packed():
+    """warmup_packed pre-traces the fused (S, Bq, K) grid; packed mixed
+    traffic then runs with ZERO retraces — on the jnp path and, run under
+    the 4-device CI step, on a genuinely sharded mesh."""
+    cfg, params, data = _base()
+    mesh = make_host_mesh(model=jax.device_count())
+    rt = ScorerRuntime(cfg, mesh=mesh)
+    names = ["a", "b", "c", "d"]
+    rt2, states = _tenants(cfg, params, data, names, runtime=rt)
+    fe = QueryFrontend(states, max_batch=4, max_k=8, max_wait=1e9,
+                       auto_pump=False, pack=True, pack_max=4)
+    fe.warmup(_ctx(data, 0), tenant="a")
+    fe.warmup_packed(_ctx(data, 0), tenant="a")
+    traced = rt.trace_count
+    rng = np.random.default_rng(7)
+    pend = []
+    for wave in range(3):
+        live = names if wave != 1 else names[:3]    # odd group too
+        for t in live:
+            for j in range(4):
+                s = int(rng.integers(0, 30))
+                pend.append((fe.submit(_ctx(data, s), k=int(
+                    rng.integers(1, 9)), tenant=t), t, s))
+        fe.pump()
+    fe.drain()
+    results = [p.result() for p, _, _ in pend]     # resolve EVERYTHING
+    assert fe.stats["fused_dispatches"] >= 3
+    assert rt.trace_count == traced, \
+        f"packed traffic retraced: {rt.trace_count} != {traced}"
+    # (verification below may trace: direct .topk with non-pow2 k is a
+    # fresh signature — that is the oracle's cost, not the frontend's)
+    for (p, t, s), (sc, sl) in zip(pend, results):
+        wv, wi = states[t].topk(np.asarray(_ctx(data, s)).reshape(1, -1),
+                                p.k)
+        np.testing.assert_array_equal(sc, np.asarray(wv)[0])
+        np.testing.assert_array_equal(sl, np.asarray(wi)[0])

@@ -1,0 +1,46 @@
+# expect: KRN-TUNE
+"""Fixture: autotune sweeps violating the tile-registration contract.
+
+Never imported or executed — parsed by tools/analyze selftest only.
+"""
+import time
+
+from repro.kernels import blocks, ops
+from repro.kernels.ref import dplr_corpus_topk_ref
+
+
+def tune_without_gate(Q, a, e, P, aC, cell, candidates):
+    # KRN-TUNE: times candidates and crowns the fastest, but never
+    # consults a *_ref oracle — a fast-but-wrong tile reaches the
+    # registry unchecked
+    best_us, best_bn = float("inf"), None
+    for bn in candidates:
+        t0 = time.perf_counter()
+        vals, idx = ops.dplr_corpus_score(Q, a, e, P, aC, topk=8,
+                                          block_n=bn)
+        vals.block_until_ready()
+        us = (time.perf_counter() - t0) * 1e6
+        if us < best_us:
+            best_us, best_bn = us, bn
+    blocks.register_tuned_tile(cell, best_bn, "float32")
+    return best_bn
+
+
+def tune_with_gate(Q, a, e, P, aC, cell, candidates):
+    # compliant twin: the oracle call gates the sweep -> no finding
+    rv, ri = dplr_corpus_topk_ref(Q, a, e, P, aC, 8)
+    winner = None
+    for bn in candidates:
+        vals, idx = ops.dplr_corpus_score(Q, a, e, P, aC, topk=8,
+                                          block_n=bn)
+        if (idx == ri).all():
+            winner = bn
+    blocks.register_tuned_tile(cell, winner, "float32")
+    return winner
+
+
+def rehydrate_cache(payload):
+    # registers WITHOUT running a kernel (the load_cache shape) -> the
+    # pairing rule leaves it alone
+    for cell, rec in payload.items():
+        blocks.register_tuned_tile(cell, rec["block_n"], rec["acc_dtype"])

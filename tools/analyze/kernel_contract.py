@@ -21,6 +21,17 @@ entry point:
 The helper module itself (``blocks.py``) and the oracle module
 (``ref.py``) are exempt from KRN-BLOCKSPEC by name.
 
+The autotuner extends the contract to tile registration: in a tune
+module (``autotune.py``), a public function that both RUNS a corpus
+scorer kernel and REGISTERS a tuned tile (``register_tuned_tile``) must
+also consult a ``*_ref`` oracle in the same body:
+
+    KRN-TUNE       a sweep that can crown a winner must parity-gate its
+                   candidates — a fast-but-wrong tile must never reach
+                   the registry.  (``load_cache`` re-registers without
+                   running a kernel, so the pairing rule leaves it
+                   alone.)
+
 The eval-metrics subsystem extends the same contract to its jitted
 surface: in a metrics module (``eval/metrics.py``), a "metric entry
 point" is a public module-level function decorated with ``jax.jit``
@@ -40,6 +51,7 @@ from core import Finding, SourceFile, call_name, dotted_name
 
 HELPER_MODULES = ("blocks.py",)
 METRIC_MODULES = ("metrics.py", "metrics_bad.py")
+TUNE_MODULES = ("autotune.py", "autotune_bad.py")
 TILE_PARAM_PREFIXES = ("block_", "tile_")
 
 
@@ -82,10 +94,37 @@ def _metric_entry_points(sf: SourceFile):
             yield node
 
 
+def _tune_offenders(sf: SourceFile):
+    """Public functions that run a corpus-scorer kernel AND register a
+    tuned tile without consulting any ``*_ref`` oracle."""
+    for node in sf.tree.body:
+        if not isinstance(node, (ast.FunctionDef, ast.AsyncFunctionDef)):
+            continue
+        if node.name.startswith("_"):
+            continue
+        tails = [call_name(sub).split(".")[-1]
+                 for sub in ast.walk(node) if isinstance(sub, ast.Call)]
+        runs_kernel = any("corpus_score" in t and not t.endswith("_ref")
+                          for t in tails)
+        registers = any(t == "register_tuned_tile" for t in tails)
+        gated = any(t.endswith("_ref") for t in tails)
+        if runs_kernel and registers and not gated:
+            yield node
+
+
 def run(files: list[SourceFile], env) -> list[Finding]:
     findings: list[Finding] = []
     for sf in files:
         is_helper = sf.path.name in HELPER_MODULES
+
+        if sf.path.name in TUNE_MODULES:
+            for entry in _tune_offenders(sf):
+                findings.append(Finding(
+                    "KRN-TUNE", "error", sf.rel, entry.lineno,
+                    f"{entry.name}() runs a corpus-scorer kernel and "
+                    f"registers a tuned tile but never consults a *_ref "
+                    f"oracle — parity-gate every candidate before it can "
+                    f"reach the registry"))
 
         if sf.path.name in METRIC_MODULES:
             for entry in _metric_entry_points(sf):

@@ -58,6 +58,7 @@ FIXTURES = {
     "lock_bad.py": "lock_discipline",
     "kernel_bad.py": "kernel_contract",
     "metrics_bad.py": "kernel_contract",
+    "autotune_bad.py": "kernel_contract",
     "error_bad.py": "error_taxonomy",
     "rpc_bad.py": "error_taxonomy",
 }
